@@ -1,0 +1,43 @@
+"""Fig 11 reproduction: cycle count per inference across v0..v4 variants.
+
+rv32_* columns use the paper's issue-slot accounting + its 100 MHz clock
+(the FAITHFUL reproduction — target band: ~2x v0->v4); tpu_* columns use the
+v5e roofline adaptation.  Validation: v0->v4 speedup within [1.7, 2.4]
+(paper: "up to 2x").
+"""
+from __future__ import annotations
+
+from repro.core import costmodel
+from repro.models.cnn import CNN_MODELS
+
+from benchmarks.common import cnn_profile, emit
+
+SPEEDUP_BAND = (1.7, 2.4)
+
+
+def run() -> None:
+    ok = True
+    for name in CNN_MODELS:
+        prof = cnn_profile(name)
+        base = prof.as_costmodel_inputs()
+        rv32 = {
+            lvl: costmodel.rv32_cycles(base, lvl) for lvl in costmodel.LEVELS
+        }
+        tpu = {}
+        for lvl in costmodel.LEVELS:
+            adj = costmodel.apply_level(base, lvl)
+            terms = costmodel.roofline(
+                adj["flops"], adj["hbm_bytes"], 0.0, 1,
+                int8_fraction=adj["int8_fraction"],
+            )
+            tpu[lvl] = costmodel.cycles(terms, adj["loop_iters"])
+        speedup = rv32["v0"] / rv32["v4"]
+        in_band = SPEEDUP_BAND[0] <= speedup <= SPEEDUP_BAND[1]
+        ok &= in_band
+        derived = (
+            ";".join(f"rv32_{l}={rv32[l]:.3e}" for l in costmodel.LEVELS)
+            + ";" + ";".join(f"tpu_{l}={tpu[l]:.3e}" for l in costmodel.LEVELS)
+            + f";rv32_speedup_v4={speedup:.2f};paper_band={in_band}"
+        )
+        emit(f"fig11_cycles/{name}", 0.0, derived)
+    emit("fig11_cycles/ALL_IN_PAPER_BAND", 0.0, str(ok))

@@ -1,0 +1,26 @@
+"""Fig 12 reproduction: energy per inference, E = P*C/f (paper eq. 1).
+
+rv32 energy uses the paper's own per-version FPGA power (Table 8) and
+100 MHz clock; the paper reports up to ~2x reduction v0->v4.
+"""
+from __future__ import annotations
+
+from repro.core import costmodel
+from repro.models.cnn import CNN_MODELS
+
+from benchmarks.common import cnn_profile, emit
+
+
+def run() -> None:
+    for name in CNN_MODELS:
+        prof = cnn_profile(name)
+        base = prof.as_costmodel_inputs()
+        vals = {}
+        for lvl in costmodel.LEVELS:
+            cyc = costmodel.rv32_cycles(base, lvl)
+            vals[lvl] = costmodel.rv32_energy_j(cyc, lvl)
+        red = vals["v0"] / vals["v4"]
+        derived = ";".join(
+            f"{l}={vals[l]:.4e}J" for l in costmodel.LEVELS
+        ) + f";reduction_v4={red:.2f}x"
+        emit(f"fig12_energy/{name}", 0.0, derived)

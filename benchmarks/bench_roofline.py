@@ -1,0 +1,71 @@
+"""Roofline table from dry-run results (results/dryrun_*.json).
+
+Terms (assignment formulas, v5e constants):
+  compute    = HLO_FLOPs_global / (chips x 197e12)
+  memory     = HBM_bytes_per_dev / 819e9         (per-device, loop-aware)
+  collective = coll_bytes_per_dev / 50e9          (per-device, loop-aware)
+Plus MODEL_FLOPS = 6·N_active·D (2·N·D inference) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.costmodel import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+from benchmarks.common import emit
+
+RESULTS = [
+    "results/dryrun_all.json",
+    "results/dryrun_single_pod.json",
+    "results/dryrun_multi_pod.json",
+]
+
+
+def roofline_row(r: dict) -> dict:
+    chips = r["chips"]
+    compute_s = r["jaxpr_flops_global"] / (chips * PEAK_FLOPS_BF16)
+    memory_s = r["hbm_bytes_per_dev"] / HBM_BW
+    coll_s = r["collective_total_per_dev"] / ICI_BW_PER_LINK
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    useful = r["model_flops"] / max(r["jaxpr_flops_global"], 1.0)
+    frac = compute_s / max(compute_s, memory_s, coll_s)
+    return dict(
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, useful_ratio=useful, roofline_fraction=frac,
+    )
+
+
+def run() -> None:
+    found = False
+    for path in RESULTS:
+        if not os.path.exists(path):
+            continue
+        found = True
+        rows = json.load(open(path))
+        for r in rows:
+            if r.get("status") != "ok":
+                if r.get("status") == "skipped":
+                    emit(
+                        f"roofline/{r['arch']}/{r['shape']}"
+                        f"/{'mp' if r['multi_pod'] else 'sp'}",
+                        0.0, f"skipped:{r['reason'][:60]}",
+                    )
+                continue
+            t = roofline_row(r)
+            emit(
+                f"roofline/{r['arch']}/{r['shape']}"
+                f"/{'mp' if r['multi_pod'] else 'sp'}",
+                0.0,
+                f"compute={t['compute_s']:.3e}s;memory={t['memory_s']:.3e}s;"
+                f"collective={t['collective_s']:.3e}s;dominant={t['dominant']};"
+                f"useful={t['useful_ratio']:.3f};"
+                f"roofline_frac={t['roofline_fraction']:.3f};"
+                f"fits={r['fits_16gb']}",
+            )
+    if not found:
+        emit("roofline/NO_RESULTS", 0.0,
+             "run: python -m repro.launch.dryrun --all --both-meshes "
+             "--out results/dryrun.json first")

@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing: timing + CSV emission + cached CNN profiles."""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import profiler
+from repro.models.cnn import CNN_MODELS, get_cnn
+
+CSV_ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    CSV_ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def time_fn(fn, *args, reps: int = 3) -> float:
+    """Median wall-time in microseconds (jit-compiled, post-warmup)."""
+    jfn = jax.jit(fn)
+    out = jfn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+@lru_cache(maxsize=None)
+def cnn_setup(name: str):
+    init, apply, in_shape = get_cnn(name)
+    params = init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, *in_shape))
+    return params, apply, x
+
+
+@lru_cache(maxsize=None)
+def cnn_profile(name: str) -> profiler.PatternProfile:
+    params, apply, x = cnn_setup(name)
+    return profiler.profile_fn(lambda x: apply(params, x), x)

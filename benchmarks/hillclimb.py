@@ -1,0 +1,134 @@
+"""§Perf hillclimbing harness: hypothesis -> change -> re-lower -> measure.
+
+Each experiment is a named RunConfig mutation on one (arch x shape) cell.
+The baseline (paper-faithful defaults from launch.shardings.default_run) is
+measured first; every variant records the three roofline terms so
+EXPERIMENTS.md §Perf can show before/after per hypothesis.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb deepseek-v2-236b train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import json
+import sys
+import time
+
+from repro.configs import get_arch
+from repro.core.costmodel import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from repro.launch.dryrun import run_cell
+from repro.launch.shardings import default_run
+
+
+def terms(r):
+    chips = r["chips"]
+    c = r["jaxpr_flops_global"] / (chips * PEAK_FLOPS_BF16)
+    m = r["hbm_bytes_per_dev"] / HBM_BW
+    x = r["collective_total_per_dev"] / ICI_BW_PER_LINK
+    dom = max([("compute", c), ("memory", m), ("collective", x)],
+              key=lambda kv: kv[1])[0]
+    return dict(compute_s=c, memory_s=m, collective_s=x, dominant=dom,
+                step_s=max(c, m, x),
+                roofline_frac=c / max(c, m, x),
+                peak_gib=r["peak_bytes_per_dev_tpu"] / 2**30)
+
+
+# hypothesis catalogue: name -> (RunConfig mutation, rationale)
+VARIANTS = {
+    "no_seq_parallel": (
+        dict(seq_parallel=False),
+        "SP saves activation memory but adds per-layer all-gathers of the "
+        "residual stream; if memory fits without it, collective term drops",
+    ),
+    "microbatches_half": (
+        "HALVE_MB",
+        "each microbatch re-gathers FSDP weights; fewer microbatches -> "
+        "fewer weight all-gathers (trade: more activation memory)",
+    ),
+    "microbatches_double": (
+        "DOUBLE_MB",
+        "smaller activation working set; more weight regathers",
+    ),
+    "attn_chunk_2x": (
+        "DOUBLE_CHUNK",
+        "larger KV chunks halve the scan trip count (zol overhead) and "
+        "improve MXU utilization per step; more VMEM per chunk",
+    ),
+    "remat_dots": (
+        dict(remat="dots"),
+        "saving dot outputs (vs recompute-all) cuts backward recompute "
+        "FLOPs ~25% at the cost of stored activations",
+    ),
+    "tp_only": (
+        dict(sharding="tp"),
+        "replicating weights over data removes per-layer FSDP all-gathers "
+        "entirely (only viable if params fit replicated)",
+    ),
+    "moe_groups_2x": (
+        "DOUBLE_GROUPS",
+        "more GShard groups -> smaller per-group sort/capacity buffers, "
+        "more parallelism in dispatch",
+    ),
+    "unroll2": (
+        dict(scan_unroll=2),
+        "unrolling the layer scan 2x lets XLA overlap collectives of layer "
+        "i with compute of layer i+1 (halves loop overhead)",
+    ),
+}
+
+
+def mutate(run, spec):
+    if spec == "HALVE_MB":
+        return run.replace(microbatches=max(1, run.microbatches // 2))
+    if spec == "DOUBLE_MB":
+        return run.replace(microbatches=run.microbatches * 2)
+    if spec == "DOUBLE_CHUNK":
+        return run.replace(attn_chunk=run.attn_chunk * 2)
+    if spec == "DOUBLE_GROUPS":
+        return run.replace(moe_groups=run.moe_groups * 2 or 32)
+    return run.replace(**spec)
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    only = sys.argv[3].split(",") if len(sys.argv) > 3 else None
+    cfg = get_arch(arch)
+    base_run = default_run(cfg, shape)
+    out = {"arch": arch, "shape": shape, "experiments": []}
+
+    def measure(tag, run):
+        t0 = time.time()
+        try:
+            r = run_cell(arch, shape, multi_pod=False, run=run)
+            t = terms(r)
+            rec = {"tag": tag, "ok": True, **t,
+                   "wall_s": round(time.time() - t0, 1)}
+        except Exception as e:  # noqa: BLE001
+            rec = {"tag": tag, "ok": False, "error": f"{type(e).__name__}: {e}"}
+        out["experiments"].append(rec)
+        print(json.dumps(rec), flush=True)
+        return rec
+
+    base = measure("baseline", None)
+    for tag, (spec, why) in VARIANTS.items():
+        if only and tag not in only:
+            continue
+        run = mutate(default_run(cfg, shape), spec)
+        rec = measure(tag, run)
+        if rec.get("ok") and base.get("ok"):
+            rec["delta_step_pct"] = round(
+                100 * (base["step_s"] - rec["step_s"]) / base["step_s"], 1
+            )
+            rec["hypothesis"] = why
+            print(f"  -> {tag}: step {base['step_s']:.3f}s -> "
+                  f"{rec['step_s']:.3f}s ({rec['delta_step_pct']:+.1f}%)",
+                  flush=True)
+    path = f"results/hillclimb_{arch}_{shape}.json"
+    os.makedirs("results", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

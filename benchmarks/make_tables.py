@@ -1,0 +1,96 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+results/dryrun JSON files (replaces text between the AUTOGEN markers)."""
+import json
+import os
+import re
+import sys
+
+from repro.core.costmodel import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                f"skipped: sub-quadratic-only shape |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                f"ERROR {r.get('error','')[:40]} |")
+    chips = r["chips"]
+    c = r["jaxpr_flops_global"] / (chips * PEAK_FLOPS_BF16)
+    m = r["hbm_bytes_per_dev"] / HBM_BW
+    x = r["collective_total_per_dev"] / ICI_BW_PER_LINK
+    dom = max([("C", c), ("M", m), ("X", x)], key=lambda kv: kv[1])[0]
+    useful = r["model_flops"] / max(r["jaxpr_flops_global"], 1.0)
+    frac = c / max(c, m, x)
+    fit = "✓" if r["fits_16gb"] else "✗"
+    return (
+        f"| {r['arch']} | {r['shape']} | {c:.2f} | {m:.2f} | {x:.2f} "
+        f"| **{dom}** | {useful:.2f} | {frac:.3f} "
+        f"| {r['peak_bytes_per_dev_tpu']/2**30:.1f} {fit} "
+        f"| {r['compile_s']}s |"
+    )
+
+
+def dryrun_row(r):
+    if r["status"] != "ok":
+        reason = ("skipped (full-attention @500k)" if r["status"] == "skipped"
+                  else "ERROR")
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | {reason} |"
+    coll = r["collective_bytes_per_dev"]
+    top = max(coll, key=coll.get) if coll else "-"
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['jaxpr_flops_global']:.2e} "
+        f"| {r['peak_bytes_per_dev_tpu']/2**30:.2f} GiB "
+        f"| {r['collective_total_per_dev']:.2e} ({top}) "
+        f"| {r['sharding']},mb={r['microbatches']} "
+        f"| {'fits' if r['fits_16gb'] else 'OVER'} |"
+    )
+
+
+HEAD_ROOF = ("| arch | shape | compute s | memory s | collective s | dom "
+             "| useful | roofline frac | peak/dev (TPU-adj) | compile |\n"
+             "|---|---|---|---|---|---|---|---|---|---|")
+HEAD_DRY = ("| arch | shape | HLO FLOPs (global) | peak/dev | coll bytes/dev "
+            "(dominant kind) | config | fit |\n|---|---|---|---|---|---|---|")
+
+
+def main():
+    path_sp = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_all.json"
+    path_mp = sys.argv[2] if len(sys.argv) > 2 else None
+    rows = json.load(open(path_sp))
+    if path_mp and os.path.exists(path_mp):
+        rows = [r for r in rows if not r["multi_pod"]] + json.load(open(path_mp))
+    sp = [r for r in rows if not r["multi_pod"]]
+    mp = [r for r in rows if r["multi_pod"]]
+
+    out = []
+    out.append("### §Dry-run — single pod (16x16 = 256 chips)\n")
+    out.append(HEAD_DRY)
+    out.extend(dryrun_row(r) for r in sp)
+    out.append("\n### §Dry-run — two pods (2x16x16 = 512 chips)\n")
+    out.append(HEAD_DRY)
+    out.extend(dryrun_row(r) for r in mp)
+    out.append("\n### §Roofline — single pod (terms in seconds/step; "
+               "C=compute, M=memory, X=collective)\n")
+    out.append(HEAD_ROOF)
+    out.extend(fmt_row(r) for r in sp)
+    out.append("\n### §Roofline — two pods\n")
+    out.append(HEAD_ROOF)
+    out.extend(fmt_row(r) for r in mp)
+    block = "\n".join(out)
+
+    exp = open("EXPERIMENTS.md").read()
+    new = re.sub(
+        r"<!-- AUTOGEN:TABLES -->.*?<!-- /AUTOGEN:TABLES -->",
+        "<!-- AUTOGEN:TABLES -->\n" + block + "\n<!-- /AUTOGEN:TABLES -->",
+        exp, flags=re.S,
+    )
+    open("EXPERIMENTS.md", "w").write(new)
+    ok = sum(r["status"] == "ok" for r in rows)
+    sk = sum(r["status"] == "skipped" for r in rows)
+    print(f"tables written: {ok} ok, {sk} skipped, "
+          f"{len(rows) - ok - sk} errors")
+
+
+if __name__ == "__main__":
+    main()

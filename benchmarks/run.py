@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+  fig3_patterns    <- paper Fig 3 + Fig 4 (pattern profile, immediates)
+  fig11_cycles     <- paper Fig 11 (cycles/inference, v0..v4)
+  fig12_energy     <- paper Fig 12 (energy/inference, eq. 1)
+  table8_resources <- paper Table 8 / Fig 10 (resource overhead proxies)
+  table10_memory   <- paper Table 10 (DM/PM per version)
+  kernel/*         <- Pallas kernel micro-benches (interpret mode)
+  roofline/*       <- dry-run roofline terms (assignment §Roofline)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_cycles, bench_energy, bench_kernels, bench_memory,
+        bench_patterns, bench_resources, bench_roofline,
+    )
+
+    print("name,us_per_call,derived")
+    mods = {
+        "patterns": bench_patterns, "cycles": bench_cycles,
+        "energy": bench_energy, "resources": bench_resources,
+        "memory": bench_memory, "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, mod in mods.items():
+        if only and only != name:
+            continue
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

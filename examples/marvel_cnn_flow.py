@@ -1,0 +1,33 @@
+"""Paper reproduction driver: the full MARVEL flow on all six CNNs
+(LeNet-5*, MobileNetV1/V2, ResNet50, VGG16, DenseNet121) — Fig 3 profile,
+class detection, chess_rewrite fusion, and the v0..v4 cycle/energy tables
+(Figs 11/12).
+
+    PYTHONPATH=src python examples/marvel_cnn_flow.py [--models lenet5,...]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import run_marvel_flow
+from repro.models.cnn import CNN_MODELS, get_cnn
+from repro.quant.ptq import quantize_tree
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default=",".join(CNN_MODELS))
+    args = ap.parse_args()
+    for name in args.models.split(","):
+        init, apply, in_shape = get_cnn(name)
+        params = init(jax.random.PRNGKey(0))
+        x = jnp.zeros((1, *in_shape))
+        q, qstats = quantize_tree(params)  # paper step 3: int8 PTQ
+        rep = run_marvel_flow(lambda x: apply(params, x), x)
+        print(f"\n=== {name} (int8 PTQ: {qstats['quantized']} weight tensors)")
+        print(rep.summary())
+
+
+if __name__ == "__main__":
+    main()

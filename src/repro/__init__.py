@@ -1,0 +1,4 @@
+# repro: MARVEL-JAX — model-class aware extension generation for TPU,
+# adapted from "MARVEL: An End-to-End Framework for Generating Model-Class
+# Aware Custom RISC-V Extensions for Lightweight AI" (2025).
+__version__ = "1.0.0"

@@ -1,0 +1,100 @@
+"""Shared utilities: logical-axis sharding, dtype helpers, pytree naming.
+
+The sharding context is process-global (set by the launcher); model code only
+names *logical* axes. When no mesh is active every annotation is a no-op so
+the same model code runs on one CPU device in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Mapping[str, Any] | None:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Mapping[str, Any]):
+    """Activate a logical→physical axis mapping for model-internal constraints.
+
+    rules maps logical axis name -> mesh axis name (str), tuple of mesh axes,
+    or None (replicated).
+    """
+    old = (_mesh(), _rules())
+    _state.mesh, _state.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = old
+
+
+def logical_to_spec(axes: Sequence[str | None]) -> P:
+    rules = _rules() or {}
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shd(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain ``x`` so dim i is sharded along logical axis axes[i].
+
+    No-op outside an ``axis_rules`` context (single-device tests).
+    """
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*axes: str | None) -> NamedSharding | None:
+    mesh = _mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(axes))
+
+
+# ---------------------------------------------------------------------------
+# pytree path naming (used for partition rules and checkpoint manifests)
+# ---------------------------------------------------------------------------
+
+def flatten_with_names(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "size")
+    )
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

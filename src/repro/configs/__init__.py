@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, RunConfig, SHAPES  # noqa: F401
+from repro.configs.registry import get_arch, list_archs, smoke_variant  # noqa: F401

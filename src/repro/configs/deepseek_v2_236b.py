@@ -1,0 +1,25 @@
+"""deepseek-v2-236b [moe]: MLA kv_lora=512, 2 shared + 160 routed top-6,
+first layer dense-FFN. [arXiv:2405.04434; hf]"""
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,  # MLA is MHA over the latent; kept for bookkeeping
+    d_ff=12288,  # dense-FFN width (first_k_dense layer)
+    vocab=102400,
+    n_experts=160,
+    top_k=6,
+    n_shared_experts=2,
+    d_ff_expert=1536,
+    first_k_dense=1,
+    kv_lora=512,
+    q_lora=1536,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    norm_topk=True,
+)

@@ -1,0 +1,20 @@
+"""llama4-maverick-400b-a17b [moe]: MoE 128e top-1 + shared expert, early
+fusion. [hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=16384,  # dense-layer FFN width (MoE layers use d_ff_expert)
+    vocab=202048,
+    n_experts=128,
+    top_k=1,
+    n_shared_experts=1,
+    d_ff_expert=8192,
+    moe_every=2,  # Maverick interleaves MoE every other layer -> ~400B total
+    rope_theta=500000.0,
+)

@@ -1,0 +1,72 @@
+"""Arch registry: ``--arch <id>`` resolution + reduced smoke variants."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig
+
+ARCH_IDS = [
+    "whisper-tiny",
+    "llama4-maverick-400b-a17b",
+    "deepseek-v2-236b",
+    "internvl2-26b",
+    "granite-3-2b",
+    "granite-34b",
+    "qwen3-8b",
+    "starcoder2-3b",
+    "hymba-1.5b",
+    "rwkv6-1.6b",
+]
+
+# the paper's own model class (CNNs) — see repro.models.cnn
+CNN_IDS = [
+    "lenet5",
+    "mobilenetv1",
+    "resnet50",
+    "vgg16",
+    "mobilenetv2",
+    "densenet121",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_arch(arch_id: str) -> ArchConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_module_name(arch_id)).ARCH
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)
+
+
+def smoke_variant(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests (small widths/depths)."""
+    kw = dict(
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+    )
+    if cfg.family == "moe":
+        kw.update(n_experts=8, top_k=min(cfg.top_k, 2), d_ff_expert=64)
+        if cfg.kv_lora:
+            kw.update(
+                kv_lora=32, q_lora=64, qk_nope_dim=32, qk_rope_dim=16,
+                v_head_dim=32, head_dim=0,
+            )
+    if cfg.family == "hybrid":
+        kw.update(ssm_d_inner=256, ssm_state=8, sliding_window=32)
+    if cfg.family == "rwkv":
+        kw.update(rwkv_head_dim=32, d_model=128, d_ff=256)
+    if cfg.family == "enc_dec":
+        kw.update(n_enc_layers=2, n_frames=16)
+    if cfg.family == "vlm":
+        kw.update(n_patches=8)
+    return cfg.replace(**kw)

@@ -1,0 +1,45 @@
+"""Model-class detection from profiles — the "model-class aware" half.
+
+The paper's key observation: the hot patterns are *class*-specific, not
+model-specific (validated by profiling 6 CNNs, Fig 3).  We classify a model
+from its op-mix signature and recommend the class's extension set; the
+reproduction benchmarks then show within-class profile similarity.
+"""
+from __future__ import annotations
+
+from repro.core.extensions import extensions_for_class
+from repro.core.profiler import PatternProfile
+
+CLASSES = (
+    "cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm", "unknown"
+)
+
+
+def classify(profile: PatternProfile) -> str:
+    c = profile.counts
+    conv = c.get("conv", 0)
+    sort = c.get("other:sort", 0)
+    scan_heavy = profile.loop_iters > 0 and (
+        c.get("other:cumsum", 0) + c.get("other:cumlogsumexp", 0) > 0
+        or profile.site_counts.get("wkv_chunk", 0) > 0
+        or profile.site_counts.get("ssm_chunk", 0) > 0
+    )
+    attn = profile.site_counts.get("flash_attention", 0) > 0
+    if conv > 0 and not attn:
+        return "cnn"
+    if sort > 0 or profile.site_counts.get("moe_dispatch", 0) > 0:
+        return "moe_lm"
+    if scan_heavy and attn:
+        return "hybrid_lm"
+    if scan_heavy:
+        return "ssm_lm"
+    if attn:
+        return "dense_lm"
+    return "unknown"
+
+
+def recommend(profile: PatternProfile) -> tuple[str, list[str]]:
+    """Profile -> (model class, extension names) — the automated step 2
+    of the MARVEL flow."""
+    cls = classify(profile)
+    return cls, extensions_for_class(cls, profile)

@@ -1,0 +1,58 @@
+"""Extension dispatch — the runtime half of the chess_rewrite analogue.
+
+The paper retargets the Chess compiler with ``chess_rewrite`` rules so that
+*unchanged* application code picks up custom instructions.  Here, model code
+calls :func:`call` with a named fusable *pattern* and its baseline (pure-jnp)
+implementation; whichever :class:`ExtensionSet` is active may substitute a
+fused implementation (a Pallas TPU kernel, or a restructured jnp form).  With
+no active extensions the baseline runs — that is processor version **v0**.
+
+Keeping this module tiny and dependency-free avoids import cycles: model code
+imports only this; ``repro.core.extensions`` registers implementations here.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable
+
+_state = threading.local()
+
+# name -> {impl_name -> callable}; populated by repro.core.extensions / kernels
+_REGISTRY: dict[str, dict[str, Callable[..., Any]]] = {}
+
+
+def register_impl(pattern: str, impl_name: str, fn: Callable[..., Any]) -> None:
+    _REGISTRY.setdefault(pattern, {})[impl_name] = fn
+
+
+def registered(pattern: str) -> dict[str, Callable[..., Any]]:
+    return dict(_REGISTRY.get(pattern, {}))
+
+
+def _active() -> dict[str, str]:
+    """Map of pattern -> chosen impl_name for the current context."""
+    return getattr(_state, "active", {})
+
+
+@contextlib.contextmanager
+def active_extensions(mapping: dict[str, str]):
+    old = _active()
+    _state.active = dict(mapping)
+    try:
+        yield
+    finally:
+        _state.active = old
+
+
+def call(pattern: str, baseline: Callable[..., Any], *args, **kwargs):
+    impl_name = _active().get(pattern)
+    if impl_name is None or impl_name == "baseline":
+        return baseline(*args, **kwargs)
+    impl = _REGISTRY.get(pattern, {}).get(impl_name)
+    if impl is None:
+        raise KeyError(
+            f"extension pattern {pattern!r} requests impl {impl_name!r} "
+            f"but only {sorted(_REGISTRY.get(pattern, {}))} are registered"
+        )
+    return impl(*args, **kwargs)

@@ -1,0 +1,108 @@
+"""Extension registry + processor-version levels (paper Table 1 analogue).
+
+v0  baseline (pure jnp / XLA default)
+v1  + mac       (int8 MAC GEMM kernel — quantized multiply-accumulate)
+v2  + add2i     (fused residual-add + RMSNorm)
+v3  + fusedmac  (GEMM + bias + activation epilogue fusion)
+v4  + zol       (grid-pipelined streaming: flash attention / chunked scans)
+
+Each extension names a dispatch *pattern* and the backends that implement it:
+``ref`` (pure jnp, algorithmically fused — used on CPU and as oracle) and
+``pallas`` (the TPU kernel from repro/kernels, registered on import).
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+
+from repro.core import dispatch
+
+
+@dataclass(frozen=True)
+class Extension:
+    name: str  # paper-facing name (mac/add2i/fusedmac/zol)
+    patterns: tuple[str, ...]  # dispatch pattern(s) it accelerates
+    description: str
+    # model classes whose profiles exhibit the pattern (class-aware selection)
+    applicable_classes: tuple[str, ...]
+
+
+EXTENSIONS: dict[str, Extension] = {
+    e.name: e
+    for e in [
+        Extension(
+            "mac",
+            ("mac_matmul", "mac_matmul_int8"),
+            "int8 MAC GEMM: multiply+accumulate in one MXU pass, int8 weights",
+            ("cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm"),
+        ),
+        Extension(
+            "add2i",
+            ("residual_rmsnorm",),
+            "fused residual-add + RMSNorm (two updates, one HBM round-trip)",
+            ("dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm"),
+        ),
+        Extension(
+            "fusedmac",
+            ("matmul_epilogue",),
+            "GEMM + bias + activation epilogue in one kernel",
+            ("cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm"),
+        ),
+        Extension(
+            "zol",
+            ("flash_attention", "wkv_chunk", "ssm_chunk"),
+            "zero-overhead loops: Pallas grid pipelining / chunked streaming",
+            ("dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm"),
+        ),
+    ]
+}
+
+LEVEL_EXTENSIONS: dict[str, tuple[str, ...]] = {
+    "v0": (),
+    "v1": ("mac",),
+    "v2": ("mac", "add2i"),
+    "v3": ("mac", "add2i", "fusedmac"),
+    "v4": ("mac", "add2i", "fusedmac", "zol"),
+}
+
+
+def patterns_for_level(level: str) -> list[str]:
+    pats: list[str] = []
+    for ext in LEVEL_EXTENSIONS[level]:
+        pats.extend(EXTENSIONS[ext].patterns)
+    return pats
+
+
+@contextlib.contextmanager
+def extension_context(level: str, backend: str = "ref"):
+    """Activate a processor version.
+
+    backend='ref' keeps the pure-jnp baselines (CPU / dry-run); the version
+    differences are then accounted by the cost model. backend='pallas' swaps
+    in the TPU kernels (or their interpret-mode forms in tests) for every
+    pattern that has one registered.
+    """
+    mapping: dict[str, str] = {}
+    if backend != "ref":
+        for pat in patterns_for_level(level):
+            if backend in dispatch.registered(pat):
+                mapping[pat] = backend
+    with dispatch.active_extensions(mapping):
+        yield
+
+
+def extensions_for_class(model_class: str, profile=None) -> list[str]:
+    """Class-aware selection (the paper's central claim): pick extensions
+    whose pattern actually shows in the class profile."""
+    out = []
+    for name, ext in EXTENSIONS.items():
+        if model_class not in ext.applicable_classes:
+            continue
+        if profile is not None:
+            hit = any(
+                profile.site_counts.get(p, 0) > 0 for p in ext.patterns
+            ) or (name == "mac" and profile.counts.get("mul(mac)", 0) > 0)
+            if not hit:
+                continue
+        out.append(name)
+    return out

@@ -1,0 +1,277 @@
+"""jaxpr op-pattern profiler — the paper's instruction-accurate-simulator step.
+
+The paper profiles compiled C on the baseline RV32 core and counts how often
+instruction *patterns* (mul→add, addi;addi, addi;addi;mul;add, blt loops)
+execute.  Our "assembly" is the jaxpr: we walk it (recursing through
+scan/while/pjit/remat with trip-count multipliers — TVM-style static loop
+bounds are what make this exact) and count the TPU pattern analogues, plus
+FLOPs/bytes for the cost model.
+
+Two complementary sources feed one profile:
+  1. *instruction level* — primitive/adjacent-pair counts from the jaxpr
+     (Fig 3's mul_add_count / addi_addi_count / fusedmac_count analogues);
+  2. *pattern-site level* — the dispatch layer records every fusable call
+     site with exact tensor bytes while tracing (no execution, works at
+     ShapeDtypeStruct scale).
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import core as jcore
+from jax.extend import core as jex_core
+
+from repro.core import dispatch
+
+# ---------------------------------------------------------------------------
+# dispatch-level site recording
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+
+def _sink() -> list | None:
+    return getattr(_tls, "sink", None)
+
+
+@contextlib.contextmanager
+def _recording(sink: list):
+    _tls.sink = sink
+    orig_call = dispatch.call
+
+    def recording_call(pattern, baseline, *args, **kwargs):
+        s = _sink()
+        if s is not None:
+            nbytes = sum(
+                a.size * a.dtype.itemsize
+                for a in jax.tree_util.tree_leaves((args, kwargs))
+                if hasattr(a, "size") and hasattr(a, "dtype")
+            )
+            s.append((pattern, int(nbytes)))
+            if pattern == "flash_attention" and len(args) >= 2:
+                # what a NON-streaming (v0) attention would spill to HBM:
+                # the Sq x Skv score matrix, written + read in f32
+                q, k = args[0], args[1]
+                B, Sq, K, G, _ = q.shape
+                Skv = k.shape[1]
+                s.append(("attn_scores", int(2 * 4 * B * K * G * Sq * Skv)))
+        return orig_call(pattern, baseline, *args, **kwargs)
+
+    dispatch.call = recording_call
+    try:
+        yield
+    finally:
+        dispatch.call = orig_call
+        _tls.sink = None
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+ELEMENTWISE_MUL = {"mul"}
+ELEMENTWISE_ADD = {"add", "sub"}
+ACT_PRIMS = {"logistic", "tanh", "erf", "max", "exp", "rsqrt", "custom_jvp_call"}
+MATMUL_PRIMS = {"dot_general", "conv_general_dilated", "ragged_dot"}
+LOOP_PRIMS = {"scan", "while"}
+
+# recursion points: primitive name -> params keys holding sub-jaxprs
+_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr", "branches")
+
+# shape/dtype plumbing that does not break an instruction-pattern chain
+# (the RV32 instruction stream has no analogue of these)
+TRANSPARENT = {"broadcast_in_dim", "reshape", "convert", "transpose",
+               "squeeze", "expand_dims", "copy", "slice"}
+
+
+def _next_consumer(eqns, i):
+    """First non-transparent eqn consuming eqns[i]'s output (dataflow,
+    following through broadcasts/reshapes/converts)."""
+    targets = {eqns[i].outvars[0]}
+    for j in range(i + 1, len(eqns)):
+        e = eqns[j]
+        if any((not isinstance(v, jex_core.Literal)) and v in targets
+               for v in e.invars):
+            if e.primitive.name in TRANSPARENT and e.outvars:
+                targets.add(e.outvars[0])
+                continue
+            return e
+    return None
+
+
+def _aval_bytes(v) -> int:
+    aval = v.aval
+    if not hasattr(aval, "shape"):
+        return 0
+    return int(math.prod(aval.shape) * jnp.dtype(aval.dtype).itemsize) if aval.shape is not None else 0
+
+
+def _dot_flops(eqn) -> float:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    contract = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    m = math.prod(
+        s for i, s in enumerate(lhs.shape) if i not in lc and i not in lb
+    )
+    n = math.prod(
+        s for i, s in enumerate(rhs.shape) if i not in rc and i not in rb
+    )
+    return 2.0 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval  # kernel (spatial..., in_ch/g, out_ch) order varies
+    out_elems = math.prod(out.shape)
+    kernel_elems = math.prod(rhs.shape)
+    out_ch = eqn.params["dimension_numbers"].rhs_spec
+    # flops ~= 2 * out_elems * (kernel_elems / out_channels)
+    ksize = kernel_elems / max(out.shape[eqn.params["dimension_numbers"].out_spec[1]], 1)
+    return 2.0 * out_elems * ksize
+
+
+@dataclass
+class PatternProfile:
+    # instruction-level (Fig 3 analogue)
+    counts: Counter = field(default_factory=Counter)
+    # literal operand values of scalar integer adds (Fig 4 analogue:
+    # immediate-value distribution that sized the paper's 5/10-bit split)
+    addi_values: Counter = field(default_factory=Counter)
+    # (i1, i2) address-bump immediates of conv inner loops: (element step,
+    # row stride) in int8 elements — what TVM's addi;addi pairs encode
+    conv_strides: Counter = field(default_factory=Counter)
+    # pattern-site level (bytes per fusable call site)
+    site_counts: Counter = field(default_factory=Counter)
+    site_bytes: Counter = field(default_factory=Counter)
+    flops: float = 0.0
+    matmul_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    weight_bytes: float = 0.0
+    loop_iters: float = 0.0
+
+    def as_costmodel_inputs(self) -> dict:
+        return {
+            "flops": self.flops,
+            "matmul_flops": self.matmul_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "weight_bytes": self.weight_bytes,
+            "residual_norm_bytes": float(self.site_bytes["residual_rmsnorm"]),
+            "epilogue_bytes": 0.5 * float(
+                self.site_bytes["matmul_epilogue"]
+                + self.site_bytes["fused_conv"]
+            ),
+            "attn_score_bytes": float(self.site_bytes["attn_scores"]),
+            "loop_iters": self.loop_iters,
+        }
+
+    def normalized_counts(self) -> dict:
+        total = sum(self.counts.values()) or 1
+        return {k: v / total for k, v in self.counts.items()}
+
+
+def _walk(jaxpr: jcore.Jaxpr, prof: PatternProfile, mult: float) -> None:
+    eqns = jaxpr.eqns
+    for i, eqn in enumerate(eqns):
+        name = eqn.primitive.name
+        out_bytes = sum(_aval_bytes(v) for v in eqn.outvars)
+        in_bytes = sum(_aval_bytes(v) for v in eqn.invars)
+
+        # --- recursion into sub-jaxprs --------------------------------
+        if name in LOOP_PRIMS or name in ("pjit", "remat", "remat2",
+                                          "checkpoint",
+                                          "custom_vjp_call", "custom_jvp_call",
+                                          "cond", "custom_vjp_call_jaxpr"):
+            sub_mult = mult
+            if name == "scan":
+                length = eqn.params.get("length", 1)
+                sub_mult = mult * length
+                prof.loop_iters += mult * length
+                prof.counts["loop(blt)"] += mult * length
+            elif name == "while":
+                prof.loop_iters += mult  # trip count unknown; >= 1
+                prof.counts["loop(blt)"] += mult
+            for k in _SUBJAXPR_KEYS:
+                sub = eqn.params.get(k)
+                if sub is None:
+                    continue
+                subs = sub if isinstance(sub, (tuple, list)) else [sub]
+                for s in subs:
+                    inner = s.jaxpr if hasattr(s, "jaxpr") else s
+                    if isinstance(inner, jex_core.Jaxpr):
+                        _walk(inner, prof, sub_mult)
+            continue
+
+        prof.hbm_bytes += mult * (in_bytes + out_bytes)
+
+        if name in MATMUL_PRIMS:
+            fl = (
+                _dot_flops(eqn) if name == "dot_general"
+                else _conv_flops(eqn) if name == "conv_general_dilated"
+                else 2.0 * out_bytes  # ragged_dot rough
+            )
+            prof.flops += mult * fl
+            prof.matmul_flops += mult * fl
+            prof.weight_bytes += mult * _aval_bytes(eqn.invars[1])
+            prof.counts["mul(mac)"] += mult
+            prof.counts["conv" if name == "conv_general_dilated" else "dot"] += mult
+            if name == "conv_general_dilated":
+                # inner-loop address bumps: 1-element step over channels,
+                # row-stride jump between kernel rows (int8 elements)
+                lhs = eqn.invars[0].aval.shape  # NHWC after our dn choice
+                row_stride = int(lhs[-2] * lhs[-1]) if len(lhs) == 4 else 0
+                prof.conv_strides[(1, row_stride)] += mult * fl / 2.0
+            # mac pattern: matmul whose (dataflow) consumer accumulates
+            nxt = _next_consumer(eqns, i)
+            if nxt is not None and nxt.primitive.name in ELEMENTWISE_ADD:
+                prof.counts["mul_add(mac)"] += mult
+                j = eqns.index(nxt)
+                nn = _next_consumer(eqns, j)
+                if nn is not None and nn.primitive.name in ACT_PRIMS:
+                    prof.counts["fusedmac"] += mult
+        elif name in ELEMENTWISE_MUL:
+            prof.flops += mult * (out_bytes / 4)
+            prof.counts["mul"] += mult
+            nxt = _next_consumer(eqns, i)
+            if nxt is not None and nxt.primitive.name in ELEMENTWISE_ADD:
+                prof.counts["mul_add(mac)"] += mult
+        elif name in ELEMENTWISE_ADD:
+            prof.flops += mult * (out_bytes / 4)
+            prof.counts["add"] += mult
+            if any(isinstance(v, jex_core.Literal) for v in eqn.invars):
+                prof.counts["addi"] += mult
+                for v in eqn.invars:
+                    if isinstance(v, jex_core.Literal) and jnp.issubdtype(
+                        jnp.result_type(v.val), jnp.integer
+                    ):
+                        try:
+                            prof.addi_values[int(v.val)] += int(mult)
+                        except (TypeError, OverflowError):
+                            pass
+                nxt = eqns[i + 1] if i + 1 < len(eqns) else None
+                if nxt is not None and nxt.primitive.name in ELEMENTWISE_ADD and any(
+                    isinstance(v, jex_core.Literal) for v in nxt.invars
+                ):
+                    prof.counts["addi_addi(add2i)"] += mult
+        else:
+            prof.counts[f"other:{name}"] += mult
+
+
+def profile_fn(fn: Callable, *args, **kwargs) -> PatternProfile:
+    """Trace ``fn`` (ShapeDtypeStructs fine — nothing executes) and profile."""
+    prof = PatternProfile()
+    sink: list[tuple[str, int]] = []
+    with _recording(sink):
+        closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    _walk(closed.jaxpr, prof, 1.0)
+    for pattern, nbytes in sink:
+        prof.site_counts[pattern] += 1
+        prof.site_bytes[pattern] += nbytes
+    return prof

@@ -1,0 +1,234 @@
+"""chess_rewrite analogue: peephole jaxpr -> jaxpr fusion pass.
+
+The paper teaches the Chess compiler rules like::
+
+    chess_rewrite int mac_rule(int c, int a, int b)
+        {return c + a*b;} -> {return MAC(c,a,b);}
+
+Here the "custom instructions" are real JAX primitives (``marvel_mac``,
+``marvel_fusedmac``) whose impl/abstract-eval delegate to the fused reference
+(and, on TPU, the Pallas kernels).  ``rewrite(fn)`` traces ``fn``, walks the
+jaxpr, and replaces matched instruction groups with the fused primitive —
+the user's model code never changes, exactly the paper's property.  The
+rewritten program's jaxpr *shows* the custom instructions, so re-profiling
+demonstrates the pattern-count drop (Fig 5's v0-vs-v4 assembly comparison).
+
+Top-level jaxpr only (scan bodies are already pattern-dispatched via
+repro.core.dispatch); that covers the CNN reproduction models, which are
+un-scanned graphs like the paper's TVM output.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import core as jcore
+from jax.extend import core as jex_core
+from jax.interpreters import ad
+
+# --- custom "instructions" -------------------------------------------------
+
+marvel_mac_p = jex_core.Primitive("marvel_mac")
+marvel_fusedmac_p = jex_core.Primitive("marvel_fusedmac")
+
+
+def _mac_impl(c, a, b):
+    return c + a * b
+
+
+marvel_mac_p.def_impl(_mac_impl)
+marvel_mac_p.def_abstract_eval(
+    lambda c, a, b: jcore.ShapedArray(
+        jnp.broadcast_shapes(c.shape, a.shape, b.shape),
+        jnp.result_type(c.dtype, a.dtype, b.dtype),
+    )
+)
+
+
+def _fusedmac_impl(x, w, b, *, dimension_numbers, act):
+    y = jax.lax.dot_general(x, w, dimension_numbers)
+    y = y + b
+    return _ACT_FNS[act](y)
+
+
+_ACT_FNS = {
+    "relu": lambda y: jnp.maximum(y, 0.0),
+    "logistic": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "none": lambda y: y,
+}
+
+
+def marvel_fusedmac_abstract(x, w, b, *, dimension_numbers, act):
+    out = jax.eval_shape(
+        lambda x, w, b: jax.lax.dot_general(x, w, dimension_numbers) + b, x, w, b
+    )
+    return jcore.ShapedArray(out.shape, out.dtype)
+
+
+marvel_fusedmac_p.def_impl(
+    lambda x, w, b, **kw: _fusedmac_impl(x, w, b, **kw)
+)
+marvel_fusedmac_p.def_abstract_eval(marvel_fusedmac_abstract)
+
+marvel_fusedconv_p = jex_core.Primitive("marvel_fusedconv")
+
+
+def _fusedconv_impl(x, w, b, *, conv_params, act):
+    y = jax.lax.conv_general_dilated_p.bind(x, w, **dict(conv_params))
+    y = y + b
+    return _ACT_FNS[act](y)
+
+
+def _fusedconv_abstract(x, w, b, *, conv_params, act):
+    out = jax.lax.conv_general_dilated_p.abstract_eval(
+        x, w, **dict(conv_params)
+    )[0]
+    return jcore.ShapedArray(out.shape, out.dtype)
+
+
+marvel_fusedconv_p.def_impl(_fusedconv_impl)
+marvel_fusedconv_p.def_abstract_eval(_fusedconv_abstract)
+
+CUSTOM_PRIMS = {"marvel_mac", "marvel_fusedmac", "marvel_fusedconv"}
+
+
+# --- the peephole pass -------------------------------------------------------
+
+
+def _single_consumer(eqns, i, var):
+    """Index of the unique eqn consuming ``var``, or None."""
+    found = None
+    for j in range(i + 1, len(eqns)):
+        if any(v is var for v in eqns[j].invars):
+            if found is not None:
+                return None
+            found = j
+    return found
+
+
+def rewrite_jaxpr(closed: jcore.ClosedJaxpr) -> tuple[jcore.ClosedJaxpr, dict]:
+    """Return (rewritten jaxpr, stats). Fuses:
+    - mul -> add        => marvel_mac
+    - dot_general -> add(bias) -> act => marvel_fusedmac
+    """
+    jaxpr = closed.jaxpr
+    eqns = list(jaxpr.eqns)
+    stats = {"mac": 0, "fusedmac": 0}
+    skip: set[int] = set()
+    # fused eqns are emitted at the position of the LAST original eqn they
+    # replace, so every operand (e.g. the bias broadcast between dot and add)
+    # is already defined
+    pending: dict[int, Any] = {}
+    outvar_set = set(map(id, jaxpr.outvars))
+
+    for i, eqn in enumerate(eqns):
+        if i in skip:
+            continue
+        name = eqn.primitive.name
+        # fusedmac: {dot_general|conv} -> add [-> activation]
+        # (bias-only fusion is the mac rule; with activation it's fusedmac)
+        if name in ("dot_general", "conv_general_dilated"):
+            j = _single_consumer(eqns, i, eqn.outvars[0])
+            if (
+                j is not None
+                and eqns[j].primitive.name == "add"
+                and id(eqn.outvars[0]) not in outvar_set
+            ):
+                k = _single_consumer(eqns, j, eqns[j].outvars[0])
+                act = "none"
+                fuse_k = False
+                if k is not None and id(eqns[j].outvars[0]) not in outvar_set:
+                    kname = eqns[k].primitive.name
+                    if kname == "max" and any(
+                        isinstance(v, jex_core.Literal) for v in eqns[k].invars
+                    ):
+                        act, fuse_k = "relu", True
+                    elif kname in ("logistic", "tanh"):
+                        act, fuse_k = kname, True
+                bias = [v for v in eqns[j].invars if v is not eqn.outvars[0]][0]
+                out = eqns[k].outvars[0] if fuse_k else eqns[j].outvars[0]
+                if name == "dot_general":
+                    fused = eqn.replace(
+                        primitive=marvel_fusedmac_p,
+                        invars=[eqn.invars[0], eqn.invars[1], bias],
+                        outvars=[out],
+                        params={
+                            "dimension_numbers": eqn.params["dimension_numbers"],
+                            "act": act,
+                        },
+                    )
+                else:
+                    fused = eqn.replace(
+                        primitive=marvel_fusedconv_p,
+                        invars=[eqn.invars[0], eqn.invars[1], bias],
+                        outvars=[out],
+                        # eqn params must be hashable -> frozen item tuple
+                        params={
+                            "conv_params": tuple(sorted(eqn.params.items())),
+                            "act": act,
+                        },
+                    )
+                last = k if fuse_k else j
+                pending[last] = fused
+                skip.update({i, j} | ({k} if fuse_k else set()))
+                stats["fusedmac" if fuse_k else "mac"] += 1
+                continue
+        # mac: elementwise mul -> add
+        if name == "mul":
+            j = _single_consumer(eqns, i, eqn.outvars[0])
+            if (
+                j is not None
+                and eqns[j].primitive.name == "add"
+                and id(eqn.outvars[0]) not in outvar_set
+            ):
+                acc = [v for v in eqns[j].invars if v is not eqn.outvars[0]][0]
+                same_shape = (
+                    getattr(acc.aval, "shape", None) == eqn.outvars[0].aval.shape
+                    and acc.aval.dtype == eqn.outvars[0].aval.dtype
+                )
+                if same_shape:
+                    fused = eqn.replace(
+                        primitive=marvel_mac_p,
+                        invars=[acc, eqn.invars[0], eqn.invars[1]],
+                        outvars=[eqns[j].outvars[0]],
+                        params={},
+                    )
+                    pending[j] = fused
+                    skip.update({i, j})
+                    stats["mac"] += 1
+                    continue
+
+    new_eqns = []
+    for i, eqn in enumerate(eqns):
+        if i in pending:
+            new_eqns.append(pending[i])
+        elif i not in skip:
+            new_eqns.append(eqn)
+
+    new_jaxpr = jaxpr.replace(eqns=new_eqns)
+    return closed.replace(jaxpr=new_jaxpr), stats
+
+
+def rewrite(fn: Callable, *example_args) -> tuple[Callable, dict]:
+    """Trace fn, apply the peephole pass, return (callable, fusion stats)."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    new_closed, stats = rewrite_jaxpr(closed)
+
+    def rewritten(*args):
+        flat, _ = jax.tree_util.tree_flatten(args)
+        out = jcore.eval_jaxpr(
+            new_closed.jaxpr, new_closed.consts, *flat
+        )
+        return out[0] if len(out) == 1 else tuple(out)
+
+    return rewritten, stats
+
+
+def count_custom_instructions(closed: jcore.ClosedJaxpr) -> dict:
+    out = {p: 0 for p in CUSTOM_PRIMS}
+    for eqn in closed.jaxpr.eqns:
+        if eqn.primitive.name in CUSTOM_PRIMS:
+            out[eqn.primitive.name] += 1
+    return out

@@ -1,0 +1,24 @@
+"""Shared kernel plumbing: interpret-mode switch + padding helpers.
+
+TARGET is TPU (Mosaic); on this CPU-only container every kernel runs with
+``interpret=True``, which executes the kernel body in Python for correctness
+validation against the pure-jnp oracles in ref.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interpret_mode() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int, value=0.0):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), size

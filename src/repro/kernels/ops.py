@@ -1,0 +1,94 @@
+"""jit'd wrappers + dispatch registration: the ``pallas`` backend.
+
+Importing this module registers every kernel under its MARVEL pattern name,
+so ``extension_context(level, backend="pallas")`` swaps them in without any
+model-code change (chess_rewrite property).  Wrappers adapt the model-layer
+calling conventions (grouped GQA heads, optional bias, quant dicts) to the
+kernels' 2D/3D tile layouts, falling back to the jnp reference for cases a
+kernel doesn't cover (cross-attention, windows, decode with kv_len).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.kernels import flash_attention as fa
+from repro.kernels import mac_matmul as mm
+from repro.kernels import matmul_epilogue as me
+from repro.kernels import residual_rmsnorm as rr
+from repro.kernels import wkv_chunk as wk
+from repro.kernels.common import pad_to
+from repro.models.layers import _flash_attention_ref, _matmul_ref
+
+
+def _pallas_mac_matmul_int8(x, quant):
+    w_int8, scale = quant["w_int8"], quant["scale"]
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1])
+    # dynamic per-row activation quantization (paper: full int8 inference)
+    absmax = jnp.max(jnp.abs(x2.astype(jnp.float32)), axis=1, keepdims=True)
+    xs = jnp.maximum(absmax, 1e-8) / 127.0
+    x_int8 = jnp.clip(jnp.round(x2.astype(jnp.float32) / xs), -127, 127
+                      ).astype(jnp.int8)
+    out = mm.mac_matmul_int8(x_int8, w_int8, scale.reshape(-1))
+    out = out * xs
+    return out.reshape(*orig[:-1], w_int8.shape[-1]).astype(x.dtype)
+
+
+def _pallas_matmul_epilogue(x, w, b=None, act="none"):
+    return me.matmul_epilogue(x, w, b, act=act)
+
+
+def _pallas_residual_rmsnorm(res, x, scale, eps=1e-6):
+    return rr.residual_rmsnorm(res, x, scale, eps=eps)
+
+
+def _pallas_flash_attention(q, k, v, *, causal=True, q_offset=0,
+                            impl="chunked", chunk=512, window=None,
+                            kv_len=None):
+    B, Sq, K, G, dh = q.shape
+    dv = v.shape[-1]
+    # kernel covers the self-attention fast path; everything else -> ref
+    Skv = k.shape[1]
+    bq = min(128, Sq)
+    bk = min(128, Skv)
+    # non-causal with ragged KV would let zero-padded keys contribute
+    pad_unsafe = (not causal) and (Skv % bk != 0)
+    if (window is not None or kv_len is not None or Sq == 1 or dh != dv
+            or pad_unsafe):
+        return _flash_attention_ref(
+            q, k, v, causal=causal, q_offset=q_offset, impl=impl,
+            chunk=chunk, window=window, kv_len=kv_len,
+        )
+    # flatten (B, K, G) -> BH; repeat kv per group
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * K * G, Sq, dh)
+    kf = jnp.repeat(
+        k.transpose(0, 2, 1, 3).reshape(B * K, Skv, dh), G, axis=0
+    )
+    vf = jnp.repeat(
+        v.transpose(0, 2, 1, 3).reshape(B * K, Skv, dh), G, axis=0
+    )
+    qf, Sq0 = pad_to(qf, 1, bq)
+    kf, _ = pad_to(kf, 1, bk)
+    vf, _ = pad_to(vf, 1, bk)
+    # padded KV columns must not contribute: they are masked by causality
+    # when Sq == Skv (self-attention); assert that contract here
+    out = fa.flash_attention(qf, kf, vf, causal=causal, bq=bq, bk=bk)
+    out = out[:, :Sq0]
+    return out.reshape(B, K, G, Sq0, dh).transpose(0, 3, 1, 2, 4)
+
+
+def _pallas_wkv_chunk(r, k, v, lw, u, s0, chunk):
+    return wk.wkv_chunk(r, k, v, lw, u, s0, chunk=chunk)
+
+
+def register():
+    dispatch.register_impl("mac_matmul_int8", "pallas", _pallas_mac_matmul_int8)
+    dispatch.register_impl("matmul_epilogue", "pallas", _pallas_matmul_epilogue)
+    dispatch.register_impl("residual_rmsnorm", "pallas", _pallas_residual_rmsnorm)
+    dispatch.register_impl("flash_attention", "pallas", _pallas_flash_attention)
+    dispatch.register_impl("wkv_chunk", "pallas", _pallas_wkv_chunk)
+
+
+register()

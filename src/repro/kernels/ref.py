@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every kernel (the per-kernel allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _chunked_attention, _rms_norm_ref
+from repro.models.rwkv import _wkv_chunk_ref
+
+_ACTS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
+
+
+def mac_matmul_int8_ref(x_int8, w_int8, scale, out_dtype=jnp.float32):
+    acc = x_int8.astype(jnp.int32) @ w_int8.astype(jnp.int32)
+    return (acc.astype(jnp.float32) * scale.reshape(1, -1)).astype(out_dtype)
+
+
+def matmul_epilogue_ref(x, w, b=None, act="none"):
+    y = jnp.einsum(
+        "...k,kn->...n", x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return _ACTS[act](y).astype(x.dtype)
+
+
+def residual_rmsnorm_ref(res, x, scale, eps=1e-6):
+    new_res = (res.astype(jnp.float32) + x.astype(jnp.float32)).astype(res.dtype)
+    return new_res, _rms_norm_ref(new_res, scale, eps)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q,k,v: (BH, S, d) -> exact softmax attention in f32."""
+    BH, Sq, d = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(d)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv_ref_sequential(r, k, v, lw, u, s0):
+    """Token-by-token WKV recurrence (the ground-truth oracle)."""
+    B, S, H, N = r.shape
+
+    def step(s, inputs):
+        rt, kt, vt, lwt = inputs  # (B,H,N)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        o = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lwt)[..., None] * s + kv
+        return s, o
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, lw))
+    s_final, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3), s_final
+
+
+# the chunked-jnp form (itself validated against wkv_ref_sequential)
+wkv_chunk_ref = _wkv_chunk_ref
+
+
+def chunked_attention_ref(q, k, v, **kw):
+    out, _lse = _chunked_attention(q, k, v, **kw)
+    return out

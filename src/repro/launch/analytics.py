@@ -1,0 +1,43 @@
+"""Analytic model FLOPs / param counts (roofline §: MODEL_FLOPS = 6·N·D)."""
+from __future__ import annotations
+
+import re
+
+import jax
+
+from repro.configs.base import ArchConfig, RunConfig
+
+
+def param_counts(cfg: ArchConfig) -> tuple[int, int]:
+    """Returns (total params, active-per-token params)."""
+    from repro.models import transformer as T
+
+    shape = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    flat = jax.tree_util.tree_flatten_with_path(shape)[0]
+    total = 0
+    routed = 0
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if re.search(r"moe/w[gud]$", name):
+            routed += n
+    active = total - routed
+    if cfg.n_experts:
+        active += routed * cfg.top_k / cfg.n_experts
+    return int(total), int(active)
+
+
+def model_flops(cfg: ArchConfig, run: RunConfig) -> float:
+    """6·N_active·D for train; 2·N_active·tokens for inference."""
+    _, active = param_counts(cfg)
+    if run.mode == "train":
+        tokens = run.global_batch * run.seq_len
+        return 6.0 * active * tokens
+    if run.mode == "prefill":
+        tokens = run.global_batch * run.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * active * run.global_batch

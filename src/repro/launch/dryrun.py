@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines, before any jax import: the dry-run (and only the
+# dry-run) builds the production mesh out of 512 placeholder host devices.
+# (No __future__ imports in this file for that reason.)
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this jits the step function with full production shardings,
+``.lower().compile()``s it AOT (ShapeDtypeStruct inputs - no allocation),
+and extracts:
+  - memory_analysis()   -> proves per-device fit on 16 GB v5e HBM
+  - cost_analysis()     -> HLO FLOPs / bytes for the roofline terms
+  - collective bytes    -> parsed from the optimized HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] --out results.json
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common import axis_rules
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.configs.base import ArchConfig, RunConfig
+from repro.core import profiler
+from repro.launch.analytics import model_flops
+from repro.launch.hloanalysis import analyze_hlo, cpu_f32_upcast_bytes
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.shardings import (
+    activation_rules, decode_state_shardings, default_run, input_specs,
+    param_shardings, token_sharding,
+)
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW
+from repro.runtime.steps import make_prefill_step, make_serve_step, make_train_step
+
+V5E_HBM_BYTES = 16 * 1024**3
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output-shape bytes of every collective op in the optimized HLO."""
+    out: dict[str, float] = {}
+    shape_re = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r".*= *((?:\([^)]*\)|[a-z0-9\[\],{} ]+?)) *"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all"
+            r"|collective-permute)", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = 0
+        for dt, dims in shape_re.findall(m.group(1)):
+            sz = 1
+            for d in dims.split(","):
+                if d:
+                    sz *= int(d)
+            itemsize = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                        "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8,
+                        "u64": 8}.get(dt, 4)
+            nbytes += sz * itemsize
+        out[kind] = out.get(kind, 0.0) + float(nbytes)
+    return out
+
+
+def skip_reason(cfg: ArchConfig, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: long_500k needs sub-quadratic "
+                "attention (DESIGN.md §5)")
+    return None
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, run: RunConfig | None = None):
+    """Returns (jitted fn, example args tuple) for the cell, under mesh."""
+    cfg = get_arch(arch_id)
+    run = run or default_run(cfg, shape_name)
+    if cfg.n_experts and run.moe_groups == 1:
+        # align GShard groups with the batch shards (shard-local dispatch)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_batch_shards = sizes.get("data", 1) * sizes.get("pod", 1)
+        if run.global_batch % n_batch_shards == 0:
+            run = run.replace(moe_groups=n_batch_shards)
+    rules = activation_rules(mesh, run, decode_batch=run.global_batch
+                             if run.mode == "decode" else 0, cfg=cfg)
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    p_shard = param_shardings(params_shape, mesh, run)
+
+    if run.mode == "train":
+        opt = AdamW(moment_dtype=run.moment_dtype)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        # moments mirror param specs; count replicated
+        o_shard = type(opt_shape)(
+            mu=jax.tree.map(lambda s: s, p_shard),
+            nu=jax.tree.map(lambda s: s, p_shard),
+            count=NamedSharding(mesh, P()),
+        )
+        specs, in_shard = input_specs(cfg, run, mesh)
+        step = make_train_step(cfg, run, opt)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, in_shard),
+            out_shardings=(p_shard, o_shard, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1),  # params/opt-state update in place
+        )
+        args = (params_shape, opt_shape, specs)
+    elif run.mode == "prefill":
+        specs, in_shard = input_specs(cfg, run, mesh)
+        step = make_prefill_step(cfg, run)
+        b = in_shard["tokens"].spec[0]
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, in_shard),
+            out_shardings=NamedSharding(mesh, P(b, "model")),
+        )
+        args = (params_shape, specs)
+    else:  # decode
+        B, S = run.global_batch, run.seq_len
+        frames_shape = (
+            jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+            if cfg.family == "enc_dec" else None
+        )
+        with axis_rules(mesh, rules):
+            if frames_shape is not None:
+                state_shape = jax.eval_shape(
+                    lambda p, f: T.init_decode_state(
+                        p, cfg, run, batch=B, max_len=S, frames=f
+                    ),
+                    params_shape, frames_shape,
+                )
+            else:
+                state_shape = jax.eval_shape(
+                    lambda p: T.init_decode_state(
+                        p, cfg, run, batch=B, max_len=S
+                    ),
+                    params_shape,
+                )
+        s_shard = decode_state_shardings(state_shape, cfg, run, mesh)
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        t_shard = token_sharding(run, mesh)
+        b = t_shard.spec[0]
+        step = make_serve_step(cfg, run)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, s_shard, t_shard),
+            out_shardings=(NamedSharding(mesh, P(b, None, "model")), s_shard),
+            donate_argnums=(1,),  # KV cache / recurrent state in place
+        )
+        args = (params_shape, state_shape, tok)
+
+    def wrapped(*a):
+        with axis_rules(mesh, rules):
+            return jitted.lower(*a)
+
+    return wrapped, args, run, cfg
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             run: RunConfig | None = None, mesh=None) -> dict:
+    reason = skip_reason(get_arch(arch_id), shape_name)
+    if reason:
+        return {"arch": arch_id, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skipped",
+                "reason": reason}
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lower_fn, args, run, cfg = build_cell(arch_id, shape_name, mesh, run)
+    lowered = lower_fn(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    # loop-aware per-device traffic from the partitioned optimized HLO
+    t0 = time.time()
+    hlo_text = compiled.as_text()
+    stats = analyze_hlo(hlo_text)
+    upcast = cpu_f32_upcast_bytes(hlo_text)
+    # trip-aware exact dot/conv FLOPs from the jaxpr (global, all devices)
+    prof = _profile_step(arch_id, shape_name, mesh, run)
+    t_analyze = time.time() - t0
+    per_dev = (
+        ma.argument_size_in_bytes + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+    )
+    per_dev_tpu = max(per_dev - upcast, 0)
+    res = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "chips": mesh_chips(mesh),
+        "mode": run.mode,
+        "sharding": run.sharding,
+        "microbatches": run.microbatches,
+        # raw XLA numbers (loop bodies counted once — see hloanalysis.py)
+        "xla_flops_looponce": float(ca.get("flops", 0.0)),
+        "xla_bytes_looponce": float(ca.get("bytes accessed", 0.0)),
+        # loop-aware numbers
+        "jaxpr_flops_global": prof.flops,
+        "jaxpr_matmul_flops_global": prof.matmul_flops,
+        "hbm_bytes_per_dev": stats.hbm_bytes,
+        "collective_bytes_per_dev": dict(stats.collective_bytes),
+        "collective_total_per_dev": stats.collective_total,
+        "model_flops": model_flops(get_arch(arch_id), run),
+        "arg_bytes_per_dev": int(ma.argument_size_in_bytes),
+        "out_bytes_per_dev": int(ma.output_size_in_bytes),
+        "temp_bytes_per_dev": int(ma.temp_size_in_bytes),
+        "alias_bytes_per_dev": int(ma.alias_size_in_bytes),
+        "peak_bytes_per_dev": int(per_dev),
+        # CPU backend stages bf16 dots through f32 (no native bf16 dot);
+        # those buffers don't exist on TPU — adjusted peak excludes them
+        "cpu_f32_upcast_bytes": int(upcast),
+        "peak_bytes_per_dev_tpu": int(per_dev_tpu),
+        "fits_16gb_raw": bool(per_dev <= V5E_HBM_BYTES),
+        "fits_16gb": bool(per_dev_tpu <= V5E_HBM_BYTES),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "analyze_s": round(t_analyze, 1),
+    }
+    return res
+
+
+def _profile_step(arch_id, shape_name, mesh, run):
+    """Trip-aware jaxpr profile of the cell's step function (global FLOPs)."""
+    lower_fn, args, run, cfg = build_cell(arch_id, shape_name, mesh, run)
+    rules = {}
+    # profile without shardings: same logical program
+    from repro.runtime.steps import (
+        make_prefill_step, make_serve_step, make_train_step,
+    )
+    from repro.optim.adamw import AdamW
+
+    if run.mode == "train":
+        step = make_train_step(cfg, run, AdamW(moment_dtype=run.moment_dtype))
+    elif run.mode == "prefill":
+        step = make_prefill_step(cfg, run)
+    else:
+        step = make_serve_step(cfg, run)
+    return profiler.profile_fn(step, *args)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for a, s in cells:
+            try:
+                r = run_cell(a, s, multi_pod=mp, mesh=mesh)
+            except Exception as e:  # noqa: BLE001 - report, keep going
+                r = {"arch": a, "shape": s, "multi_pod": mp,
+                     "status": "error", "error": f"{type(e).__name__}: {e}"}
+            results.append(r)
+            if args.out:  # incremental write: a crash never loses cells
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+            status = r["status"]
+            extra = ""
+            if status == "ok":
+                extra = (f"flops={r['jaxpr_flops_global']:.3e} peak/dev="
+                         f"{r['peak_bytes_per_dev']/2**30:.2f}GiB "
+                         f"fits={r['fits_16gb']} "
+                         f"coll/dev={r['collective_total_per_dev']:.3e}B "
+                         f"compile={r['compile_s']}s")
+                print(compiled_banner(r), extra, flush=True)
+            else:
+                print(compiled_banner(r),
+                      r.get("reason") or r.get("error"), flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_err = sum(r["status"] == "error" for r in results)
+    sys.exit(1 if n_err else 0)
+
+
+def compiled_banner(r) -> str:
+    mesh = "2x16x16" if r["multi_pod"] else "16x16"
+    return (f"[{r['status']:>7}] {r['arch']:<26} {r['shape']:<12} "
+            f"mesh={mesh:<8}")
+
+
+if __name__ == "__main__":
+    main()

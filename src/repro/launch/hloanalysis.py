@@ -1,0 +1,216 @@
+"""Loop-aware analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts while/scan bodies ONCE (verified by
+probe), which silently drops ~n_layers x the real traffic for scanned-layer
+models.  This module parses the optimized HLO, builds the computation call
+graph, extracts loop trip counts from while-condition constants, and scales
+per-computation totals:
+
+  - hbm_bytes:        sum over top-level ops of (operand + output bytes) —
+                      post-fusion ops are exactly the HBM round-trip units
+  - collective_bytes: per collective kind (all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute)
+  - flops is NOT parsed here (CPU HLO hides dots in custom-calls); the
+    trip-aware jaxpr profiler provides exact dot/conv FLOPs instead.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALL_ATTR_RE = re.compile(r"(condition|body|calls|branch_computations)=\{?%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    out_bytes: int
+    operands: list[str]
+    attrs: dict[str, str] = field(default_factory=dict)
+    f32_out: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    shapes: dict[str, int] = field(default_factory=dict)  # value -> bytes
+    max_const: int = 1  # largest small-int constant (trip-count candidate)
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    entry = ""
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        ms = _COMP_START_RE.match(line.strip())
+        if ms and line.rstrip().endswith("{"):
+            current = Computation(ms.group(1))
+            comps[current.name] = current
+            if line.lstrip().startswith("ENTRY"):
+                entry = current.name
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, kind, rest = m.groups()
+        out_b = _shape_bytes(type_str)
+        current.shapes[name] = out_b
+        operands = re.findall(r"%([\w.\-]+)", rest.split("),")[0])
+        attrs = {k: v for k, v in _CALL_ATTR_RE.findall(line)}
+        mc = _CONST_RE.search(line)
+        if mc:
+            current.max_const = max(current.max_const, int(mc.group(1)))
+        current.ops.append(
+            Op(name, kind, out_b, operands, attrs,
+               f32_out=type_str.lstrip().startswith("f32"))
+        )
+    return comps, entry
+
+
+_SKIP_KINDS = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "iota"}
+
+
+@dataclass
+class HloStats:
+    hbm_bytes: float = 0.0
+    collective_bytes: dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "HloStats", mult: float):
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = (
+                self.collective_bytes.get(k, 0.0) + v * mult
+            )
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def _analyze_comp(name: str, comps: dict[str, Computation],
+                  cache: dict[str, HloStats]) -> HloStats:
+    if name in cache:
+        return cache[name]
+    cache[name] = HloStats()  # cycle guard
+    comp = comps.get(name)
+    if comp is None:
+        return cache[name]
+    stats = HloStats()
+    for op in comp.ops:
+        if op.kind == "while":
+            body = op.attrs.get("body")
+            cond = op.attrs.get("condition")
+            trip = comps[cond].max_const if cond in comps else 1
+            if body:
+                stats.add(_analyze_comp(body, comps, cache), trip)
+            continue
+        if op.kind in ("call", "conditional", "custom-call"):
+            for key in ("calls", "branch_computations"):
+                sub = op.attrs.get(key)
+                if sub:
+                    stats.add(_analyze_comp(sub, comps, cache), 1.0)
+        if op.kind == "fusion":
+            # fused computation executes inside the op; traffic is the op's
+            # own operands/outputs (counted below) — do not recurse
+            pass
+        if op.kind in _SKIP_KINDS:
+            continue
+        if op.kind in ("dynamic-slice", "gather"):
+            # only the slice moves, not the (possibly huge stacked) operand
+            traffic = 2 * op.out_bytes
+        elif op.kind in ("dynamic-update-slice", "scatter"):
+            # in-place update: traffic ~ 2x the update operand
+            upd = (comp.shapes.get(op.operands[1], op.out_bytes)
+                   if len(op.operands) > 1 else op.out_bytes)
+            traffic = 2 * min(upd, op.out_bytes)
+        else:
+            in_bytes = sum(comp.shapes.get(o, 0) for o in op.operands)
+            traffic = op.out_bytes + in_bytes
+        stats.hbm_bytes += traffic
+        for coll in COLLECTIVES:
+            if op.kind == coll or op.kind.startswith(coll):
+                stats.collective_bytes[coll] = (
+                    stats.collective_bytes.get(coll, 0.0) + op.out_bytes
+                )
+    cache[name] = stats
+    return stats
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps, entry = parse_hlo(text)
+    if not entry:
+        # fall back: largest computation
+        entry = max(comps, key=lambda n: len(comps[n].ops)) if comps else ""
+    return _analyze_comp(entry, comps, {})
+
+
+def cpu_f32_upcast_bytes(text: str, min_bytes: int = 128 * 2**20) -> int:
+    """Bytes of large bf16->f32 staging buffers the CPU backend creates.
+
+    XLA:CPU has no native bf16 dot, so it upcasts dot operands to f32 and
+    hoists whole-weight-stack converts out of loops.  A TPU compile executes
+    bf16 directly in the MXU — these buffers do not exist there.  Summed so
+    the fit check can report a TPU-realistic peak alongside the raw one.
+    """
+    comps, entry = parse_hlo(text)
+    if not entry:
+        return 0
+    # count the ENTRY computation plus bodies of whiles launched from it
+    # (a convert hoisted out of the layer scan lives in the microbatch
+    # loop's body and persists across the whole inner scan)
+    scopes = {entry}
+    for op in comps[entry].ops:
+        if op.kind == "while" and op.attrs.get("body"):
+            scopes.add(op.attrs["body"])
+    total = 0
+    for scope in scopes:
+        for op in comps.get(scope, Computation("")).ops:
+            if op.kind != "convert" and not (
+                op.kind == "fusion" and "wrapped_convert" in op.name
+            ):
+                continue
+            if op.out_bytes < min_bytes or not op.f32_out:
+                continue
+            operand = op.operands[0] if op.operands else ""
+            if "param" not in operand and "get-tuple-element" not in operand:
+                continue
+            total += op.out_bytes
+    return total

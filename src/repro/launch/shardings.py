@@ -1,0 +1,290 @@
+"""Partition rules: param/state/input PartitionSpecs per (arch x shape x mesh).
+
+Strategy (DESIGN.md §4):
+  - batch        -> DP over ("pod","data")
+  - heads / kv_heads / mlp hidden / vocab / experts -> TP/EP over "model"
+  - fsdp_tp mode additionally shards each weight's non-TP dim over "data"
+    (FSDP; ZeRO falls out since optimizer state mirrors param specs)
+  - MQA decode (kv=1) shards the KV-cache *sequence* over "model"
+    (context-parallel cache); MLA shards the latent dim
+  - long_500k (batch=1) replicates batch; state shards over "model"
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig, SHAPES
+from repro.launch.mesh import batch_axes
+
+# (regex on param path, spec for the *unstacked* weight dims).
+# "F" = fsdp axis (-> "data" in fsdp_tp mode, None in tp mode);
+# "M" = model/TP axis. Stacked layer params get a leading None.
+_PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"embed/table$", ("M", "F")),  # vocab-parallel embedding
+    (r"frontend_proj$", ("F", "M")),
+    # attention
+    (r"attn/w[qkv]$", ("F", "M")),
+    (r"attn/wo$", ("M", "F")),
+    (r"attn/b[qkv]$", ("M",)),
+    (r"attn/bo$", (None,)),
+    (r"attn/[qk]_norm$", (None,)),
+    # xattn (whisper decoder cross-attention)
+    (r"xattn/w[qkv]$", ("F", "M")),
+    (r"xattn/wo$", ("M", "F")),
+    (r"xattn/b[qkv]$", ("M",)),
+    (r"xattn/bo$", (None,)),
+    # MLA
+    (r"attn/w_dq$", ("F", None)),
+    (r"attn/w_uq$", (None, "M")),
+    (r"attn/w_dkv$", ("F", None)),
+    (r"attn/w_u[kv]$", (None, "M")),
+    (r"attn/w_kr$", ("F", None)),
+    (r"attn/(q|kv)_norm$", (None,)),
+    # dense MLP
+    (r"mlp/w[gu]$", ("F", "M")),
+    (r"mlp/wd$", ("M", "F")),
+    (r"mlp/bu$", ("M",)),
+    (r"mlp/bd$", (None,)),
+    # MoE (experts over model = EP)
+    (r"moe/router$", ("F", None)),
+    (r"moe/w[gu]$", ("M", "F", None)),
+    (r"moe/wd$", ("M", None, "F")),
+    (r"moe/shared/w[gu]$", ("F", "M")),
+    (r"moe/shared/wd$", ("M", "F")),
+    # SSM (d_inner over model)
+    (r"ssm/in_proj$", ("F", "M")),
+    (r"ssm/conv_w$", (None, "M")),  # (k, di)
+    (r"ssm/conv_b$", ("M",)),  # (di,)
+    (r"ssm/x_proj$", ("M", None)),
+    (r"ssm/dt_proj$", (None, "M")),
+    (r"ssm/dt_bias$", ("M",)),
+    (r"ssm/A_log$", ("M", None)),
+    (r"ssm/D$", ("M",)),
+    (r"ssm/out_proj$", ("M", "F")),
+    # RWKV
+    (r"w[rkvg]$", ("F", "M")),
+    (r"(^|/)wo$", ("M", "F")),
+    (r"w_lora_a$", ("F", None)),
+    (r"w_lora_b$", (None, "M")),
+    (r"cm_[kr]$", ("F", "M")),
+    (r"cm_v$", ("M", "F")),
+    (r"/u$", (None, None)),
+]
+
+_STACKED_PREFIXES = ("layers/", "dense_layers/", "enc_layers/")
+
+
+def _axis(token: str | None, fsdp_axis):
+    if token == "M":
+        return "model"
+    if token == "F":
+        return fsdp_axis
+    return None
+
+
+def param_spec(name: str, ndim: int, mode: str,
+               fsdp_axes: tuple[str, ...] = ("data",)) -> P:
+    # FSDP must cover the pod axis too, or multi-pod keeps per-device
+    # param/optimizer memory flat (measured: llama4 train 41 GiB/dev on
+    # 2x16x16 before this)
+    fsdp_axis = fsdp_axes if mode == "fsdp_tp" else None
+    stacked = name.startswith(_STACKED_PREFIXES)
+    for pat, tokens in _PARAM_RULES:
+        if re.search(pat, name):
+            axes = [_axis(t, fsdp_axis) for t in tokens]
+            want = ndim - (1 if stacked else 0)
+            if len(axes) < want:  # rank mismatch -> pad with None
+                axes = axes + [None] * (want - len(axes))
+            axes = axes[:want]
+            return P(*(([None] if stacked else []) + axes))
+    # norms / scalars / unmatched 1D: replicate
+    return P(*([None] * ndim))
+
+
+def param_shardings(params_shape, mesh: Mesh, run: RunConfig):
+    """params_shape: pytree of ShapeDtypeStruct -> matching NamedShardings."""
+    fsdp_axes = batch_axes(mesh)  # ("data",) or ("pod","data")
+
+    def one(path, leaf):
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        return NamedSharding(
+            mesh, param_spec(name, len(leaf.shape), run.sharding, fsdp_axes)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# activations: logical axis rules for repro.common.axis_rules
+# ---------------------------------------------------------------------------
+
+
+def activation_rules(mesh: Mesh, run: RunConfig, *, decode_batch: int = 0,
+                     cfg: ArchConfig | None = None):
+    b_axes = batch_axes(mesh)
+    batch = b_axes if decode_batch != 1 else None
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    # forcing K kv-heads onto a TP axis that doesn't divide them makes GSPMD
+    # replicate the score tensors inside the attention loops (measured:
+    # a 4.3 GB all-gather PER CHUNK in backward for qwen3) — leave kv
+    # activations unconstrained unless divisible
+    kv_ok = cfg is None or (cfg.n_kv_heads % tp == 0)
+    heads_ok = cfg is None or (cfg.n_heads % tp == 0)
+    # decode with non-divisible kv heads: shard attention on head_dim so the
+    # q/k layout matches the dh-sharded KV cache (otherwise GSPMD replicates
+    # the cache per layer per token — measured 23 GB/step on granite-3-2b)
+    dh_mode = (
+        cfg is not None and run.mode == "decode" and not kv_ok
+        and cfg.d_head % tp == 0
+    )
+    return {
+        "batch": batch,
+        "seq": None,
+        "vocab": "model",
+        "heads": None if dh_mode else ("model" if heads_ok else None),
+        "kv_heads": "model" if kv_ok else None,
+        "head_dim": "model" if dh_mode else None,
+        "mlp": "model",
+        "experts": "model",
+        "residual_seq": "model" if run.seq_parallel else None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, run: RunConfig, mesh: Mesh):
+    """ShapeDtypeStruct stand-ins + shardings for a train/prefill batch."""
+    B, S = run.global_batch, run.seq_len
+    b_axes = batch_axes(mesh) if B > 1 else None
+    tok_len = S - (cfg.n_patches or 0)
+    dt_tok = jnp.int32
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, tok_len), dt_tok),
+        "labels": jax.ShapeDtypeStruct((B, tok_len), dt_tok),
+    }
+    shardings = {
+        "tokens": NamedSharding(mesh, P(b_axes, None)),
+        "labels": NamedSharding(mesh, P(b_axes, None)),
+    }
+    if cfg.family == "enc_dec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frames, cfg.d_model), jnp.bfloat16
+        )
+        shardings["frames"] = NamedSharding(mesh, P(b_axes, None, None))
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.bfloat16
+        )
+        shardings["patches"] = NamedSharding(mesh, P(b_axes, None, None))
+    if run.mode == "prefill":
+        specs.pop("labels")
+        shardings.pop("labels")
+    return specs, shardings
+
+
+def decode_state_shardings(state_shape, cfg: ArchConfig, run: RunConfig,
+                           mesh: Mesh):
+    """Shardings for the decode-state pytree (path-name based)."""
+    B = run.global_batch
+    b = batch_axes(mesh) if B > 1 else None
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+    def kv_cache_spec(shape):  # (L, B, S, K, dh)
+        _, _, S, K, dh = shape
+        if K % tp == 0:
+            return P(None, b, None, "model", None)
+        # seq-sharding breaks in-place cache updates (GSPMD full-remats the
+        # dynamic-update-slice); prefer head_dim for MQA / odd kv counts
+        if dh % tp == 0:
+            return P(None, b, None, None, "model")
+        if S % tp == 0:
+            return P(None, b, "model", None, None)
+        return P(None, b, None, None, None)
+
+    def one(path, leaf):
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        nd = len(leaf.shape)
+        if name.endswith("index"):
+            return NamedSharding(mesh, P(b))
+        if "cross_kv" in name:  # (L, B, F, K, dh)
+            K = leaf.shape[3]
+            return NamedSharding(
+                mesh,
+                P(None, b, None, "model" if K % tp == 0 else None, None),
+            )
+        leaf_name = name.split("/")[-1]
+        if leaf_name in ("k", "v", "k_dense", "v_dense", "k_moe", "v_moe"):
+            return NamedSharding(mesh, kv_cache_spec(leaf.shape))
+        if name.endswith("ckv"):  # MLA latent (L,B,S,kl)
+            return NamedSharding(mesh, P(None, b, None, "model"))
+        if name.endswith("kr"):
+            return NamedSharding(mesh, P(None, b, None, None))
+        if name.endswith("/h"):  # SSM state (L,B,di,N)
+            return NamedSharding(mesh, P(None, b, "model", None))
+        if name.endswith("conv"):  # (L,B,k,di)
+            return NamedSharding(mesh, P(None, b, None, "model"))
+        if name.endswith("/s"):  # RWKV state (L,B,H,N,N)
+            return NamedSharding(mesh, P(None, b, "model", None, None))
+        if name.endswith("_prev"):  # (L,B,D)
+            return NamedSharding(mesh, P(None, b, None))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)
+
+
+def token_sharding(run: RunConfig, mesh: Mesh):
+    b = batch_axes(mesh) if run.global_batch > 1 else None
+    return NamedSharding(mesh, P(b, None))
+
+
+# ---------------------------------------------------------------------------
+# per-cell run configs (memory-fit decisions recorded in EXPERIMENTS.md)
+# ---------------------------------------------------------------------------
+
+_BIG_ARCHS = {"llama4-maverick-400b-a17b", "deepseek-v2-236b", "granite-34b",
+              "internvl2-26b"}
+
+
+def default_run(cfg: ArchConfig, shape_name: str) -> RunConfig:
+    kw = dict(SHAPES[shape_name])
+    run = RunConfig(**kw)
+    big = cfg.name in _BIG_ARCHS
+    if run.mode == "train":
+        huge_moe = cfg.name in ("llama4-maverick-400b-a17b",
+                                "deepseek-v2-236b")
+        run = run.replace(
+            sharding="fsdp_tp",
+            seq_parallel=True,
+            loss_chunk=512,
+            attn_chunk=512,
+            remat="full",
+            microbatches=8 if huge_moe else 4,
+            moment_dtype="bfloat16" if big else "float32",
+        )
+    elif run.mode == "prefill":
+        run = run.replace(
+            sharding="fsdp_tp" if big else "tp",
+            seq_parallel=True,
+            attn_chunk=1024,
+            remat="none",
+        )
+    else:  # decode
+        run = run.replace(
+            sharding="fsdp_tp" if cfg.name in (
+                "llama4-maverick-400b-a17b", "deepseek-v2-236b"
+            ) else "tp",
+            remat="none",
+        )
+    return run

@@ -1,0 +1,65 @@
+"""Training launcher: ``python -m repro.launch.train --arch granite-3-2b ...``
+
+On this CPU container use --smoke for the reduced config; on a real pod the
+same entrypoint builds the 16x16 (or 2x16x16 with --multi-pod) mesh and
+shards with the production rules.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+from repro.configs import get_arch, list_archs, smoke_variant
+from repro.configs.base import RunConfig
+from repro.launch.shardings import default_run
+from repro.runtime.trainer import TrainerConfig, train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shapes (CPU-runnable)")
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--level", default="v4", help="MARVEL extension level")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO)
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+        run = RunConfig(
+            seq_len=args.seq_len or 128, global_batch=args.global_batch or 4,
+            attn_chunk=32, loss_chunk=32, ssm_chunk=32, wkv_chunk=16,
+            extension_level=args.level,
+        )
+        mesh = None
+    else:
+        run = default_run(cfg, "train_4k")
+        if args.seq_len:
+            run = run.replace(seq_len=args.seq_len)
+        if args.global_batch:
+            run = run.replace(global_batch=args.global_batch)
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+
+    tc = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        grad_compression=args.grad_compression,
+    )
+    result = train(cfg, run, tc, mesh=mesh)
+    print(f"finished at step {result.final_step}; "
+          f"last loss {result.losses[-1]:.4f}; "
+          f"resumed_from={result.resumed_from}; "
+          f"stragglers={len(result.straggler_steps)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.transformer import (  # noqa: F401
+    init_params,
+    forward_lm,
+    loss_fn,
+    init_decode_state,
+    decode_step,
+)

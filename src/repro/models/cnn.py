@@ -1,0 +1,404 @@
+"""The paper's own model class: CNNs, for the faithful reproduction.
+
+LeNet-5* follows Table 9 exactly; the other five follow the paper's setup:
+64x64x3 inputs, binary Car/NotCar head (transfer-learning head, paper §II.A.2),
+inference graphs with BN folded to affine scale/shift (post-training deploy).
+Convs and dense layers go through the dispatch patterns so the MARVEL flow
+(profile -> extensions -> rewrite) applies to them exactly as to the LMs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.models.layers import ACTS, dense_init
+
+
+# ---------------------------------------------------------------------------
+# primitives (dispatch-routed)
+# ---------------------------------------------------------------------------
+
+
+def _conv_ref(x, w, b, *, stride, padding, groups, act):
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=dn,
+        feature_group_count=groups,
+    )
+    if b is not None:
+        y = y + b
+    return ACTS[act](y)
+
+
+def conv2d(x, w, b=None, *, stride=1, padding="SAME", groups=1, act="none"):
+    """Conv + bias + act: a fusedmac site (the paper's inner conv loops)."""
+    return dispatch.call(
+        "fused_conv", _conv_ref, x, w, b,
+        stride=stride, padding=padding, groups=groups, act=act,
+    )
+
+
+def _dense_ref(x, w, b, *, act):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return ACTS[act](y)
+
+
+def dense(x, w, b=None, *, act="none"):
+    return dispatch.call("matmul_epilogue", _dense_ref, x, w, b, act=act)
+
+
+def maxpool(x, k=2, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID"
+    )
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def avgpool2(x):
+    s = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    return s / 4.0
+
+
+def _affine(x, s, b):  # folded batchnorm
+    return x * s + b
+
+
+# ---------------------------------------------------------------------------
+# parameter init helpers
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(key, kh, kw, cin, cout, groups=1):
+    fan_in = kh * kw * cin // groups
+    w = jax.random.normal(key, (kh, kw, cin // groups, cout)) / math.sqrt(fan_in)
+    return w.astype(jnp.float32)
+
+
+def _bn_init(c):
+    return {"s": jnp.ones((c,), jnp.float32), "b": jnp.zeros((c,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5* (paper Table 9)
+# ---------------------------------------------------------------------------
+
+
+def lenet5_init(key):
+    ks = jax.random.split(key, 3)
+    return {
+        "c1": {"w": _conv_init(ks[0], 6, 6, 1, 12), "b": jnp.zeros((12,))},
+        "c2": {"w": _conv_init(ks[1], 6, 6, 12, 32), "b": jnp.zeros((32,))},
+        "fc": {"w": dense_init(ks[2], (512, 10), jnp.float32),
+               "b": jnp.zeros((10,))},
+    }
+
+
+def lenet5_apply(p, x):
+    """x: (B, 28, 28, 1) -> (B, 10)."""
+    x = conv2d(x, p["c1"]["w"], p["c1"]["b"], stride=2, padding="VALID",
+               act="relu")  # -> 12x12x12
+    x = conv2d(x, p["c2"]["w"], p["c2"]["b"], stride=2, padding="VALID",
+               act="relu")  # -> 4x4x32
+    x = x.reshape(x.shape[0], -1)
+    return dense(x, p["fc"]["w"], p["fc"]["b"])
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV1 (depthwise separable; width 1.0, 64x64 input, 2-class head)
+# ---------------------------------------------------------------------------
+
+_MBV1_CFG = [  # (stride, cout) for each dw-separable block
+    (1, 64), (2, 128), (1, 128), (2, 256), (1, 256),
+    (2, 512), (1, 512), (1, 512), (1, 512), (1, 512), (1, 512),
+    (2, 1024), (1, 1024),
+]
+
+
+def mobilenetv1_init(key):
+    ks = iter(jax.random.split(key, 64))
+    p = {"stem": {"w": _conv_init(next(ks), 3, 3, 3, 32), "bn": _bn_init(32)}}
+    cin = 32
+    blocks = []
+    for stride, cout in _MBV1_CFG:
+        blocks.append({
+            "dw": {"w": _conv_init(next(ks), 3, 3, cin, cin, groups=cin),
+                   "bn": _bn_init(cin)},
+            "pw": {"w": _conv_init(next(ks), 1, 1, cin, cout),
+                   "bn": _bn_init(cout)},
+        })
+        cin = cout
+    p["blocks"] = blocks
+    p["head"] = {"w": dense_init(next(ks), (cin, 2), jnp.float32),
+                 "b": jnp.zeros((2,))}
+    return p
+
+
+def mobilenetv1_apply(p, x):
+    x = conv2d(x, p["stem"]["w"], stride=2)
+    x = ACTS["relu"](_affine(x, p["stem"]["bn"]["s"], p["stem"]["bn"]["b"]))
+    for blk, (stride, _) in zip(p["blocks"], _MBV1_CFG):
+        cin = blk["dw"]["w"].shape[-1]
+        x = conv2d(x, blk["dw"]["w"], stride=stride, groups=cin)
+        x = ACTS["relu"](_affine(x, blk["dw"]["bn"]["s"], blk["dw"]["bn"]["b"]))
+        x = conv2d(x, blk["pw"]["w"])
+        x = ACTS["relu"](_affine(x, blk["pw"]["bn"]["s"], blk["pw"]["bn"]["b"]))
+    x = avgpool_global(x)
+    return dense(x, p["head"]["w"], p["head"]["b"])
+
+
+# ---------------------------------------------------------------------------
+# VGG16 (64x64 input)
+# ---------------------------------------------------------------------------
+
+_VGG_CFG = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+            512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def vgg16_init(key):
+    ks = iter(jax.random.split(key, 32))
+    convs = []
+    cin = 3
+    for c in _VGG_CFG:
+        if c == "M":
+            continue
+        convs.append({"w": _conv_init(next(ks), 3, 3, cin, c),
+                      "b": jnp.zeros((c,))})
+        cin = c
+    return {
+        "convs": convs,
+        "fc1": {"w": dense_init(next(ks), (512 * 2 * 2, 512), jnp.float32),
+                "b": jnp.zeros((512,))},
+        "fc2": {"w": dense_init(next(ks), (512, 2), jnp.float32),
+                "b": jnp.zeros((2,))},
+    }
+
+
+def vgg16_apply(p, x):
+    ci = 0
+    for c in _VGG_CFG:
+        if c == "M":
+            x = maxpool(x)
+        else:
+            blk = p["convs"][ci]
+            x = conv2d(x, blk["w"], blk["b"], act="relu")
+            ci += 1
+    x = x.reshape(x.shape[0], -1)
+    x = dense(x, p["fc1"]["w"], p["fc1"]["b"], act="relu")
+    return dense(x, p["fc2"]["w"], p["fc2"]["b"])
+
+
+# ---------------------------------------------------------------------------
+# ResNet50 (bottlenecks; 64x64 input)
+# ---------------------------------------------------------------------------
+
+_R50_STAGES = [(3, 64, 1), (4, 128, 2), (6, 256, 2), (3, 512, 2)]
+
+
+def resnet50_init(key):
+    ks = iter(jax.random.split(key, 256))
+    p = {"stem": {"w": _conv_init(next(ks), 7, 7, 3, 64), "bn": _bn_init(64)}}
+    cin = 64
+    stages = []
+    for n_blocks, width, stride in _R50_STAGES:
+        blocks = []
+        for b in range(n_blocks):
+            s = stride if b == 0 else 1
+            cout = width * 4
+            blk = {
+                "c1": {"w": _conv_init(next(ks), 1, 1, cin, width),
+                       "bn": _bn_init(width)},
+                "c2": {"w": _conv_init(next(ks), 3, 3, width, width),
+                       "bn": _bn_init(width)},
+                "c3": {"w": _conv_init(next(ks), 1, 1, width, cout),
+                       "bn": _bn_init(cout)},
+            }
+            if s != 1 or cin != cout:
+                blk["proj"] = {"w": _conv_init(next(ks), 1, 1, cin, cout),
+                               "bn": _bn_init(cout)}
+            blocks.append(blk)
+            cin = cout
+        stages.append(blocks)
+    p["stages"] = stages
+    p["head"] = {"w": dense_init(next(ks), (cin, 2), jnp.float32),
+                 "b": jnp.zeros((2,))}
+    return p
+
+
+def resnet50_apply(p, x):
+    x = conv2d(x, p["stem"]["w"], stride=2)
+    x = ACTS["relu"](_affine(x, p["stem"]["bn"]["s"], p["stem"]["bn"]["b"]))
+    x = maxpool(x, 3, 2)
+    for stage, (n_blocks, width, stage_stride) in zip(p["stages"], _R50_STAGES):
+        for bi, blk in enumerate(stage):
+            s = stage_stride if bi == 0 else 1
+            res = x
+            y = conv2d(x, blk["c1"]["w"])
+            y = ACTS["relu"](_affine(y, blk["c1"]["bn"]["s"], blk["c1"]["bn"]["b"]))
+            y = conv2d(y, blk["c2"]["w"], stride=s)
+            y = ACTS["relu"](_affine(y, blk["c2"]["bn"]["s"], blk["c2"]["bn"]["b"]))
+            y = conv2d(y, blk["c3"]["w"])
+            y = _affine(y, blk["c3"]["bn"]["s"], blk["c3"]["bn"]["b"])
+            if "proj" in blk:
+                res = conv2d(x, blk["proj"]["w"], stride=s)
+                res = _affine(res, blk["proj"]["bn"]["s"], blk["proj"]["bn"]["b"])
+            x = ACTS["relu"](res + y)
+    x = avgpool_global(x)
+    return dense(x, p["head"]["w"], p["head"]["b"])
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2 (inverted residuals)
+# ---------------------------------------------------------------------------
+
+_MBV2_CFG = [  # (expand, cout, n, stride)
+    (1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2),
+    (6, 64, 4, 2), (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1),
+]
+# flattened per-block static (expand, stride) list
+_MBV2_FLAT = [
+    (expand, stride if b == 0 else 1)
+    for expand, cout, n, stride in _MBV2_CFG
+    for b in range(n)
+]
+
+
+def mobilenetv2_init(key):
+    ks = iter(jax.random.split(key, 256))
+    p = {"stem": {"w": _conv_init(next(ks), 3, 3, 3, 32), "bn": _bn_init(32)}}
+    cin = 32
+    blocks = []
+    for expand, cout, n, stride in _MBV2_CFG:
+        for b in range(n):
+            s = stride if b == 0 else 1
+            mid = cin * expand
+            blk = {}
+            if expand != 1:
+                blk["ex"] = {"w": _conv_init(next(ks), 1, 1, cin, mid),
+                             "bn": _bn_init(mid)}
+            blk["dw"] = {"w": _conv_init(next(ks), 3, 3, mid, mid, groups=mid),
+                         "bn": _bn_init(mid)}
+            blk["pw"] = {"w": _conv_init(next(ks), 1, 1, mid, cout),
+                         "bn": _bn_init(cout)}
+            blocks.append(blk)
+            cin = cout
+    p["blocks"] = blocks
+    p["last"] = {"w": _conv_init(next(ks), 1, 1, cin, 1280),
+                 "bn": _bn_init(1280)}
+    p["head"] = {"w": dense_init(next(ks), (1280, 2), jnp.float32),
+                 "b": jnp.zeros((2,))}
+    return p
+
+
+def mobilenetv2_apply(p, x):
+    x = conv2d(x, p["stem"]["w"], stride=2)
+    x = jnp.minimum(ACTS["relu"](
+        _affine(x, p["stem"]["bn"]["s"], p["stem"]["bn"]["b"])), 6.0)
+    for blk, (expand, stride) in zip(p["blocks"], _MBV2_FLAT):
+        res = x
+        y = x
+        if expand != 1:
+            y = conv2d(y, blk["ex"]["w"])
+            y = jnp.minimum(ACTS["relu"](
+                _affine(y, blk["ex"]["bn"]["s"], blk["ex"]["bn"]["b"])), 6.0)
+        mid = blk["dw"]["w"].shape[-1]
+        y = conv2d(y, blk["dw"]["w"], stride=stride, groups=mid)
+        y = jnp.minimum(ACTS["relu"](
+            _affine(y, blk["dw"]["bn"]["s"], blk["dw"]["bn"]["b"])), 6.0)
+        y = conv2d(y, blk["pw"]["w"])
+        y = _affine(y, blk["pw"]["bn"]["s"], blk["pw"]["bn"]["b"])
+        if stride == 1 and res.shape == y.shape:
+            y = y + res
+        x = y
+    x = conv2d(x, p["last"]["w"])
+    x = jnp.minimum(ACTS["relu"](
+        _affine(x, p["last"]["bn"]["s"], p["last"]["bn"]["b"])), 6.0)
+    x = avgpool_global(x)
+    return dense(x, p["head"]["w"], p["head"]["b"])
+
+
+# ---------------------------------------------------------------------------
+# DenseNet121 (growth 32)
+# ---------------------------------------------------------------------------
+
+_DN_CFG = [6, 12, 24, 16]
+_GROWTH = 32
+
+
+def densenet121_init(key):
+    ks = iter(jax.random.split(key, 512))
+    p = {"stem": {"w": _conv_init(next(ks), 7, 7, 3, 64), "bn": _bn_init(64)}}
+    cin = 64
+    blocks = []
+    for bi, n_layers in enumerate(_DN_CFG):
+        layers_ = []
+        for _ in range(n_layers):
+            layers_.append({
+                "bn1": _bn_init(cin),
+                "c1": {"w": _conv_init(next(ks), 1, 1, cin, 4 * _GROWTH)},
+                "bn2": _bn_init(4 * _GROWTH),
+                "c2": {"w": _conv_init(next(ks), 3, 3, 4 * _GROWTH, _GROWTH)},
+            })
+            cin += _GROWTH
+        block = {"layers": layers_}
+        if bi < len(_DN_CFG) - 1:
+            block["trans"] = {"bn": _bn_init(cin),
+                              "w": _conv_init(next(ks), 1, 1, cin, cin // 2)}
+            cin = cin // 2
+        blocks.append(block)
+    p["blocks"] = blocks
+    p["bn_f"] = _bn_init(cin)
+    p["head"] = {"w": dense_init(next(ks), (cin, 2), jnp.float32),
+                 "b": jnp.zeros((2,))}
+    return p
+
+
+def densenet121_apply(p, x):
+    x = conv2d(x, p["stem"]["w"], stride=2)
+    x = ACTS["relu"](_affine(x, p["stem"]["bn"]["s"], p["stem"]["bn"]["b"]))
+    x = maxpool(x, 3, 2)
+    for block in p["blocks"]:
+        for lyr in block["layers"]:
+            y = ACTS["relu"](_affine(x, lyr["bn1"]["s"], lyr["bn1"]["b"]))
+            y = conv2d(y, lyr["c1"]["w"])
+            y = ACTS["relu"](_affine(y, lyr["bn2"]["s"], lyr["bn2"]["b"]))
+            y = conv2d(y, lyr["c2"]["w"])
+            x = jnp.concatenate([x, y], axis=-1)
+        if "trans" in block:
+            x = ACTS["relu"](
+                _affine(x, block["trans"]["bn"]["s"], block["trans"]["bn"]["b"])
+            )
+            x = conv2d(x, block["trans"]["w"])
+            x = avgpool2(x)
+    x = ACTS["relu"](_affine(x, p["bn_f"]["s"], p["bn_f"]["b"]))
+    x = avgpool_global(x)
+    return dense(x, p["head"]["w"], p["head"]["b"])
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+CNN_MODELS = {
+    "lenet5": (lenet5_init, lenet5_apply, (28, 28, 1)),
+    "mobilenetv1": (mobilenetv1_init, mobilenetv1_apply, (64, 64, 3)),
+    "resnet50": (resnet50_init, resnet50_apply, (64, 64, 3)),
+    "vgg16": (vgg16_init, vgg16_apply, (64, 64, 3)),
+    "mobilenetv2": (mobilenetv2_init, mobilenetv2_apply, (64, 64, 3)),
+    "densenet121": (densenet121_init, densenet121_apply, (64, 64, 3)),
+}
+
+
+def get_cnn(name: str):
+    init, apply, in_shape = CNN_MODELS[name]
+    return init, apply, in_shape

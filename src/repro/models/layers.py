@@ -1,0 +1,524 @@
+"""Core transformer building blocks (pure-functional, pytree params).
+
+Every fusable compute pattern goes through ``repro.core.dispatch.call`` so the
+MARVEL extension machinery can substitute fused kernels without touching model
+code (the chess_rewrite property).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import shd
+from repro.core import dispatch
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) == 2 else math.prod(shape[:-1])
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def _rms_norm_ref(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    return dispatch.call("rms_norm", _rms_norm_ref, x, scale, eps)
+
+
+def _residual_rmsnorm_ref(res, x, scale, eps):
+    """Fusable add2i-analogue: residual add + RMSNorm in one pattern.
+
+    Returns (new_residual, normed) — two "register" updates, one pass.
+    """
+    new_res = res + x
+    return new_res, _rms_norm_ref(new_res, scale, eps)
+
+
+def residual_rmsnorm(res, x, scale, eps=1e-6):
+    return dispatch.call("residual_rmsnorm", _residual_rmsnorm_ref, res, x, scale, eps)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# matmul patterns (mac / fusedmac analogues)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_ref(x, w):
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+def mac_matmul(x, w, quant=None):
+    """GEMM through the mac extension point.
+
+    ``quant`` (optional) is a dict {"w_int8", "scale"} from repro.quant — the
+    int8 path is the direct analogue of the paper's TFLite-int8 + mac flow.
+    """
+    if quant is not None:
+        def _quant_ref(x, q):
+            acc = jnp.einsum(
+                "...d,df->...f",
+                x.astype(jnp.bfloat16),
+                q["w_int8"].astype(jnp.bfloat16),
+            )
+            return (acc * q["scale"]).astype(x.dtype)
+
+        return dispatch.call("mac_matmul_int8", _quant_ref, x, quant)
+    return dispatch.call("mac_matmul", _matmul_ref, x, w)
+
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    # plain max (not the custom_jvp wrapper) so the chess_rewrite-analogue
+    # peephole pass sees the dot->add->max instruction group
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "none": lambda x: x,
+}
+
+
+def _matmul_epilogue_ref(x, w, b, act):
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b
+    return ACTS[act](y)
+
+
+def matmul_epilogue(x, w, b=None, act="none"):
+    """fusedmac analogue: GEMM + bias + activation as one pattern."""
+    return dispatch.call("matmul_epilogue", _matmul_epilogue_ref, x, w, b, act)
+
+
+# ---------------------------------------------------------------------------
+# embeddings & RoPE
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab, d_model, dtype):
+    return {"table": dense_init(key, (vocab, d_model), dtype, scale=1.0)}
+
+
+def embed_lookup(params, tokens):
+    x = jnp.take(params["table"], tokens, axis=0)
+    return shd(x, "batch", "seq", None)
+
+
+def embed_logits(params, x):
+    logits = jnp.einsum("...d,vd->...v", x, params["table"])
+    return shd(logits, "batch", "seq", "vocab")
+
+
+def rope_freqs(d_head, theta):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., S, H, dh) rotate-half RoPE; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq, d_model, dtype=jnp.float32):
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d_model, 2) * (-math.log(10000.0) / d_model))
+    pe = jnp.zeros((seq, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (naive / chunked-flash / local) — zol analogue is the chunked path
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _naive_attention(q, k, v, *, causal, q_offset=0, kv_len=None):
+    """q: (B,Sq,K,G,dh) grouped; k,v: (B,Skv,K,dh). Materializes Sq×Skv."""
+    B, Sq, K, G, dh = q.shape
+    Skv = k.shape[1]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(dh)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Skv)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_len is not None:
+        valid = jnp.arange(Skv)[None, :] < kv_len[:, None]  # (B, Skv)
+        scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out
+
+
+def _chunked_attention(q, k, v, *, causal, q_offset=0, chunk=512, kv_len=None):
+    """Streaming-softmax attention: scan over KV chunks, O(Sq·chunk) temps.
+
+    Same schedule a TPU flash kernel pipelines through VMEM — the zol
+    (zero-overhead loop) analogue: loop bookkeeping lives in the scan/grid,
+    not in per-iteration scalar code.
+
+    For the differentiable path use :func:`chunked_attention_cvjp`, which
+    adds a flash-style custom VJP (recompute scores per chunk in backward,
+    save only q/k/v/out/lse — plain autodiff through this scan stores every
+    chunk's softmax stats, measured GBs/device on the 4k-train cells).
+    """
+    B, Sq, K, G, dh = q.shape
+    dv = v.shape[-1]  # may differ from dh (MLA: k=192, v=128)
+    Skv = k.shape[1]
+    chunk = min(chunk, Skv)
+    n_chunks = (Skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, K, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, dv).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(Sq) + q_offset
+    scale = 1.0 / math.sqrt(dh)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        ci, kci, vci = xs
+        kpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q, kci).astype(jnp.float32) * scale
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask = qpos[:, None] >= kpos[None, :]
+        mask = jnp.logical_and(mask, (kpos < Skv)[None, :])
+        if kv_len is not None:
+            mask = jnp.logical_and(
+                mask[None], (kpos[None, :] < kv_len[:, None])[:, None, :]
+            )
+            s = jnp.where(mask[:, None, None], s, NEG_INF)
+        else:
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vci.dtype), vci)
+        acc = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, K, G, Sq, dv), jnp.float32)
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,Sq,K,G,dv)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B,K,G,Sq)
+    return out, lse
+
+
+def _chunk_kv(k, chunk):
+    B, Skv, K, d = k.shape
+    n_chunks = (Skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return k.reshape(B, n_chunks, chunk, K, d).transpose(1, 0, 2, 3, 4)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def chunked_attention_cvjp(q, k, v, causal, q_offset, chunk):
+    out, _ = _chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                chunk=chunk)
+    return out
+
+
+def _cvjp_fwd(q, k, v, causal, q_offset, chunk):
+    out, lse = _chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                  chunk=chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _cvjp_bwd(causal, q_offset, chunk, res, dout):
+    """Flash-style backward: recompute per-chunk probabilities, accumulate
+    dq across chunks, emit dk/dv per chunk. Saves O(S) not O(S x chunks)."""
+    q, k, v, out, lse = res
+    B, Sq, K, G, dh = q.shape
+    Skv = k.shape[1]
+    dv_dim = v.shape[-1]
+    chunk = min(chunk, Skv)
+    scale = 1.0 / math.sqrt(dh)
+    kc = _chunk_kv(k, chunk)
+    vc = _chunk_kv(v, chunk)
+    n_chunks = kc.shape[0]
+    qpos = jnp.arange(Sq) + q_offset
+    do = dout.astype(jnp.float32).transpose(0, 2, 3, 1, 4)  # (B,K,G,Sq,dv)
+    o32 = out.astype(jnp.float32).transpose(0, 2, 3, 1, 4)
+    Dsum = jnp.sum(do * o32, axis=-1)  # (B,K,G,Sq)
+    qg = q.astype(jnp.float32).transpose(0, 2, 3, 1, 4)  # (B,K,G,Sq,dh)
+
+    def body(dq_acc, xs):
+        ci, k_ci, v_ci = xs  # (B,chunk,K,dh/dv)
+        kpos = ci * chunk + jnp.arange(chunk)
+        k32 = k_ci.astype(jnp.float32)
+        v32 = v_ci.astype(jnp.float32)
+        s = jnp.einsum("bkgqd,bskd->bkgqs", qg, k32) * scale
+        mask = (kpos < Skv)[None, :]
+        if causal:
+            mask = jnp.logical_and(mask, qpos[:, None] >= kpos[None, :])
+        p = jnp.where(mask[None, None, None],
+                      jnp.exp(s - lse[..., None]), 0.0)
+        dv_ci = jnp.einsum("bkgqs,bkgqd->bskd", p, do)
+        dp = jnp.einsum("bkgqd,bskd->bkgqs", do, v32)
+        ds = p * (dp - Dsum[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bkgqs,bskd->bkgqd", ds, k32)
+        dk_ci = jnp.einsum("bkgqs,bkgqd->bskd", ds, qg)
+        return dq_acc, (dk_ci, dv_ci)
+
+    dq0 = jnp.zeros((B, K, G, Sq, dh), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(
+        body, dq0, (jnp.arange(n_chunks), kc, vc)
+    )
+    dq = dq.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, K, dh)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, K, dv_dim)
+    return dq, dk[:, :Skv].astype(k.dtype), dv[:, :Skv].astype(v.dtype)
+
+
+chunked_attention_cvjp.defvjp(_cvjp_fwd, _cvjp_bwd)
+
+
+def _local_attention(q, k, v, *, window, q_offset=0):
+    """Blocked sliding-window (causal) attention: block + previous block,
+    scanned block-by-block so only one block's scores are live at a time
+    (all-blocks-at-once materializes B*S*heads*2W scores — measured 13+ GB
+    per device at 32k). Exact for window <= block size (hymba SWA).
+    """
+    B, Sq, K, G, dh = q.shape
+    blk = window
+    n_blk = (Sq + blk - 1) // blk
+    pad = n_blk * blk - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = n_blk * blk
+    qb = q.reshape(B, n_blk, blk, K, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, n_blk, blk, K, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blk, blk, K, dh).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(dh)
+    qpos = jnp.arange(blk)
+    kpos = jnp.arange(2 * blk) - blk
+    mask = (qpos[:, None] >= kpos[None, :]) & (
+        (qpos[:, None] - kpos[None, :]) < window
+    )
+    mask0 = mask & (kpos[None, :] >= 0)  # block 0 has no previous block
+
+    def body(prev_kv, xs):
+        k_prev, v_prev = prev_kv
+        bi, q_i, k_i, v_i = xs
+        kk = jnp.concatenate([k_prev, k_i], axis=1)  # (B, 2*blk, K, dh)
+        vv = jnp.concatenate([v_prev, v_i], axis=1)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q_i, kk).astype(jnp.float32)
+        s = s * scale
+        m = jnp.where(bi > 0, mask, mask0)
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(vv.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p, vv)
+        return (k_i, v_i), o
+
+    init = (jnp.zeros_like(kb[0]), jnp.zeros_like(vb[0]))
+    _, outs = jax.lax.scan(body, init, (jnp.arange(n_blk), qb, kb, vb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K, G, dh)
+    return out[:, :Sq]
+
+
+def _flash_attention_ref(q, k, v, *, causal, q_offset=0, impl="chunked",
+                         chunk=512, window=None, kv_len=None):
+    if window is not None:
+        return _local_attention(q, k, v, window=window, q_offset=q_offset)
+    if impl == "naive":
+        return _naive_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                kv_len=kv_len)
+    if kv_len is not None:  # ragged decode path, not differentiated
+        return _chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                  chunk=chunk, kv_len=kv_len)[0]
+    return chunked_attention_cvjp(q, k, v, causal, q_offset, chunk)
+
+
+def attention_core(q, k, v, **kw):
+    """Grouped attention through the zol extension point.
+
+    q: (B,Sq,K,G,dh); k,v: (B,Skv,K,dh).
+    """
+    return dispatch.call("flash_attention", _flash_attention_ref, q, k, v, **kw)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (GQA, optional qk_norm / biases / RoPE)
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, dtype):
+    ks = jax.random.split(key, 8)
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": dense_init(ks[0], (d, H * dh), dtype),
+        "wk": dense_init(ks[1], (d, K * dh), dtype),
+        "wv": dense_init(ks[2], (d, K * dh), dtype),
+        "wo": dense_init(ks[3], (H * dh, d), dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((K * dh,), dtype)
+        p["bv"] = jnp.zeros((K * dh,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = matmul_epilogue(x, p["wq"], p.get("bq"))
+    k = matmul_epilogue(x, p["wk"], p.get("bk"))
+    v = matmul_epilogue(x, p["wv"], p.get("bv"))
+    q = shd(q.reshape(B, S, H, dh), "batch", "seq", "heads", "head_dim")
+    k = shd(k.reshape(B, S, K, dh), "batch", "seq", "kv_heads", "head_dim")
+    v = shd(v.reshape(B, S, K, dh), "batch", "seq", "kv_heads", "head_dim")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(p, x, cfg, *, positions=None, causal=True, window=None,
+              attn_impl="chunked", chunk=512):
+    B, S, _ = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    qg = q.reshape(B, S, K, H // K, dh)
+    out = attention_core(qg, k, v, causal=causal, impl=attn_impl,
+                         chunk=chunk, window=window)
+    out = out.reshape(B, S, H * dh)
+    out = matmul_epilogue(out, p["wo"], p.get("bo"))
+    return shd(out, "batch", "seq", None)
+
+
+def cross_attention(p, x, enc_kv, cfg, attn_impl="chunked", chunk=512):
+    """x: decoder stream (B,S,d); enc_kv: (k,v) precomputed (B,Se,K,dh)."""
+    B, S, _ = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = matmul_epilogue(x, p["wq"], p.get("bq")).reshape(B, S, H, dh)
+    k, v = enc_kv
+    qg = q.reshape(B, S, K, H // K, dh)
+    out = attention_core(qg, k, v, causal=False, impl=attn_impl, chunk=chunk)
+    out = out.reshape(B, S, H * dh)
+    return matmul_epilogue(out, p["wo"], p.get("bo"))
+
+
+def encoder_kv(p, enc_out, cfg):
+    B, Se, _ = enc_out.shape
+    K, dh = cfg.n_kv_heads, cfg.d_head
+    k = matmul_epilogue(enc_out, p["wk"], p.get("bk")).reshape(B, Se, K, dh)
+    v = matmul_epilogue(enc_out, p["wv"], p.get("bv")).reshape(B, Se, K, dh)
+    return k, v
+
+
+def attention_decode(p, x, cache, cache_index, cfg, *, window=None):
+    """Single-token decode. x: (B,1,d); cache: {"k","v"} (B,Smax,K,dh).
+
+    Returns (out, new_cache). With ``window`` the cache is a rolling buffer of
+    size window (hymba SWA); otherwise a full-length buffer.
+    """
+    B = x.shape[0]
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    positions = cache_index[:, None] if cfg.rope else None
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    Smax = cache["k"].shape[1]
+    slot = cache_index % Smax if window is not None else cache_index
+    k_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
+        cache["k"], k, slot
+    )
+    v_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
+        cache["v"], v, slot
+    )
+    kv_len = jnp.minimum(cache_index + 1, Smax)
+    qg = q.reshape(B, 1, K, H // K, dh)
+    out = attention_core(qg, k_cache, v_cache, causal=False, impl="naive",
+                         kv_len=kv_len)
+    out = out.reshape(B, 1, H * dh)
+    out = matmul_epilogue(out, p["wo"], p.get("bo"))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg, dtype, d_ff=None):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_gated:
+        return {
+            "wg": dense_init(ks[0], (d, f), dtype),
+            "wu": dense_init(ks[1], (d, f), dtype),
+            "wd": dense_init(ks[2], (f, d), dtype),
+        }
+    p = {
+        "wu": dense_init(ks[0], (d, f), dtype),
+        "wd": dense_init(ks[1], (f, d), dtype),
+    }
+    if cfg.attn_bias:
+        p["bu"] = jnp.zeros((f,), dtype)
+        p["bd"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def mlp(p, x, cfg):
+    if cfg.mlp_gated:
+        g = matmul_epilogue(x, p["wg"], None, cfg.act)  # fusedmac pattern
+        u = mac_matmul(x, p["wu"])
+        h = shd(g * u, "batch", "seq", "mlp")
+        return shd(mac_matmul(h, p["wd"]), "batch", "seq", None)
+    h = matmul_epilogue(x, p["wu"], p.get("bu"), cfg.act)
+    h = shd(h, "batch", "seq", "mlp")
+    return shd(matmul_epilogue(h, p["wd"], p.get("bd")), "batch", "seq", None)

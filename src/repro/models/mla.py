@@ -1,0 +1,115 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a ``kv_lora`` (512) latent per token; decode uses the
+*absorbed* formulation so the cache is the latent (+ shared rope key), which
+is what makes the deepseek-v2 decode roofline memory-light.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import shd
+from repro.models.layers import (
+    apply_rope, attention_core, dense_init, mac_matmul, matmul_epilogue,
+    rms_norm,
+)
+
+
+def mla_init(key, cfg, dtype):
+    ks = jax.random.split(key, 10)
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ql, kl = cfg.q_lora, cfg.kv_lora
+    return {
+        "w_dq": dense_init(ks[0], (d, ql), dtype),
+        "q_norm": jnp.ones((ql,), dtype),
+        "w_uq": dense_init(ks[1], (ql, H * (dn + dr)), dtype),
+        "w_dkv": dense_init(ks[2], (d, kl), dtype),
+        "kv_norm": jnp.ones((kl,), dtype),
+        "w_uk": dense_init(ks[3], (kl, H * dn), dtype),
+        "w_uv": dense_init(ks[4], (kl, H * dv), dtype),
+        "w_kr": dense_init(ks[5], (d, dr), dtype),
+        "wo": dense_init(ks[6], (H * dv, d), dtype),
+    }
+
+
+def _queries(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    qc = rms_norm(mac_matmul(x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = mac_matmul(qc, p["w_uq"]).reshape(B, S, H, dn + dr)
+    q = shd(q, "batch", "seq", "heads", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(p, x, cfg, *, positions, attn_impl="chunked", chunk=512):
+    """Full-sequence (train / prefill) MLA."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    ckv = rms_norm(mac_matmul(x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    k_nope = mac_matmul(ckv, p["w_uk"]).reshape(B, S, H, dn)
+    v = mac_matmul(ckv, p["w_uv"]).reshape(B, S, H, dv)
+    v = shd(v, "batch", "seq", "heads", None)
+    k_rope = mac_matmul(x, p["w_kr"]).reshape(B, S, 1, dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1
+    )
+    # MLA is MHA (kv groups == heads): K=H, G=1
+    qg = q.reshape(B, S, H, 1, dn + dr)
+    out = attention_core(qg, k, v, causal=True, impl=attn_impl, chunk=chunk)
+    out = out.reshape(B, S, H * dv)
+    return shd(matmul_epilogue(out, p["wo"]), "batch", "seq", None)
+
+
+def mla_init_cache(cfg, batch, max_len, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+        "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cache, cache_index, cfg):
+    """Absorbed-matrices single-token decode; cache holds latents only.
+
+    score[s] = q_nope·(W_uk c_s) + q_rope·k_rope_s
+             = (q_nope W_uk)·c_s + q_rope·k_rope_s        (absorb W_uk)
+    out      = Σ p_s (W_uv c_s) = W_uv (Σ p_s c_s)        (absorb W_uv)
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kl = cfg.kv_lora
+    positions = cache_index[:, None]
+    q_nope, q_rope = _queries(p, x, cfg, positions)  # (B,1,H,dn/dr)
+    ckv = rms_norm(mac_matmul(x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    kr = apply_rope(
+        mac_matmul(x, p["w_kr"]).reshape(B, 1, 1, dr), positions, cfg.rope_theta
+    ).reshape(B, 1, dr)
+    cache = {
+        "ckv": jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0))
+        )(cache["ckv"], ckv, cache_index),
+        "kr": jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0))
+        )(cache["kr"], kr, cache_index),
+    }
+    w_uk = p["w_uk"].reshape(kl, H, dn)
+    q_lat = jnp.einsum("bhd,khd->bhk", q_nope[:, 0], w_uk)  # (B,H,kl)
+    scores = jnp.einsum("bhk,bsk->bhs", q_lat, cache["ckv"])
+    scores = scores + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], cache["kr"])
+    scores = scores.astype(jnp.float32) / jnp.sqrt(float(dn + dr))
+    S = cache["ckv"].shape[1]
+    valid = jnp.arange(S)[None, :] <= cache_index[:, None]
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsk->bhk", probs.astype(ckv.dtype), cache["ckv"])
+    w_uv = p["w_uv"].reshape(kl, H, dv)
+    out = jnp.einsum("bhk,khd->bhd", o_lat, w_uv).reshape(B, 1, H * dv)
+    return matmul_epilogue(out, p["wo"]), cache

@@ -1,0 +1,199 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Full-sequence WKV runs as a *chunked* linear-attention recurrence: an outer
+``lax.scan`` carries the per-head (N,N) state across chunks; within a chunk
+the decay matrix is built in log-space (differences of cumulative log-decays,
+always ≤ 0, so no overflow) and contracted with plain matmuls — the structure
+a fused TPU kernel (kernels/wkv_chunk.py) pipelines through VMEM.
+
+Simplifications vs the paper (noted in DESIGN.md): token-shift mixing uses
+static lerp coefficients instead of data-dependent ddlerp; the data-dependent
+*decay* (the Finch hallmark) is kept, via the low-rank tanh path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import shd
+from repro.core import dispatch
+from repro.models.layers import dense_init, layer_norm, mac_matmul
+
+DECAY_LORA = 64
+
+
+def rwkv_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 14)
+    d, N = cfg.d_model, cfg.rwkv_head_dim
+    H = d // N
+    f = cfg.d_ff
+    return {
+        "ln1_s": jnp.ones((d,), dtype), "ln1_b": jnp.zeros((d,), dtype),
+        "ln2_s": jnp.ones((d,), dtype), "ln2_b": jnp.zeros((d,), dtype),
+        # time-mix
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], (d, d), dtype),
+        "wk": dense_init(ks[1], (d, d), dtype),
+        "wv": dense_init(ks[2], (d, d), dtype),
+        "wg": dense_init(ks[3], (d, d), dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": dense_init(ks[4], (d, DECAY_LORA), dtype),
+        "w_lora_b": dense_init(ks[5], (DECAY_LORA, d), dtype, scale=0.1),
+        "u": (jax.random.normal(ks[6], (H, N)) * 0.1).astype(jnp.float32),
+        "ln_x_s": jnp.ones((d,), dtype), "ln_x_b": jnp.zeros((d,), dtype),
+        "wo": dense_init(ks[7], (d, d), dtype),
+        # channel-mix
+        "mu_ck": jnp.full((d,), 0.5, dtype), "mu_cr": jnp.full((d,), 0.5, dtype),
+        "cm_k": dense_init(ks[8], (d, f), dtype),
+        "cm_v": dense_init(ks[9], (f, d), dtype),
+        "cm_r": dense_init(ks[10], (d, d), dtype),
+    }
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _shift(x):
+    """x: (B,S,d) -> previous-token stream (zeros at t=0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _decay(p, xw):
+    """Data-dependent decay logits: lw = -exp(w0 + tanh(xw A) B)  (< 0)."""
+    lora = mac_matmul(jnp.tanh(mac_matmul(xw, p["w_lora_a"])), p["w_lora_b"])
+    return -jnp.exp(p["w0"] + lora.astype(jnp.float32))  # log-decay, (B,S,d)
+
+
+def _wkv_chunk_ref(r, k, v, lw, u, s0, chunk):
+    """Chunked WKV. r,k,v: (B,S,H,N); lw: (B,S,H,N) log-decay (<0);
+    u: (H,N); s0: (B,H,N,N). Returns (out (B,S,H,N), s_final)."""
+    B, S, H, N = r.shape
+    nc = S // chunk
+
+    def body(s, xs):
+        rc, kc, vc, lwc = xs  # (B,c,H,N)
+        cum = jnp.cumsum(lwc, axis=1)  # inclusive
+        cum_excl = cum - lwc
+        # from-state term: r_t decayed to chunk start
+        rq = rc * jnp.exp(cum_excl)
+        o_state = jnp.einsum("bthi,bhij->bthj", rq, s)
+        # intra-chunk: D[t,s,i] = exp(cum_excl[t]-cum[s]) for s<t
+        diff = cum_excl[:, :, None] - cum[:, None, :]  # (B,t,s,H,N)
+        mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+        D = jnp.exp(jnp.where(mask[None, :, :, None, None], diff, -1e30))
+        A = jnp.einsum("bthi,bshi,btshi->bths", rc, kc, D)
+        o_intra = jnp.einsum("bths,bshj->bthj", A, vc)
+        # diagonal bonus term
+        bonus = jnp.einsum("bthi,bthi->bth", rc, u * kc)
+        o_diag = bonus[..., None] * vc
+        # state update: decay to chunk end
+        dec_end = jnp.exp(cum[:, -1][:, None] - cum)  # (B,c,H,N)
+        s_new = jnp.exp(cum[:, -1])[..., None] * s + jnp.einsum(
+            "bthi,bthj->bhij", kc * dec_end, vc
+        )
+        return s_new, o_state + o_intra + o_diag
+
+    xs = tuple(
+        t.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+        for t in (r, k, v, lw)
+    )
+    s_final, outs = jax.lax.scan(body, s0, xs)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, N)
+    return out, s_final
+
+
+def time_mix(p, x, cfg, s0=None, chunk=64):
+    """WKV time-mixing over a full sequence. x: (B,S,d)."""
+    B, S, d = x.shape
+    N = cfg.rwkv_head_dim
+    H = d // N
+    xp = _shift(x)
+    r = mac_matmul(_lerp(x, xp, p["mu_r"]), p["wr"])
+    k = mac_matmul(_lerp(x, xp, p["mu_k"]), p["wk"])
+    v = mac_matmul(_lerp(x, xp, p["mu_v"]), p["wv"])
+    g = mac_matmul(_lerp(x, xp, p["mu_g"]), p["wg"])
+    lw = _decay(p, _lerp(x, xp, p["mu_w"]))
+    hsplit = lambda t: t.reshape(B, -1, H, N).astype(jnp.float32)
+    pad = (-S) % chunk
+    if pad:
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r_, k_, v_ = (padf(hsplit(t)) for t in (r, k, v))
+        lw_ = jnp.pad(hsplit(lw), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        r_, k_, v_, lw_ = hsplit(r), hsplit(k), hsplit(v), hsplit(lw)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    out, s_final = dispatch.call(
+        "wkv_chunk", _wkv_chunk_ref, r_, k_, v_, lw_, p["u"],
+        s0, min(chunk, r_.shape[1]),
+    )
+    out = out[:, :S].reshape(B, S, d).astype(x.dtype)
+    out = layer_norm(out, p["ln_x_s"], p["ln_x_b"])
+    out = out * jax.nn.silu(g)
+    return shd(mac_matmul(out, p["wo"]), "batch", "seq", None), s_final
+
+
+def channel_mix(p, x, cfg):
+    xp = _shift(x)
+    xk = _lerp(x, xp, p["mu_ck"])
+    xr = _lerp(x, xp, p["mu_cr"])
+    h = jnp.square(jax.nn.relu(mac_matmul(xk, p["cm_k"])))
+    h = shd(h, "batch", "seq", "mlp")
+    return jax.nn.sigmoid(mac_matmul(xr, p["cm_r"])) * mac_matmul(h, p["cm_v"])
+
+
+def rwkv_block(p, x, cfg, chunk=64):
+    tm, _ = time_mix(p, layer_norm(x, p["ln1_s"], p["ln1_b"]), cfg, chunk=chunk)
+    x = x + tm
+    x = x + channel_mix(p, layer_norm(x, p["ln2_s"], p["ln2_b"]), cfg)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# decode (stateful single-token)
+# ---------------------------------------------------------------------------
+
+
+def rwkv_init_state(cfg, batch, dtype):
+    d, N = cfg.d_model, cfg.rwkv_head_dim
+    H = d // N
+    return {
+        "s": jnp.zeros((batch, H, N, N), jnp.float32),
+        "tm_prev": jnp.zeros((batch, d), dtype),
+        "cm_prev": jnp.zeros((batch, d), dtype),
+    }
+
+
+def rwkv_block_decode(p, x, state, cfg):
+    """x: (B,1,d). Returns (out, new_state)."""
+    B, _, d = x.shape
+    N = cfg.rwkv_head_dim
+    H = d // N
+    xin = layer_norm(x[:, 0], p["ln1_s"], p["ln1_b"])
+    xp = state["tm_prev"]
+    r = mac_matmul(_lerp(xin, xp, p["mu_r"]), p["wr"]).reshape(B, H, N)
+    k = mac_matmul(_lerp(xin, xp, p["mu_k"]), p["wk"]).reshape(B, H, N)
+    v = mac_matmul(_lerp(xin, xp, p["mu_v"]), p["wv"]).reshape(B, H, N)
+    g = mac_matmul(_lerp(xin, xp, p["mu_g"]), p["wg"])
+    lw = _decay(p, _lerp(xin, xp, p["mu_w"])[:, None])[:, 0].reshape(B, H, N)
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    s = state["s"]
+    # o = r·(S + u⊙k v^T); S' = diag(w) S + k v^T
+    kv = jnp.einsum("bhi,bhj->bhij", k32, v32)
+    o = jnp.einsum("bhi,bhij->bhj", r32, s + p["u"][None, :, :, None] * kv)
+    s_new = jnp.exp(lw)[..., None] * s + kv
+    out = o.reshape(B, d).astype(x.dtype)
+    out = layer_norm(out, p["ln_x_s"], p["ln_x_b"]) * jax.nn.silu(g)
+    x = x + mac_matmul(out, p["wo"])[:, None]
+    # channel mix
+    xin2 = layer_norm(x[:, 0], p["ln2_s"], p["ln2_b"])
+    xp2 = state["cm_prev"]
+    xk = _lerp(xin2, xp2, p["mu_ck"])
+    xr = _lerp(xin2, xp2, p["mu_cr"])
+    h = jnp.square(jax.nn.relu(mac_matmul(xk, p["cm_k"])))
+    cm = jax.nn.sigmoid(mac_matmul(xr, p["cm_r"])) * mac_matmul(h, p["cm_v"])
+    x = x + cm[:, None]
+    return x, {"s": s_new, "tm_prev": xin, "cm_prev": xin2}

@@ -1,0 +1,147 @@
+"""Selective SSM (Mamba-style) head for hymba's parallel attn+SSM layers.
+
+Full-sequence path is *chunked*: an outer ``lax.scan`` over sequence chunks
+carries the (d_inner, N) state; within a chunk an associative scan runs the
+diagonal recurrence.  This bounds the materialized decay tensor to
+(B, chunk, d_inner, N) — the same working-set shaping a fused TPU kernel
+would do in VMEM (the zol analogue for the SSM class).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import shd
+from repro.core import dispatch
+from repro.models.layers import dense_init, mac_matmul, matmul_epilogue
+
+
+def ssm_init(key, cfg, dtype):
+    ks = jax.random.split(key, 8)
+    d, di, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * N), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,di); w: (K,di) depthwise causal conv."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssm_forward_ref(p, xz, cfg, h0=None, chunk=128):
+    """xz: already in_proj'ed (B,S,2*di). Returns (out (B,S,di), h_final).
+
+    The (B,chunk,di,N) decay/contribution tensors are built *inside* the
+    chunk scan (never full-sequence) — at 32k x 3200 x 16 the full tensor
+    would be hundreds of GB/device; per-chunk it is ~tens of MB, the same
+    working-set shaping a fused TPU kernel would use.
+    """
+    B, S, _ = xz.shape
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = jax.nn.silu(_causal_conv(x, p["conv_w"], p["conv_b"]))
+    proj = mac_matmul(x, p["x_proj"])
+    dt_in, B_t, C_t = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(mac_matmul(dt_in, p["dt_proj"]) + p["dt_bias"])
+    dt = dt.astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])  # (di,N)
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    chunk = min(chunk, S)
+    S_pad = (-S) % chunk
+    xf = x.astype(jnp.float32)
+    Bf = B_t.astype(jnp.float32)
+    Cf = C_t.astype(jnp.float32)
+    if S_pad:
+        dt = jnp.pad(dt, ((0, 0), (0, S_pad), (0, 0)))
+        xf = jnp.pad(xf, ((0, 0), (0, S_pad), (0, 0)))
+        Bf = jnp.pad(Bf, ((0, 0), (0, S_pad), (0, 0)))
+        Cf = jnp.pad(Cf, ((0, 0), (0, S_pad), (0, 0)))
+    Sp = S + S_pad
+    nc = Sp // chunk
+    rs = lambda t: t.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+
+    def outer(h, xs):
+        dt_c, x_c, b_c, c_c = xs  # (B,chunk,di) / (B,chunk,N)
+        dec_c = jnp.exp(dt_c[..., None] * A)  # (B,chunk,di,N)
+        bx_c = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+
+        def combine(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+
+        dec_cum, bx_cum = jax.lax.associative_scan(
+            combine, (dec_c, bx_c), axis=1
+        )
+        h_all = dec_cum * h[:, None] + bx_cum  # (B,chunk,di,N)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c_c)
+        return h_all[:, -1], y
+
+    h_final, ys = jax.lax.scan(outer, h0, (rs(dt), rs(xf), rs(Bf), rs(Cf)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, di)[:, :S]
+    y = y + p["D"] * x.astype(jnp.float32)
+    out = y.astype(xz.dtype) * jax.nn.silu(z)
+    return out, h_final
+
+
+def ssm_forward(p, x, cfg, chunk=128):
+    """Full-sequence SSM head. x: (B,S,d) -> (B,S,d)."""
+    xz = mac_matmul(x, p["in_proj"])
+    xz = shd(xz, "batch", "seq", "mlp")
+    out, _ = dispatch.call("ssm_chunk", _ssm_forward_ref, p, xz, cfg,
+                           chunk=chunk)
+    return shd(matmul_epilogue(out, p["out_proj"]), "batch", "seq", None)
+
+
+def ssm_init_state(cfg, batch):
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.float32),
+    }
+
+
+def ssm_decode(p, x, state, cfg):
+    """Single-token step. x: (B,1,d) -> (B,1,d), new state."""
+    B = x.shape[0]
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    xz = mac_matmul(x, p["in_proj"])[:, 0]  # (B, 2di)
+    xt, z = jnp.split(xz, 2, axis=-1)
+    conv_buf = jnp.concatenate(
+        [state["conv"], xt[:, None].astype(jnp.float32)], axis=1
+    )  # (B, K, di)
+    xt = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", conv_buf.astype(xt.dtype), p["conv_w"])
+        + p["conv_b"]
+    )
+    proj = mac_matmul(xt, p["x_proj"])
+    dt_in, B_t, C_t = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        mac_matmul(dt_in, p["dt_proj"]) + p["dt_bias"]
+    ).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt[..., None] * A)  # (B,di,N)
+    h = decay * state["h"] + (dt * xt.astype(jnp.float32))[..., None] * B_t.astype(
+        jnp.float32
+    )[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+    y = y + p["D"] * xt.astype(jnp.float32)
+    out = y.astype(x.dtype) * jax.nn.silu(z)
+    out = matmul_epilogue(out[:, None], p["out_proj"])
+    return out, {"h": h, "conv": conv_buf[:, 1:]}

@@ -1,0 +1,585 @@
+"""Model assembly: scanned-layer LMs for all assigned families.
+
+Families: dense (granite/qwen3/starcoder2), moe (llama4), moe+mla (deepseek),
+vlm (internvl2: LM backbone + patch-embedding stub), enc_dec (whisper: frame-
+embedding stub encoder + cross-attention decoder), hybrid (hymba: parallel
+attn+SSM heads, SWA), rwkv (attention-free).
+
+Layers are stacked (leading L dim on every leaf) and run under ``lax.scan``
+with optional remat — constant compile time in depth, which is what makes the
+512-device dry-run tractable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import shd
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import rwkv as RWKV
+from repro.models import ssm as SSM
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(fn, key, n, *args):
+    return jax.vmap(lambda k: fn(k, *args))(jax.random.split(key, n))
+
+
+def _dense_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.attn_init(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.mlp_init(ks[1], cfg, dtype),
+    }
+
+
+def _moe_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    attn = (
+        MLA.mla_init(ks[0], cfg, dtype) if cfg.kv_lora else L.attn_init(ks[0], cfg, dtype)
+    )
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn,
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "moe": MOE.moe_init(ks[1], cfg, dtype),
+    }
+
+
+def _mla_dense_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": MLA.mla_init(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.mlp_init(ks[1], cfg, dtype),
+    }
+
+
+def _hybrid_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.attn_init(ks[0], cfg, dtype),
+        "ssm": SSM.ssm_init(ks[1], cfg, dtype),
+        "attn_out_norm": jnp.ones((cfg.d_model,), dtype),
+        "ssm_out_norm": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.mlp_init(ks[2], cfg, dtype),
+    }
+
+
+def _encdec_dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.attn_init(ks[0], cfg, dtype),
+        "lnx": jnp.ones((cfg.d_model,), dtype),
+        "xattn": L.attn_init(ks[1], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.mlp_init(ks[2], cfg, dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    params: Params = {
+        "embed": L.embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["layers"] = _stack_init(
+            _dense_layer_init, ks[1], cfg.n_layers, cfg, dtype
+        )
+        if fam == "vlm":
+            params["frontend_proj"] = L.dense_init(
+                ks[2], (cfg.d_model, cfg.d_model), dtype
+            )
+    elif fam == "moe":
+        if cfg.moe_every == 2:
+            # llama4-style interleave: scan over (dense, moe) layer pairs
+            def _pair_init(key, cfg, dtype):
+                k1, k2 = jax.random.split(key)
+                return {
+                    "dense": _dense_layer_init(k1, cfg, dtype),
+                    "moe_l": _moe_layer_init(k2, cfg, dtype),
+                }
+
+            params["layers"] = _stack_init(
+                _pair_init, ks[1], cfg.n_layers // 2, cfg, dtype
+            )
+        else:
+            n_moe = cfg.n_layers - cfg.first_k_dense
+            if cfg.first_k_dense:
+                init = _mla_dense_layer_init if cfg.kv_lora else _dense_layer_init
+                # dense-FFN width for deepseek's first layer is d_ff (12288)
+                params["dense_layers"] = _stack_init(
+                    init, ks[2], cfg.first_k_dense, cfg, dtype
+                )
+            params["layers"] = _stack_init(
+                _moe_layer_init, ks[1], n_moe, cfg, dtype
+            )
+    elif fam == "hybrid":
+        params["layers"] = _stack_init(
+            _hybrid_layer_init, ks[1], cfg.n_layers, cfg, dtype
+        )
+    elif fam == "rwkv":
+        params["ln0_s"] = jnp.ones((cfg.d_model,), dtype)
+        params["ln0_b"] = jnp.zeros((cfg.d_model,), dtype)
+        params["layers"] = _stack_init(
+            RWKV.rwkv_layer_init, ks[1], cfg.n_layers, cfg, dtype
+        )
+    elif fam == "enc_dec":
+        params["enc_layers"] = _stack_init(
+            _dense_layer_init, ks[1], cfg.n_enc_layers, cfg, dtype
+        )
+        params["ln_enc"] = jnp.ones((cfg.d_model,), dtype)
+        params["layers"] = _stack_init(
+            _encdec_dec_layer_init, ks[2], cfg.n_layers, cfg, dtype
+        )
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _block_dense(p, x, cfg, run, positions, causal=True):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a = L.attention(
+        p["attn"], h, cfg, positions=positions, causal=causal,
+        window=cfg.sliding_window or None,
+        attn_impl=run.attn_impl, chunk=run.attn_chunk,
+    )
+    x, h2 = L.residual_rmsnorm(x, a, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], h2, cfg)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _block_moe(p, x, cfg, run, positions):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.kv_lora:
+        a = MLA.mla_attention(
+            p["attn"], h, cfg, positions=positions,
+            attn_impl=run.attn_impl, chunk=run.attn_chunk,
+        )
+    else:
+        a = L.attention(
+            p["attn"], h, cfg, positions=positions, causal=True,
+            attn_impl=run.attn_impl, chunk=run.attn_chunk,
+        )
+    x, h2 = L.residual_rmsnorm(x, a, p["ln2"], cfg.norm_eps)
+    y, aux = MOE.moe_ffn(p["moe"], h2, cfg, groups=run.moe_groups)
+    return x + y, aux
+
+
+def _block_mla_dense(p, x, cfg, run, positions):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a = MLA.mla_attention(
+        p["attn"], h, cfg, positions=positions,
+        attn_impl=run.attn_impl, chunk=run.attn_chunk,
+    )
+    x, h2 = L.residual_rmsnorm(x, a, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], h2, cfg)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _block_hybrid(p, x, cfg, run, positions):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a = L.attention(
+        p["attn"], h, cfg, positions=positions, causal=True,
+        window=cfg.sliding_window or None,
+        attn_impl=run.attn_impl, chunk=run.attn_chunk,
+    )
+    s = SSM.ssm_forward(p["ssm"], h, cfg, chunk=run.ssm_chunk)
+    mix = 0.5 * (
+        L.rms_norm(a, p["attn_out_norm"], cfg.norm_eps)
+        + L.rms_norm(s, p["ssm_out_norm"], cfg.norm_eps)
+    )
+    x, h2 = L.residual_rmsnorm(x, mix, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], h2, cfg)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _block_encdec_dec(p, x, enc_out, cfg, run, positions):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a = L.attention(
+        p["attn"], h, cfg, positions=positions, causal=True,
+        attn_impl=run.attn_impl, chunk=run.attn_chunk,
+    )
+    x = x + a
+    h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+    enc_kv = L.encoder_kv(p["xattn"], enc_out, cfg)
+    c = L.cross_attention(p["xattn"], h, enc_kv, cfg,
+                          attn_impl=run.attn_impl, chunk=run.attn_chunk)
+    x, h2 = L.residual_rmsnorm(x, c, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], h2, cfg)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# scan machinery
+# ---------------------------------------------------------------------------
+
+_REMAT_POLICIES = {
+    "full": None,  # save nothing, recompute everything
+    "dots": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _scan_layers(body, x, stacked, run: RunConfig):
+    """body(p, x) -> (x, aux). Scans over the leading layer dim of stacked."""
+    fn = body
+    if run.remat != "none":
+        policy = _REMAT_POLICIES[run.remat]
+        if policy is None:
+            fn = jax.checkpoint(body)
+        else:
+            fn = jax.checkpoint(
+                body, policy=getattr(jax.checkpoint_policies, policy)
+            )
+
+    def wrapped(carry, p):
+        x = shd(carry, "batch", "residual_seq", None)
+        x, aux = fn(p, x)
+        return x, aux
+
+    x, auxs = jax.lax.scan(wrapped, x, stacked, unroll=run.scan_unroll)
+    return x, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, frames, cfg, run):
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+    B, F, _ = frames.shape
+    x = frames + L.sinusoidal_positions(F, cfg.d_model, frames.dtype)
+    body = lambda p, x: _block_dense(p, x, cfg, run, positions=None, causal=False)
+    x, _ = _scan_layers(body, x, params["enc_layers"], run)
+    return L.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def forward_hidden(params, tokens, cfg: ArchConfig, run: RunConfig,
+                   frames=None, patches=None):
+    """Returns (hidden (B,S,d), aux, prefix_len). Labels apply to
+    positions [prefix_len:]."""
+    fam = cfg.family
+    prefix = 0
+    aux = jnp.zeros((), jnp.float32)
+    if fam == "enc_dec":
+        enc_out = _encode(params, frames, cfg, run)
+        x = L.embed_lookup(params["embed"], tokens)
+        S = x.shape[1]
+        x = x + L.sinusoidal_positions(S, cfg.d_model, x.dtype)
+        positions = jnp.arange(S)[None, :]
+        body = lambda p, x: _block_encdec_dec(p, x, enc_out, cfg, run, positions)
+        x, aux = _scan_layers(body, x, params["layers"], run)
+        return L.rms_norm(x, params["ln_f"], cfg.norm_eps), aux, 0
+
+    x = L.embed_lookup(params["embed"], tokens)
+    if fam == "vlm":
+        pe = L.mac_matmul(patches, params["frontend_proj"])
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+        prefix = patches.shape[1]
+    if fam == "rwkv":
+        x = L.layer_norm(x, params["ln0_s"], params["ln0_b"])
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    if fam in ("dense", "vlm"):
+        body = lambda p, x: _block_dense(p, x, cfg, run, positions)
+    elif fam == "moe" and cfg.moe_every == 2:
+        def body(p, x):
+            x, _ = _block_dense(p["dense"], x, cfg, run, positions)
+            return _block_moe(p["moe_l"], x, cfg, run, positions)
+    elif fam == "moe":
+        body = lambda p, x: _block_moe(p, x, cfg, run, positions)
+    elif fam == "hybrid":
+        body = lambda p, x: _block_hybrid(p, x, cfg, run, positions)
+    elif fam == "rwkv":
+        body = lambda p, x: (
+            RWKV.rwkv_block(p, x, cfg, chunk=run.wkv_chunk),
+            jnp.zeros((), jnp.float32),
+        )
+    else:
+        raise ValueError(fam)
+
+    if fam == "moe" and cfg.first_k_dense:
+        dbody = (
+            _block_mla_dense if cfg.kv_lora else
+            lambda p, x, cfg, run, positions: _block_dense(p, x, cfg, run, positions)
+        )
+        dense_body = lambda p, x: dbody(p, x, cfg, run, positions)
+        x, _ = _scan_layers(dense_body, x, params["dense_layers"], run)
+    x, aux = _scan_layers(body, x, params["layers"], run)
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps), aux, prefix
+
+
+def forward_lm(params, tokens, cfg, run, frames=None, patches=None):
+    hidden, aux, prefix = forward_hidden(params, tokens, cfg, run,
+                                         frames=frames, patches=patches)
+    if prefix:
+        hidden = hidden[:, prefix:]
+    return L.embed_logits(params["embed"], hidden), aux
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked over sequence so logits never fully materialize)
+# ---------------------------------------------------------------------------
+
+
+def _ce_chunk(table, hidden, labels):
+    logits = jnp.einsum("bsd,vd->bsv", hidden, table).astype(jnp.float32)
+    logits = shd(logits, "batch", None, "vocab")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(lse - gold)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, run: RunConfig):
+    hidden, aux, prefix = forward_hidden(
+        params, batch["tokens"], cfg, run,
+        frames=batch.get("frames"), patches=batch.get("patches"),
+    )
+    if prefix:
+        hidden = hidden[:, prefix:]
+    labels = batch["labels"]
+    B, S = labels.shape
+    table = params["embed"]["table"]
+    if run.loss_chunk and S % run.loss_chunk == 0 and S > run.loss_chunk:
+        nc = S // run.loss_chunk
+        hc = hidden.reshape(B, nc, run.loss_chunk, -1).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, nc, run.loss_chunk).transpose(1, 0, 2)
+        ce_fn = jax.checkpoint(functools.partial(_ce_chunk, table))
+        total = jax.lax.scan(
+            lambda c, xs: (c + ce_fn(xs[0], xs[1]), None), jnp.zeros(()), (hc, lc)
+        )[0]
+    else:
+        total = _ce_chunk(table, hidden, labels)
+    ce = total / (B * S)
+    loss = ce + cfg.router_aux_weight * aux / max(cfg.n_layers, 1)
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step): stateful single-token generation
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(params, cfg: ArchConfig, run: RunConfig, batch: int,
+                      max_len: int, frames=None):
+    """Build the per-layer cache pytree (leading L dim) + position index."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    Lx = params["layers"]
+    n_layers = jax.tree_util.tree_leaves(Lx)[0].shape[0]
+    K, dh = cfg.n_kv_heads, cfg.d_head
+    fam = cfg.family
+    state: dict[str, Any] = {"index": jnp.zeros((batch,), jnp.int32)}
+    if fam in ("dense", "vlm", "enc_dec"):
+        Smax = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        state["cache"] = {
+            "k": jnp.zeros((n_layers, batch, Smax, K, dh), dtype),
+            "v": jnp.zeros((n_layers, batch, Smax, K, dh), dtype),
+        }
+        if fam == "enc_dec":
+            enc_out = _encode(params, frames, cfg, run)
+            # per-layer cross K/V, precomputed once
+            def xkv(p):
+                return L.encoder_kv(p["xattn"], enc_out, cfg)
+            ks, vs = jax.vmap(xkv)(params["layers"])
+            state["cross_kv"] = {"k": ks, "v": vs}
+    elif fam == "moe":
+        if cfg.kv_lora:
+            state["cache"] = {
+                "ckv": jnp.zeros((n_layers, batch, max_len, cfg.kv_lora), dtype),
+                "kr": jnp.zeros((n_layers, batch, max_len, cfg.qk_rope_dim), dtype),
+            }
+            if cfg.first_k_dense:
+                state["dense_cache"] = {
+                    "ckv": jnp.zeros(
+                        (cfg.first_k_dense, batch, max_len, cfg.kv_lora), dtype
+                    ),
+                    "kr": jnp.zeros(
+                        (cfg.first_k_dense, batch, max_len, cfg.qk_rope_dim), dtype
+                    ),
+                }
+        elif cfg.moe_every == 2:
+            # paired layers: separate caches for the dense and moe sublayers
+            state["cache"] = {
+                "k_dense": jnp.zeros((n_layers, batch, max_len, K, dh), dtype),
+                "v_dense": jnp.zeros((n_layers, batch, max_len, K, dh), dtype),
+                "k_moe": jnp.zeros((n_layers, batch, max_len, K, dh), dtype),
+                "v_moe": jnp.zeros((n_layers, batch, max_len, K, dh), dtype),
+            }
+        else:
+            state["cache"] = {
+                "k": jnp.zeros((n_layers, batch, max_len, K, dh), dtype),
+                "v": jnp.zeros((n_layers, batch, max_len, K, dh), dtype),
+            }
+    elif fam == "hybrid":
+        W = cfg.sliding_window or max_len
+        Smax = min(max_len, W)
+        state["cache"] = {
+            "k": jnp.zeros((n_layers, batch, Smax, K, dh), dtype),
+            "v": jnp.zeros((n_layers, batch, Smax, K, dh), dtype),
+            "h": jnp.zeros((n_layers, batch, cfg.ssm_d_inner, cfg.ssm_state),
+                           jnp.float32),
+            "conv": jnp.zeros(
+                (n_layers, batch, cfg.ssm_conv - 1, cfg.ssm_d_inner), jnp.float32
+            ),
+        }
+    elif fam == "rwkv":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        state["cache"] = {
+            "s": jnp.zeros((n_layers, batch, H, cfg.rwkv_head_dim,
+                            cfg.rwkv_head_dim), jnp.float32),
+            "tm_prev": jnp.zeros((n_layers, batch, cfg.d_model), dtype),
+            "cm_prev": jnp.zeros((n_layers, batch, cfg.d_model), dtype),
+        }
+    return state
+
+
+def decode_step(params, state, tokens, cfg: ArchConfig, run: RunConfig):
+    """tokens: (B, 1) -> (logits (B,1,V), new state)."""
+    fam = cfg.family
+    idx = state["index"]
+    x = L.embed_lookup(params["embed"], tokens)
+    if fam == "enc_dec":
+        # sinusoidal position embedding for the current index
+        pos_table = L.sinusoidal_positions(
+            state["cache"]["k"].shape[2], cfg.d_model, x.dtype
+        )
+        x = x + pos_table[idx][:, None, :]
+    if fam == "rwkv":
+        x = L.layer_norm(x, params["ln0_s"], params["ln0_b"])
+
+    window = cfg.sliding_window or None
+
+    if fam in ("dense", "vlm"):
+        def body(x, xs):
+            p, c = xs
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            a, c2 = L.attention_decode(p["attn"], h, c, idx, cfg, window=window)
+            x, h2 = L.residual_rmsnorm(x, a, p["ln2"], cfg.norm_eps)
+            x = x + L.mlp(p["mlp"], h2, cfg)
+            return x, c2
+
+        x, cache = jax.lax.scan(body, x, (params["layers"], state["cache"]))
+    elif fam == "enc_dec":
+        cross = state["cross_kv"]
+
+        def body(x, xs):
+            p, c, xk, xv = xs
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            a, c2 = L.attention_decode(p["attn"], h, c, idx, cfg)
+            x = x + a
+            h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+            catt = L.cross_attention(p["xattn"], h, (xk, xv), cfg,
+                                     attn_impl="naive")
+            x, h2 = L.residual_rmsnorm(x, catt, p["ln2"], cfg.norm_eps)
+            x = x + L.mlp(p["mlp"], h2, cfg)
+            return x, c2
+
+        x, cache = jax.lax.scan(
+            body, x, (params["layers"], state["cache"], cross["k"], cross["v"])
+        )
+    elif fam == "moe":
+        if cfg.kv_lora and cfg.first_k_dense:
+            def dbody(x, xs):
+                p, c = xs
+                h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+                a, c2 = MLA.mla_decode(p["attn"], h, c, idx, cfg)
+                x, h2 = L.residual_rmsnorm(x, a, p["ln2"], cfg.norm_eps)
+                x = x + L.mlp(p["mlp"], h2, cfg)
+                return x, c2
+
+            x, dcache = jax.lax.scan(
+                dbody, x, (params["dense_layers"], state["dense_cache"])
+            )
+            state = dict(state, dense_cache=dcache)
+
+        if cfg.moe_every == 2:
+            def body(x, xs):
+                p, c = xs
+                h = L.rms_norm(x, p["dense"]["ln1"], cfg.norm_eps)
+                a, cd = L.attention_decode(
+                    p["dense"]["attn"], h,
+                    {"k": c["k_dense"], "v": c["v_dense"]}, idx, cfg)
+                x, h2 = L.residual_rmsnorm(x, a, p["dense"]["ln2"],
+                                           cfg.norm_eps)
+                x = x + L.mlp(p["dense"]["mlp"], h2, cfg)
+                h = L.rms_norm(x, p["moe_l"]["ln1"], cfg.norm_eps)
+                a, cm = L.attention_decode(
+                    p["moe_l"]["attn"], h,
+                    {"k": c["k_moe"], "v": c["v_moe"]}, idx, cfg)
+                x, h2 = L.residual_rmsnorm(x, a, p["moe_l"]["ln2"],
+                                           cfg.norm_eps)
+                y, _ = MOE.moe_ffn(p["moe_l"]["moe"], h2, cfg,
+                                   groups=run.moe_groups)
+                return x + y, {"k_dense": cd["k"], "v_dense": cd["v"],
+                               "k_moe": cm["k"], "v_moe": cm["v"]}
+        else:
+            def body(x, xs):
+                p, c = xs
+                h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+                if cfg.kv_lora:
+                    a, c2 = MLA.mla_decode(p["attn"], h, c, idx, cfg)
+                else:
+                    a, c2 = L.attention_decode(p["attn"], h, c, idx, cfg)
+                x, h2 = L.residual_rmsnorm(x, a, p["ln2"], cfg.norm_eps)
+                y, _ = MOE.moe_ffn(p["moe"], h2, cfg, groups=run.moe_groups)
+                return x + y, c2
+
+        x, cache = jax.lax.scan(body, x, (params["layers"], state["cache"]))
+    elif fam == "hybrid":
+        def body(x, xs):
+            p, c = xs
+            attn_c = {"k": c["k"], "v": c["v"]}
+            ssm_c = {"h": c["h"], "conv": c["conv"]}
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            a, ac2 = L.attention_decode(p["attn"], h, attn_c, idx, cfg,
+                                        window=window)
+            s, sc2 = SSM.ssm_decode(p["ssm"], h, ssm_c, cfg)
+            mix = 0.5 * (
+                L.rms_norm(a, p["attn_out_norm"], cfg.norm_eps)
+                + L.rms_norm(s, p["ssm_out_norm"], cfg.norm_eps)
+            )
+            x, h2 = L.residual_rmsnorm(x, mix, p["ln2"], cfg.norm_eps)
+            x = x + L.mlp(p["mlp"], h2, cfg)
+            return x, {**ac2, **sc2}
+
+        x, cache = jax.lax.scan(body, x, (params["layers"], state["cache"]))
+    elif fam == "rwkv":
+        def body(x, xs):
+            p, c = xs
+            return RWKV.rwkv_block_decode(p, x, c, cfg)
+
+        x, cache = jax.lax.scan(body, x, (params["layers"], state["cache"]))
+    else:
+        raise ValueError(fam)
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.embed_logits(params["embed"], x)
+    new_state = dict(state, cache=cache, index=idx + 1)
+    return logits, new_state

@@ -1,0 +1,105 @@
+"""AdamW with configurable moment dtype + global-norm clipping + schedules.
+
+Moments are stored in ``moment_dtype`` (bf16 for the memory-tight 200B+
+archs, f32 otherwise); all update math runs in f32.  State pytrees mirror the
+param tree, so param partition specs apply verbatim (ZeRO-style sharding
+falls out of the fsdp_tp param specs).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Any = 3e-4  # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> OptState:
+        mdt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return OptState(
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, grads, state: OptState, params):
+        count = state.count + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+
+        if self.clip_norm:
+            gnorm = jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree_util.tree_leaves(grads)
+                )
+            )
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        else:
+            gnorm = jnp.zeros(())
+            scale = 1.0
+
+        mdt = jnp.dtype(self.moment_dtype)
+        bc1 = 1.0 - self.b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd_slice(p, g, mu, nu, ndim):
+            g = g.astype(jnp.float32) * scale
+            mu32 = self.b1 * mu.astype(jnp.float32) + (1 - self.b1) * g
+            nu32 = self.b2 * nu.astype(jnp.float32) + (1 - self.b2) * g * g
+            mhat = mu32 / bc1
+            nhat = nu32 / bc2
+            step = mhat / (jnp.sqrt(nhat) + self.eps)
+            if ndim >= 2:  # decoupled weight decay on matrices only
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, mu32.astype(mdt), nu32.astype(mdt)
+
+        def upd(p, g, mu, nu):
+            if p.ndim >= 3 and p.shape[0] <= 512:
+                # stacked-layer leaf: update layer-by-layer so the f32 math
+                # temporaries are slice-sized, not stack-sized (measured
+                # 10x ~4 GB concurrent temps on the 400B MoE without this)
+                return jax.lax.map(
+                    lambda a: upd_slice(*a, ndim=p.ndim - 1), (p, g, mu, nu)
+                )
+            return upd_slice(p, g, mu, nu, p.ndim)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state.mu)
+        flat_nu = treedef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, n) for p, g, m, n in
+               zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        return new_p, OptState(new_mu, new_nu, count), gnorm

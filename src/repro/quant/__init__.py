@@ -1,0 +1,1 @@
+from repro.quant.ptq import quantize_tree, quantize_weight, dequantize  # noqa: F401

@@ -1,0 +1,59 @@
+"""int8 post-training quantization (paper step 3, TFLite analogue).
+
+Per-output-channel symmetric int8: w ≈ w_int8 * scale.  The quantized GEMM
+runs through the ``mac`` extension (int8 multiply-accumulate) with the
+dequant folded into the epilogue.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_weight(w: jax.Array) -> dict:
+    """w: (..., d_in, d_out) -> {"w_int8", "scale"} per output channel."""
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    w_int8 = jnp.clip(
+        jnp.round(w.astype(jnp.float32) / scale), -127, 127
+    ).astype(jnp.int8)
+    return {"w_int8": w_int8, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize(q: dict) -> jax.Array:
+    return q["w_int8"].astype(jnp.float32) * q["scale"]
+
+
+def quantize_tree(params, predicate=None):
+    """Quantize every >=2D floating leaf (weights); keep others as-is.
+
+    Returns a pytree where quantized leaves become {"w_int8","scale"} dicts.
+    predicate(name, leaf) -> bool can exclude leaves (e.g. norm scales).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    total, quant = 0, 0
+    for path, leaf in flat:
+        total += 1
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        eligible = (
+            hasattr(leaf, "ndim")
+            and leaf.ndim >= 2
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+            and (predicate is None or predicate(name, leaf))
+        )
+        out.append(quantize_weight(leaf) if eligible else leaf)
+        quant += int(eligible)
+    return jax.tree_util.tree_unflatten(treedef, out), {
+        "quantized": quant, "total": total
+    }
+
+
+def quantized_bytes(params) -> int:
+    """Model size after PTQ (Table 10 DM analogue)."""
+    q, _ = quantize_tree(params)
+    return sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(q)
+        if hasattr(leaf, "size")
+    )

@@ -1,0 +1,99 @@
+"""Batched serving loop: fixed decode slots + continuous batching.
+
+Requests queue up; a slot map assigns each to a batch lane. Each engine step
+decodes one token for every active lane; finished lanes (EOS or max tokens)
+are released and refilled from the queue — the standard continuous-batching
+pattern, sized to the compiled decode batch so no reshapes/recompiles occur.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import transformer as T
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never
+    generated: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, run: RunConfig, *,
+                 batch_slots: int = 4, max_len: int = 256, frames=None):
+        self.params = params
+        self.cfg = cfg
+        self.run = run
+        self.slots: list[Request | None] = [None] * batch_slots
+        self.queue: deque[Request] = deque()
+        self.max_len = max_len
+        self.state = T.init_decode_state(
+            params, cfg, run, batch=batch_slots, max_len=max_len, frames=frames
+        )
+        self._step = jax.jit(
+            lambda p, s, t: T.decode_step(p, s, t, cfg, run),
+            donate_argnums=(1,),
+        )
+        self._next_tok = np.zeros((batch_slots, 1), np.int32)
+        self._prompt_pos = np.zeros(batch_slots, np.int32)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                # reset this lane's position; prompt is fed token by token
+                idx = np.array(self.state["index"], copy=True)
+                idx[i] = 0
+                self.state["index"] = jnp.asarray(idx)
+                self._prompt_pos[i] = 0
+                self._next_tok[i, 0] = req.prompt[0]
+
+    def step(self) -> None:
+        """One engine step = one decode step for every active lane."""
+        self._fill_slots()
+        logits, self.state = self._step(
+            self.params, self.state, jnp.asarray(self._next_tok)
+        )
+        sampled = np.asarray(
+            jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1), np.int32
+        )
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self._prompt_pos[i] += 1
+            if self._prompt_pos[i] < len(req.prompt):
+                # still teacher-forcing the prompt
+                self._next_tok[i, 0] = req.prompt[self._prompt_pos[i]]
+                continue
+            tok = int(sampled[i])
+            req.generated.append(tok)
+            self._next_tok[i, 0] = tok
+            total = int(self._prompt_pos[i]) + len(req.generated)
+            if (tok == req.eos_id or len(req.generated) >= req.max_new_tokens
+                    or total >= self.max_len - 1):
+                req.done = True
+                self.slots[i] = None
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots) + len(self.queue)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while self.active and steps < max_steps:
+            self.step()
+            steps += 1

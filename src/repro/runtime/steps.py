@@ -1,0 +1,78 @@
+"""Pure step functions: train_step (microbatched grad accumulation) and
+serve_step (single-token decode) — the units the launcher jits/lowers."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW, OptState
+
+
+def _split_microbatches(batch, n):
+    def split(x):
+        return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ArchConfig, run: RunConfig, opt: AdamW):
+    def loss_fn(params, mb):
+        return T.loss_fn(params, mb, cfg, run)
+
+    def train_step(params, opt_state: OptState, batch):
+        n_mb = run.microbatches
+        if n_mb > 1:
+            mbs = _split_microbatches(batch, n_mb)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), g_acc, grads
+                )
+                return (g_acc, l_acc + loss), None
+
+            # grad-accumulator dtype follows the moment dtype: the 200B+
+            # archs accumulate in bf16 (f32 accumulators alone are >6GB/dev)
+            acc_dtype = jnp.dtype(run.moment_dtype)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(acc_body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            loss = loss_sum / n_mb
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        new_params, new_opt, gnorm = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": gnorm.astype(jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, run: RunConfig):
+    def prefill_step(params, batch):
+        logits, _ = T.forward_lm(
+            params, batch["tokens"], cfg, run,
+            frames=batch.get("frames"), patches=batch.get("patches"),
+        )
+        return logits[:, -1]  # next-token logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, run: RunConfig):
+    def serve_step(params, state, tokens):
+        return T.decode_step(params, state, tokens, cfg, run)
+
+    return serve_step

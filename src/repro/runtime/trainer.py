@@ -1,0 +1,132 @@
+"""Fault-tolerant training loop: auto-resume, async checkpoints, watchdog,
+optional int8 error-feedback gradient compression.
+
+The loop is mesh-agnostic: pass any mesh (1 CPU device in tests, 16x16 or
+2x16x16 in production) — shardings come from launch.shardings.
+"""
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import axis_rules
+from repro.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.configs.base import ArchConfig, RunConfig
+from repro.data.pipeline import SyntheticLMData
+from repro.launch.shardings import activation_rules, param_shardings
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW
+from repro.optim.compress import compress_decompress, init_ef
+from repro.runtime.steps import make_train_step
+from repro.runtime.watchdog import StragglerWatchdog
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    log_every: int = 10
+    grad_compression: bool = False
+    seed: int = 0
+
+
+@dataclass
+class TrainResult:
+    final_step: int
+    losses: list[float] = field(default_factory=list)
+    resumed_from: int | None = None
+    straggler_steps: list[int] = field(default_factory=list)
+
+
+def train(cfg: ArchConfig, run: RunConfig, tc: TrainerConfig,
+          mesh=None, opt: AdamW | None = None,
+          step_hook: Callable[[int], None] | None = None) -> TrainResult:
+    opt = opt or AdamW(lr=1e-3, moment_dtype=run.moment_dtype)
+    rules = (activation_rules(mesh, run, cfg=cfg) if mesh is not None else {})
+
+    def build_step():
+        base_step = make_train_step(cfg, run, opt)
+        if not tc.grad_compression:
+            return base_step
+        # wrap: compress gradients through int8 EF before the update
+        def compressed_step(params, opt_state, ef, batch):
+            # recompute grads, compress, then update (reuses base pieces)
+            def loss_fn(p):
+                return T.loss_fn(p, batch, cfg, run)[0]
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            grads, ef = compress_decompress(grads, ef)
+            new_params, new_opt, gnorm = opt.update(grads, opt_state, params)
+            return new_params, new_opt, ef, {
+                "loss": loss.astype(jnp.float32),
+                "grad_norm": gnorm.astype(jnp.float32),
+            }
+        return compressed_step
+
+    step_fn = build_step()
+
+    import contextlib
+    ctx = axis_rules(mesh, rules) if mesh is not None else contextlib.nullcontext()
+    with ctx:
+        params = T.init_params(jax.random.PRNGKey(tc.seed), cfg)
+        if mesh is not None:
+            p_shard = param_shardings(
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                             params), mesh, run)
+            params = jax.tree.map(jax.device_put, params, p_shard)
+        opt_state = opt.init(params)
+        ef = init_ef(params) if tc.grad_compression else None
+
+        start = 0
+        resumed = None
+        if tc.ckpt_dir:
+            last = latest_step(tc.ckpt_dir)
+            if last is not None:
+                params = restore_checkpoint(tc.ckpt_dir, last, params)
+                opt_state = restore_checkpoint(
+                    tc.ckpt_dir + "_opt", last, opt_state
+                )
+                start = last
+                resumed = last
+                log.info("resumed from step %d", last)
+
+        data = SyntheticLMData(cfg, run, seed=tc.seed)
+        ckpt = AsyncCheckpointer(tc.ckpt_dir) if tc.ckpt_dir else None
+        ckpt_opt = AsyncCheckpointer(tc.ckpt_dir + "_opt") if tc.ckpt_dir else None
+        wd = StragglerWatchdog()
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        result = TrainResult(final_step=start, resumed_from=resumed)
+        for step in range(start, tc.total_steps):
+            batch = data.batch_at(step)
+            wd.start()
+            if tc.grad_compression:
+                params, opt_state, ef, metrics = jit_step(
+                    params, opt_state, ef, batch
+                )
+            else:
+                params, opt_state, metrics = jit_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            if wd.stop(step):
+                log.warning("straggler step %d", step)
+            if step_hook:
+                step_hook(step)
+            loss = float(metrics["loss"])
+            result.losses.append(loss)
+            if step % tc.log_every == 0:
+                log.info("step %d loss %.4f", step, loss)
+            if ckpt and (step + 1) % tc.ckpt_every == 0:
+                ckpt.save(step + 1, params)
+                ckpt_opt.save(step + 1, opt_state)
+        if ckpt:
+            ckpt.wait()
+            ckpt_opt.wait()
+        result.final_step = tc.total_steps
+        result.straggler_steps = wd.flagged_steps
+        return result

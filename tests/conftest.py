@@ -1,0 +1,6 @@
+# NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests and
+# benches must see the real single CPU device. Only launch/dryrun.py sets the
+# 512-device flag (before importing jax).
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,73 @@
+"""MoE dispatch correctness: gather-combine vs brute-force dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models.moe import moe_ffn, moe_init
+
+CFG = ArchConfig(
+    name="test-moe", family="moe", n_layers=1, d_model=32, n_heads=4,
+    n_kv_heads=2, d_ff=64, vocab=128, n_experts=8, top_k=2,
+    n_shared_experts=1, d_ff_expert=16,
+    capacity_factor=8.0,  # high capacity -> no drops -> exact reference
+    param_dtype="float32",
+)
+
+
+def _dense_reference(p, x, cfg):
+    """Every token through its top-k experts, computed directly."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf @ p["router"].astype(xf.dtype)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, ids = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.norm_topk:
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    out = jnp.zeros_like(xf)
+    for tk in range(cfg.top_k):
+        for e in range(cfg.n_experts):
+            mask = (ids[:, tk] == e)[:, None]
+            g = jax.nn.silu(xf @ p["wg"][e]) * (xf @ p["wu"][e])
+            y = g @ p["wd"][e]
+            out = out + jnp.where(mask, y * gate[:, tk : tk + 1], 0.0)
+    return out.reshape(B, S, d)
+
+
+@pytest.mark.parametrize("groups", [1, 2, 4])
+def test_moe_matches_dense_reference(groups):
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, CFG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    got, aux = moe_ffn(p, x, CFG, groups=groups)
+    want = _dense_reference(p, x, CFG)
+    # shared expert contributes to both paths identically
+    from repro.models.layers import mlp
+    want = want + mlp(p["shared"], x, CFG)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = CFG.replace(capacity_factor=0.25)  # force drops
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    got, _ = moe_ffn(p, x, cfg, groups=1)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_moe_differentiable():
+    p = moe_init(jax.random.PRNGKey(0), CFG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+
+    def loss(p):
+        y, aux = moe_ffn(p, x, CFG, groups=1)
+        return jnp.sum(jnp.square(y)) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    gnorm = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
+    assert np.isfinite(gnorm) and gnorm > 0
+    # router must receive gradient (through the gate weights)
+    assert float(jnp.sum(jnp.abs(g["router"]))) > 0

@@ -1,0 +1,44 @@
+"""Stateful decode parity for the recurrent families: the chunked full-
+sequence forms (wkv_chunk / ssm chunk scan / blocked SWA) must agree with
+token-by-token stateful decode — the invariant that makes long_500k serving
+trustworthy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_variant
+from repro.configs.base import RunConfig
+from repro.models import transformer as T
+
+RUN = RunConfig(seq_len=32, global_batch=2, attn_impl="chunked", attn_chunk=8,
+                ssm_chunk=8, wkv_chunk=8)
+
+
+def _parity(arch_id, S=16, atol=2e-3):
+    cfg = smoke_variant(get_arch(arch_id)).replace(param_dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    B = 2
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    logits_par, _ = T.forward_lm(params, tokens, cfg, RUN)
+    state = T.init_decode_state(params, cfg, RUN, batch=B, max_len=S)
+    outs = []
+    for i in range(S):
+        lg, state = T.decode_step(params, state, tokens[:, i : i + 1], cfg, RUN)
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_par, np.float32),
+        np.asarray(logits_dec, np.float32),
+        atol=atol, rtol=1e-3,
+    )
+
+
+def test_rwkv_decode_matches_chunked_forward():
+    """Single-step WKV recurrence == chunked linear-attention form."""
+    _parity("rwkv6-1.6b")
+
+
+def test_hymba_decode_matches_forward():
+    """Rotating SWA cache + stepwise SSM == blocked local attention +
+    chunked associative scan (window == block size makes SWA exact)."""
+    _parity("hymba-1.5b")

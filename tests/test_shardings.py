@@ -1,0 +1,69 @@
+"""Partition-rule validity for every arch x mode x mesh shape — catches
+divisibility regressions without any 512-device compile."""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.configs.base import RunConfig
+from repro.launch.shardings import default_run, param_spec
+from repro.models import transformer as T
+
+MESHES = {
+    "single": {"data": 16, "model": 16},
+    "multi": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+def _axis_size(entry, sizes):
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return math.prod(sizes[a] for a in entry)
+    return sizes[entry]
+
+
+@pytest.mark.parametrize("arch_id", list_archs())
+@pytest.mark.parametrize("mesh_name", ["single", "multi"])
+@pytest.mark.parametrize("mode", ["tp", "fsdp_tp"])
+def test_param_specs_divisible(arch_id, mesh_name, mode):
+    sizes = MESHES[mesh_name]
+    fsdp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    cfg = get_arch(arch_id)
+    shape = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    flat = jax.tree_util.tree_flatten_with_path(shape)[0]
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        spec = param_spec(name, len(leaf.shape), mode, fsdp_axes)
+        assert len(spec) <= len(leaf.shape), (name, spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, spec):
+            n = _axis_size(entry, sizes)
+            assert dim % n == 0, (
+                f"{arch_id} {name} dim {dim} not divisible by "
+                f"{entry}={n} ({mode}, {mesh_name})"
+            )
+
+
+@pytest.mark.parametrize("arch_id", list_archs())
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_default_runs_are_consistent(arch_id, shape_name):
+    cfg = get_arch(arch_id)
+    run = default_run(cfg, shape_name)
+    assert run.global_batch % run.microbatches == 0
+    if run.mode == "train":
+        # per-microbatch global batch must still shard over 32 batch shards
+        assert (run.global_batch // run.microbatches) % 32 == 0
+    assert run.seq_len % max(run.attn_chunk, 1) == 0 or run.mode == "decode"
+
+
+def test_vocab_padding_rules():
+    for arch_id in list_archs():
+        cfg = get_arch(arch_id)
+        assert cfg.vocab_padded % 16 == 0
+        assert cfg.vocab_padded >= cfg.vocab
+        if cfg.vocab % 16 == 0:  # exact configs stay exact
+            assert cfg.vocab_padded == cfg.vocab

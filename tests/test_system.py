@@ -1,0 +1,75 @@
+"""End-to-end system behaviour: the full MARVEL pipeline, extension-level
+numerical equivalence, and train -> serve integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_variant
+from repro.configs.base import RunConfig
+from repro.core.extensions import extension_context
+from repro.core.pipeline import run_marvel_flow
+from repro.models import transformer as T
+from repro.models.cnn import get_cnn
+from repro.runtime.server import Request, ServeEngine
+from repro.runtime.trainer import TrainerConfig, train
+
+RUN = RunConfig(seq_len=64, global_batch=4, attn_chunk=16, loss_chunk=16,
+                ssm_chunk=16, wkv_chunk=16)
+
+
+def test_marvel_pipeline_end_to_end():
+    """Paper flow on the paper's model: profile -> class -> extensions ->
+    rewrite -> v0..v4 report, with the paper's headline numbers."""
+    init, apply, in_shape = get_cnn("mobilenetv1")
+    params = init(jax.random.PRNGKey(0))
+    x = jnp.zeros((1, *in_shape))
+    rep = run_marvel_flow(lambda x: apply(params, x), x)
+    assert rep.model_class == "cnn"
+    assert set(rep.recommended_extensions) >= {"mac", "fusedmac"}
+    assert 1.7 <= rep.rv32_speedup_v4 <= 2.4  # paper: "up to 2x"
+    # monotone cycle improvement v0 -> v4
+    cyc = [rep.rv32_cycles[l] for l in ("v0", "v1", "v2", "v3", "v4")]
+    assert all(a >= b for a, b in zip(cyc, cyc[1:]))
+
+
+def test_extension_levels_numerically_equivalent():
+    """v4 with Pallas kernels (interpret) must match the v0 baseline — the
+    extensions change performance, never semantics."""
+    import repro.kernels.ops  # noqa: F401 (registers pallas impls)
+
+    cfg = smoke_variant(get_arch("qwen3-8b"))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    logits_v0, _ = T.forward_lm(params, tokens, cfg, RUN)
+    with extension_context("v4", backend="pallas"):
+        logits_v4, _ = T.forward_lm(params, tokens, cfg, RUN)
+    a = np.asarray(logits_v0, np.float32)
+    b = np.asarray(logits_v4, np.float32)
+    # bf16 model; kernels accumulate in f32 vs bf16 einsum baseline — allow
+    # bf16-scale absolute noise (logit std here ~12), and require identical
+    # greedy decisions
+    np.testing.assert_allclose(a, b, atol=0.8, rtol=0)
+    assert (a.argmax(-1) == b.argmax(-1)).mean() > 0.99
+
+
+def test_train_then_serve_integration(tmp_path):
+    """Train a reduced model, checkpoint it, reload, and serve requests."""
+    from repro.ckpt import latest_step, restore_checkpoint
+
+    cfg = smoke_variant(get_arch("granite-3-2b"))
+    ckpt = str(tmp_path / "ck")
+    result = train(cfg, RUN, TrainerConfig(total_steps=6, ckpt_every=6,
+                                           ckpt_dir=ckpt))
+    assert result.losses[-1] < result.losses[0]  # it learned something
+    step = latest_step(ckpt)
+    assert step == 6
+    like = T.init_params(jax.random.PRNGKey(0), cfg)
+    params = restore_checkpoint(ckpt, step, like)
+    run = RUN.replace(mode="decode")
+    engine = ServeEngine(params, cfg, run, batch_slots=2, max_len=32)
+    reqs = [Request(uid=i, prompt=[2, 3, 4], max_new_tokens=4)
+            for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained(max_steps=100)
+    assert all(r.done and len(r.generated) == 4 for r in reqs)
