@@ -32,12 +32,16 @@ def run() -> None:
             )
             tpu[lvl] = costmodel.cycles(terms, adj["loop_iters"])
         speedup = rv32["v0"] / rv32["v4"]
+        tpu_speedup = tpu["v0"] / tpu["v4"]
         in_band = SPEEDUP_BAND[0] <= speedup <= SPEEDUP_BAND[1]
         ok &= in_band
         derived = (
             ";".join(f"rv32_{l}={rv32[l]:.3e}" for l in costmodel.LEVELS)
             + ";" + ";".join(f"tpu_{l}={tpu[l]:.3e}" for l in costmodel.LEVELS)
-            + f";rv32_speedup_v4={speedup:.2f};paper_band={in_band}"
+            + f";rv32_speedup_v4={speedup:.2f}"
+            + f";tpu_speedup_v4={tpu_speedup:.2f}"
+            + f";conv_epilogue_bytes_saved={base['conv_epilogue_bytes']:.3e}"
+            + f";paper_band={in_band}"
         )
         emit(f"fig11_cycles/{name}", 0.0, derived)
     emit("fig11_cycles/ALL_IN_PAPER_BAND", 0.0, str(ok))

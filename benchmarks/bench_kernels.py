@@ -10,6 +10,7 @@ from benchmarks.common import emit, time_fn
 
 
 def run() -> None:
+    from repro.kernels.fused_conv import fused_conv_int8
     from repro.kernels.mac_matmul import mac_matmul_int8
     from repro.kernels.matmul_epilogue import matmul_epilogue
     from repro.kernels.residual_rmsnorm import residual_rmsnorm
@@ -33,3 +34,27 @@ def run() -> None:
         lambda a, b: residual_rmsnorm(a, b, jnp.ones((1024,)))[1], r, r
     )
     emit("kernel/residual_rmsnorm_512x1024", us, "bytes_saved_vs_unfused=0.33")
+
+    # conv_mac: int8 implicit-GEMM conv with the fused dequant+bias+BN+act
+    # epilogue (the CNN-class hot path); AI counts int8 in/weight bytes,
+    # f32 out bytes — the fused epilogue adds zero extra HBM traffic
+    n, h, ww, cin, cout, k = 1, 32, 32, 64, 64, 3
+    xc = jax.random.randint(jax.random.PRNGKey(5), (n, h, ww, cin),
+                            -127, 128, jnp.int8)
+    wc = jax.random.randint(jax.random.PRNGKey(6), (k, k, cin, cout),
+                            -15, 16, jnp.int8)
+    es = jnp.full((cout,), 1e-3, jnp.float32)
+    eb = jnp.zeros((cout,), jnp.float32)
+    from repro.kernels.common import conv_out_size
+
+    for stride, act in [(1, "relu"), (2, "relu6")]:
+        ho = conv_out_size(h, k, stride, "SAME")
+        wo = conv_out_size(ww, k, stride, "SAME")
+        us = time_fn(
+            lambda a, b: fused_conv_int8(a, b, es, eb, stride=stride,
+                                         padding="SAME", act=act), xc, wc
+        )
+        flops = 2 * n * ho * wo * cout * (k * k * cin)
+        nbytes = n * h * ww * cin + k * k * cin * cout + 4 * n * ho * wo * cout
+        emit(f"kernel/fused_conv_s{stride}_{act}_{h}x{ww}x{cin}", us,
+             f"arith_intensity={flops / nbytes:.1f}")

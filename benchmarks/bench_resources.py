@@ -16,6 +16,8 @@ from benchmarks.common import cnn_setup, emit
 # VMEM working set per kernel (from each kernel's BlockSpecs), bytes
 KERNEL_VMEM = {
     "mac": (128 * 128 * 1) * 2 + 128 * 128 * 4,  # x,w int8 tiles + int32 acc
+    # padded 64x64 image slab + weight tile (int8) + int32 acc + epilogue vecs
+    "conv_mac": 66 * 66 * 128 * 1 + 128 * 128 * 1 + 128 * 128 * 4 + 2 * 128 * 4,
     "add2i": 2 * 256 * 4096 * 2,  # two row blocks (worst-case D=4096)
     "fusedmac": 2 * 128 * 128 * 2 + 128 * 128 * 4,
     "zol": (128 * 128 + 2 * 128 * 128) * 2 + 128 * (128 + 2) * 4,  # flash tiles

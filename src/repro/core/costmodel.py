@@ -66,12 +66,16 @@ def energy_j(cyc: float, chips: int = 1) -> float:
 # Each returns (flops_mult, extra_bytes_saved, loop_iters_removed_fraction).
 # ---------------------------------------------------------------------------
 
-# v1 mac (int8 quantized MAC GEMM): weight bytes bf16 -> int8 (x0.5),
-#   matmul flops run at 2x rate (int8_fraction -> 1.0 for eligible GEMMs)
+# v1 mac + conv_mac (int8 quantized MAC GEMM / implicit-GEMM conv): weight
+#   bytes bf16 -> int8 (x0.5), matmul flops — dot_general AND
+#   conv_general_dilated (profile's conv_flops is part of matmul_flops) —
+#   run at the 2x int8 MXU rate via int8_fraction
 # v2 add2i (fused residual+norm): each fused site saves one full activation
 #   tensor read + write (2 x bytes of the activation)
 # v3 fusedmac (GEMM epilogue fusion): each site saves bias+act round-trip
-#   (2 x bytes of the GEMM output)
+#   (2 x bytes of the GEMM output); fused_conv sites additionally keep the
+#   bias + folded-BN + act chain in-register (conv_epilogue_bytes: exact
+#   2 x 4 x out_elems per unfused epilogue eqn, accounted by the profiler)
 # v4 zol (grid pipelining / chunked streaming): removes per-iteration loop
 #   dispatch and avoids materializing S^2 attention scores in HBM.
 
@@ -82,7 +86,10 @@ def apply_level(profile: "dict", level: str) -> dict:
     """Take raw v0 profile dict -> adjusted terms inputs for a level.
 
     profile keys: flops, matmul_flops, hbm_bytes, weight_bytes,
-    residual_norm_bytes, epilogue_bytes, attn_score_bytes, loop_iters.
+    residual_norm_bytes, epilogue_bytes, conv_epilogue_bytes,
+    attn_score_bytes, loop_iters.  (conv_flops is informational only: it is
+    already part of matmul_flops, which alone feeds int8_fraction — do not
+    add it to a delta or conv flops would be double-counted.)
     """
     p = dict(profile)
     out = {
@@ -97,8 +104,9 @@ def apply_level(profile: "dict", level: str) -> dict:
         out["int8_fraction"] = p.get("matmul_flops", 0.0) / max(p["flops"], 1.0)
     if idx >= 2:  # add2i: fused residual+rmsnorm
         out["hbm_bytes"] -= p.get("residual_norm_bytes", 0.0)
-    if idx >= 3:  # fusedmac: epilogue fusion
+    if idx >= 3:  # fusedmac + conv_mac epilogue: bias/BN/act fusion
         out["hbm_bytes"] -= p.get("epilogue_bytes", 0.0)
+        out["hbm_bytes"] -= p.get("conv_epilogue_bytes", 0.0)
     if idx >= 4:  # zol: grid loops + streaming attention
         out["hbm_bytes"] -= p.get("attn_score_bytes", 0.0)
         out["loop_iters"] = p["loop_iters"] * 0.05  # grid seqencer handles rest

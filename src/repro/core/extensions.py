@@ -2,9 +2,25 @@
 
 v0  baseline (pure jnp / XLA default)
 v1  + mac       (int8 MAC GEMM kernel — quantized multiply-accumulate)
+    + conv_mac  (int8 implicit-GEMM conv — the conv form of mac+fusedmac)
 v2  + add2i     (fused residual-add + RMSNorm)
 v3  + fusedmac  (GEMM + bias + activation epilogue fusion)
 v4  + zol       (grid-pipelined streaming: flash attention / chunked scans)
+
+paper <-> repo mapping (v-level -> extension -> pattern -> pallas kernel):
+
+  level  extension  pattern(s)              kernel (repro/kernels/)
+  v1+    mac        mac_matmul(_int8)       mac_matmul.py
+  v1+    conv_mac   fused_conv              fused_conv.py (CNN class only)
+  v2+    add2i      residual_rmsnorm        residual_rmsnorm.py
+  v3+    fusedmac   matmul_epilogue         matmul_epilogue.py
+  v4     zol        flash_attention,        flash_attention.py,
+                    wkv_chunk, ssm_chunk    wkv_chunk.py
+
+``conv_mac`` is the paper's mac/fusedmac pair as it appears in conv inner
+loops: one int8 MAC pass over the KH*KW*Cin reduction with the dequant +
+bias + folded-BN + activation epilogue fused in-register, activated from v1
+(it IS the conv mac) for the paper's own model class (cnn).
 
 Each extension names a dispatch *pattern* and the backends that implement it:
 ``ref`` (pure jnp, algorithmically fused — used on CPU and as oracle) and
@@ -37,6 +53,12 @@ EXTENSIONS: dict[str, Extension] = {
             ("cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm"),
         ),
         Extension(
+            "conv_mac",
+            ("fused_conv",),
+            "int8 implicit-GEMM conv: MAC + dequant + bias + BN + act fused",
+            ("cnn",),
+        ),
+        Extension(
             "add2i",
             ("residual_rmsnorm",),
             "fused residual-add + RMSNorm (two updates, one HBM round-trip)",
@@ -59,10 +81,10 @@ EXTENSIONS: dict[str, Extension] = {
 
 LEVEL_EXTENSIONS: dict[str, tuple[str, ...]] = {
     "v0": (),
-    "v1": ("mac",),
-    "v2": ("mac", "add2i"),
-    "v3": ("mac", "add2i", "fusedmac"),
-    "v4": ("mac", "add2i", "fusedmac", "zol"),
+    "v1": ("mac", "conv_mac"),
+    "v2": ("mac", "conv_mac", "add2i"),
+    "v3": ("mac", "conv_mac", "add2i", "fusedmac"),
+    "v4": ("mac", "conv_mac", "add2i", "fusedmac", "zol"),
 }
 
 

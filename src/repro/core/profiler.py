@@ -55,6 +55,36 @@ def _recording(sink: list):
                 if hasattr(a, "size") and hasattr(a, "dtype")
             )
             s.append((pattern, int(nbytes)))
+            if pattern == "fused_conv" and len(args) >= 2:
+                # what an UNFUSED (v0) conv epilogue round-trips through HBM:
+                # each post-op eqn (bias add, scale mul, shift add, act —
+                # relu6 is two eqns: max then min) re-reads and re-writes
+                # the f32 conv output once, matching _walk's per-eqn bytes
+                x, w = args[0], args[1]
+                stride = kwargs.get("stride", 1)
+                padding = kwargs.get("padding", "SAME")
+                # grouped/depthwise sites fall back to the jnp reference in
+                # ops._pallas_fused_conv, so only groups==1 sites may claim
+                # the fused-epilogue byte savings at v3+
+                if (hasattr(x, "shape") and len(x.shape) == 4
+                        and padding in ("SAME", "VALID")
+                        and kwargs.get("groups", 1) == 1):
+                    from repro.kernels.common import conv_out_size
+
+                    kh, kw_, _, cout = w.shape
+                    n, h, w_in, _ = x.shape
+                    ho = conv_out_size(h, kh, stride, padding)
+                    wo = conv_out_size(w_in, kw_, stride, padding)
+                    act = kwargs.get("act", "none")
+                    n_post = (
+                        int(len(args) > 2 and args[2] is not None)
+                        + int(kwargs.get("scale") is not None)
+                        + int(kwargs.get("shift") is not None)
+                        + (2 if act == "relu6" else int(act != "none"))
+                    )
+                    if ho > 0 and wo > 0:  # degenerate VALID: empty output
+                        s.append(("conv_epilogue",
+                                  int(2 * 4 * n * ho * wo * cout * n_post)))
             if pattern == "flash_attention" and len(args) >= 2:
                 # what a NON-streaming (v0) attention would spill to HBM:
                 # the Sq x Skv score matrix, written + read in f32
@@ -132,7 +162,6 @@ def _conv_flops(eqn) -> float:
     rhs = eqn.invars[1].aval  # kernel (spatial..., in_ch/g, out_ch) order varies
     out_elems = math.prod(out.shape)
     kernel_elems = math.prod(rhs.shape)
-    out_ch = eqn.params["dimension_numbers"].rhs_spec
     # flops ~= 2 * out_elems * (kernel_elems / out_channels)
     ksize = kernel_elems / max(out.shape[eqn.params["dimension_numbers"].out_spec[1]], 1)
     return 2.0 * out_elems * ksize
@@ -153,6 +182,7 @@ class PatternProfile:
     site_bytes: Counter = field(default_factory=Counter)
     flops: float = 0.0
     matmul_flops: float = 0.0
+    conv_flops: float = 0.0  # conv share of matmul_flops (int8 2x MXU rate)
     hbm_bytes: float = 0.0
     weight_bytes: float = 0.0
     loop_iters: float = 0.0
@@ -161,13 +191,14 @@ class PatternProfile:
         return {
             "flops": self.flops,
             "matmul_flops": self.matmul_flops,
+            "conv_flops": self.conv_flops,
             "hbm_bytes": self.hbm_bytes,
             "weight_bytes": self.weight_bytes,
             "residual_norm_bytes": float(self.site_bytes["residual_rmsnorm"]),
-            "epilogue_bytes": 0.5 * float(
-                self.site_bytes["matmul_epilogue"]
-                + self.site_bytes["fused_conv"]
-            ),
+            "epilogue_bytes": 0.5 * float(self.site_bytes["matmul_epilogue"]),
+            # exact per-site accounting of the conv bias/BN/act round-trips
+            # the fused_conv kernel keeps in-register (see _recording)
+            "conv_epilogue_bytes": float(self.site_bytes["conv_epilogue"]),
             "attn_score_bytes": float(self.site_bytes["attn_scores"]),
             "loop_iters": self.loop_iters,
         }
@@ -223,11 +254,16 @@ def _walk(jaxpr: jcore.Jaxpr, prof: PatternProfile, mult: float) -> None:
             prof.counts["mul(mac)"] += mult
             prof.counts["conv" if name == "conv_general_dilated" else "dot"] += mult
             if name == "conv_general_dilated":
+                prof.conv_flops += mult * fl
                 # inner-loop address bumps: 1-element step over channels,
-                # row-stride jump between kernel rows (int8 elements)
-                lhs = eqn.invars[0].aval.shape  # NHWC after our dn choice
-                row_stride = int(lhs[-2] * lhs[-1]) if len(lhs) == 4 else 0
-                prof.conv_strides[(1, row_stride)] += mult * fl / 2.0
+                # row-stride jump between kernel rows (int8 elements).
+                # Only 2D (4D-operand) convs have the NHWC row-stride shape
+                # this encodes; 1D/3D convs would silently record stride 0.
+                lhs = eqn.invars[0].aval.shape
+                if len(lhs) == 4:
+                    h_dim = eqn.params["dimension_numbers"].lhs_spec[2]
+                    row_stride = int(math.prod(lhs[h_dim + 1:]) or 1)
+                    prof.conv_strides[(1, row_stride)] += mult * fl / 2.0
             # mac pattern: matmul whose (dataflow) consumer accumulates
             nxt = _next_consumer(eqns, i)
             if nxt is not None and nxt.primitive.name in ELEMENTWISE_ADD:

@@ -14,6 +14,13 @@ def interpret_mode() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def conv_out_size(size: int, k: int, stride: int, padding: str) -> int:
+    """Spatial output size of a conv (may be <= 0 for degenerate VALID)."""
+    if padding == "SAME":
+        return -(-size // stride)
+    return (size - k) // stride + 1
+
+
 def pad_to(x: jax.Array, axis: int, multiple: int, value=0.0):
     size = x.shape[axis]
     pad = (-size) % multiple

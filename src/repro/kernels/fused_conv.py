@@ -1,0 +1,128 @@
+"""conv_mac kernel: int8 implicit-GEMM conv with the full epilogue fused.
+
+The paper's CNN inner loops are ``mac``/``fusedmac`` sites: an int8
+multiply-accumulate over the KH*KW*Cin reduction followed by bias, folded-BN
+affine, and relu/relu6 — four HBM round-trips when run unfused.  The TPU
+analogue is an implicit-GEMM conv: the NHWC activation tile for each
+(kernel-row, kernel-col, cin-block) contraction step is carved out of the
+VMEM-resident padded image *inside the kernel* (no HBM-materialized im2col),
+multiply-accumulated as an int8 x int8 -> int32 MXU GEMM into a VMEM
+accumulator (the ``mac_matmul`` pattern), and the whole epilogue — per-channel
+dequant scale, bias, BN affine, activation, algebraically pre-folded into one
+(scale, bias) pair — is applied in-register before the single HBM write.
+
+GEMM view: M = a block of output rows x the full output width (BM ~= 128
+output pixels), N = a BN block of output channels, K = KH*KW*Cin walked as a
+(KH, KW, Cin/BK) contraction grid.  Grouped/depthwise convs and exotic
+paddings stay on the jnp reference via the dispatch wrapper in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import conv_out_size, interpret_mode, pad_to
+
+BM, BN, BK = 128, 128, 128
+
+_ACTS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
+}
+
+
+def _kernel(x_ref, w_ref, es_ref, eb_ref, o_ref, acc_ref, *,
+            stride, boh, wo, act):
+    # grid: (n, oh_block, cout_block, kh, kw, cin_block); contraction dims
+    # (kh, kw, cin_block) are innermost so the accumulator carries across them
+    kh, kw, kc = pl.program_id(3), pl.program_id(4), pl.program_id(5)
+
+    @pl.when((kh == 0) & (kw == 0) & (kc == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # implicit im2col: slice the (boh*wo, BK) patch tile for this
+    # (kh, kw, cin-block) out of the VMEM-resident padded image
+    img = x_ref[0]  # (Hp, Wp, BK) int8
+    row0 = pl.program_id(1) * (boh * stride) + kh
+    span_h = (boh - 1) * stride + 1
+    span_w = (wo - 1) * stride + 1
+    rows = jax.lax.dynamic_slice(
+        img, (row0, 0, 0), (span_h, img.shape[1], img.shape[2])
+    )[::stride]
+    patch = jax.lax.dynamic_slice(
+        rows, (0, kw, 0), (boh, span_w, img.shape[2])
+    )[:, ::stride]
+    patch = patch.reshape(boh * wo, img.shape[2])
+    acc_ref[...] += jax.lax.dot_general(
+        patch, w_ref[0, 0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when((kh == pl.num_programs(3) - 1)
+             & (kw == pl.num_programs(4) - 1)
+             & (kc == pl.num_programs(5) - 1))
+    def _epilogue():
+        # dequant + bias + folded-BN affine pre-folded into (es, eb)
+        y = acc_ref[...].astype(jnp.float32) * es_ref[...] + eb_ref[...]
+        o_ref[0] = _ACTS[act](y).reshape(boh, wo, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "act",
+                                             "out_dtype"))
+def fused_conv_int8(x_int8, w_int8, eff_scale, eff_bias, *, stride=1,
+                    padding="SAME", act="none", out_dtype=jnp.float32):
+    """x: (N, H, W, Cin) int8; w: (KH, KW, Cin, Cout) int8;
+    eff_scale/eff_bias: (Cout,) f32 -> act(acc*eff_scale + eff_bias),
+    returned as (N, Ho, Wo, Cout) ``out_dtype``."""
+    n, h, w_in, _ = x_int8.shape
+    kh, kw, _, cout = w_int8.shape
+    ho = conv_out_size(h, kh, stride, padding)
+    wo = conv_out_size(w_in, kw, stride, padding)
+    if padding == "SAME":
+        top = max((ho - 1) * stride + kh - h, 0) // 2
+        left = max((wo - 1) * stride + kw - w_in, 0) // 2
+    else:
+        top = left = 0
+    boh = max(1, min(ho, BM // max(wo, 1)))  # output rows per M tile
+    ohb = -(-ho // boh)
+    # pad so every (kh, kw, row-block) slice is in bounds; zero padding is
+    # exact for symmetric int8 (zero-point 0)
+    hp_req = (ohb * boh - 1) * stride + kh
+    wp_req = (wo - 1) * stride + kw
+    x_p = jnp.pad(x_int8, ((0, 0), (top, max(hp_req - h - top, 0)),
+                           (left, max(wp_req - w_in - left, 0)), (0, 0)))
+    x_p, _ = pad_to(x_p, 3, BK)
+    w_p, _ = pad_to(w_int8, 2, BK)
+    w_p, _ = pad_to(w_p, 3, BN)
+    es, _ = pad_to(eff_scale.reshape(1, -1).astype(jnp.float32), 1, BN)
+    eb, _ = pad_to(eff_bias.reshape(1, -1).astype(jnp.float32), 1, BN)
+    _, hp, wp, cp = x_p.shape
+    nb = w_p.shape[3] // BN
+    out = pl.pallas_call(
+        functools.partial(_kernel, stride=stride, boh=boh, wo=wo, act=act),
+        grid=(n, ohb, nb, kh, kw, cp // BK),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, BK),
+                         lambda ni, oi, nbi, khi, kwi, kci: (ni, 0, 0, kci)),
+            pl.BlockSpec((1, 1, BK, BN),
+                         lambda ni, oi, nbi, khi, kwi, kci: (khi, kwi, kci, nbi)),
+            pl.BlockSpec((1, BN),
+                         lambda ni, oi, nbi, khi, kwi, kci: (0, nbi)),
+            pl.BlockSpec((1, BN),
+                         lambda ni, oi, nbi, khi, kwi, kci: (0, nbi)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, boh, wo, BN),
+            lambda ni, oi, nbi, khi, kwi, kci: (ni, oi, 0, nbi),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, ohb * boh, wo, nb * BN), out_dtype),
+        scratch_shapes=[pltpu.VMEM((boh * wo, BN), jnp.int32)],
+        interpret=interpret_mode(),
+    )(x_p, w_p, es, eb)
+    return out[:, :ho, :, :cout]

@@ -21,6 +21,7 @@ BM, BN, BK = 128, 128, 128
 _ACTS = {
     "none": lambda x: x,
     "relu": lambda x: jnp.maximum(x, 0.0),
+    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
     "silu": lambda x: x * jax.nn.sigmoid(x),
     "gelu": jax.nn.gelu,
 }

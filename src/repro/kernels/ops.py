@@ -14,11 +14,13 @@ import jax.numpy as jnp
 
 from repro.core import dispatch
 from repro.kernels import flash_attention as fa
+from repro.kernels import fused_conv as fc
 from repro.kernels import mac_matmul as mm
+from repro.kernels import ref
 from repro.kernels import matmul_epilogue as me
 from repro.kernels import residual_rmsnorm as rr
 from repro.kernels import wkv_chunk as wk
-from repro.kernels.common import pad_to
+from repro.kernels.common import conv_out_size, pad_to
 from repro.models.layers import _flash_attention_ref, _matmul_ref
 
 
@@ -34,6 +36,47 @@ def _pallas_mac_matmul_int8(x, quant):
     out = mm.mac_matmul_int8(x_int8, w_int8, scale.reshape(-1))
     out = out * xs
     return out.reshape(*orig[:-1], w_int8.shape[-1]).astype(x.dtype)
+
+
+def _pallas_fused_conv(x, w, b=None, *, stride=1, padding="SAME", groups=1,
+                       act="none", scale=None, shift=None):
+    """conv_mac: quantize to int8 on the fly, run the implicit-GEMM kernel.
+
+    Grouped/depthwise convs, exotic paddings, and acts the kernel epilogue
+    doesn't implement fall back to the fused jnp oracle (still one dispatch
+    site; the cost model owns the perf delta).
+    """
+    degenerate = (
+        x.ndim == 4 and padding in ("SAME", "VALID")
+        and (conv_out_size(x.shape[1], w.shape[0], stride, padding) <= 0
+             or conv_out_size(x.shape[2], w.shape[1], stride, padding) <= 0)
+    )  # kernel larger than input: empty output, like the baseline
+    if (groups != 1 or x.ndim != 4 or padding not in ("SAME", "VALID")
+            or act not in fc._ACTS or degenerate):
+        return ref.fused_conv_ref(
+            x, w, b, stride=stride, padding=padding, groups=groups, act=act,
+            scale=scale, shift=shift,
+        )
+    # dynamic per-tensor activation quant + per-output-channel weight quant
+    # (paper: full int8 inference; dequant folds into the kernel epilogue)
+    xf = x.astype(jnp.float32)
+    xs = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-8) / 127.0
+    x_int8 = jnp.clip(jnp.round(xf / xs), -127, 127).astype(jnp.int8)
+    wf = w.astype(jnp.float32)
+    ws = jnp.maximum(jnp.max(jnp.abs(wf), axis=(0, 1, 2)), 1e-8) / 127.0
+    w_int8 = jnp.clip(jnp.round(wf / ws), -127, 127).astype(jnp.int8)
+    cout = w.shape[-1]
+    dq = xs * ws  # per-channel dequant, (Cout,)
+    bias = jnp.zeros((cout,), jnp.float32) if b is None else b.astype(jnp.float32)
+    s = jnp.ones((cout,), jnp.float32) if scale is None else scale.astype(jnp.float32)
+    t = jnp.zeros((cout,), jnp.float32) if shift is None else shift.astype(jnp.float32)
+    # fold dequant + bias + BN affine into one in-register (scale, bias) pair:
+    #   act((acc*dq + bias)*s + t) = act(acc*(dq*s) + (bias*s + t))
+    out = fc.fused_conv_int8(
+        x_int8, w_int8, dq * s, bias * s + t,
+        stride=stride, padding=padding, act=act,
+    )
+    return out.astype(x.dtype)
 
 
 def _pallas_matmul_epilogue(x, w, b=None, act="none"):
@@ -85,6 +128,7 @@ def _pallas_wkv_chunk(r, k, v, lw, u, s0, chunk):
 
 def register():
     dispatch.register_impl("mac_matmul_int8", "pallas", _pallas_mac_matmul_int8)
+    dispatch.register_impl("fused_conv", "pallas", _pallas_fused_conv)
     dispatch.register_impl("matmul_epilogue", "pallas", _pallas_matmul_epilogue)
     dispatch.register_impl("residual_rmsnorm", "pallas", _pallas_residual_rmsnorm)
     dispatch.register_impl("flash_attention", "pallas", _pallas_flash_attention)

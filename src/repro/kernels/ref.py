@@ -12,6 +12,7 @@ from repro.models.rwkv import _wkv_chunk_ref
 _ACTS = {
     "none": lambda x: x,
     "relu": lambda x: jnp.maximum(x, 0.0),
+    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
     "silu": jax.nn.silu,
     "gelu": jax.nn.gelu,
 }
@@ -28,6 +29,25 @@ def matmul_epilogue_ref(x, w, b=None, act="none"):
     )
     if b is not None:
         y = y + b.astype(jnp.float32)
+    return _ACTS[act](y).astype(x.dtype)
+
+
+def fused_conv_ref(x, w, b=None, *, stride=1, padding="SAME", groups=1,
+                   act="none", scale=None, shift=None):
+    """Fused-conv oracle: conv + bias + folded-BN affine + act in f32."""
+    dn = jax.lax.conv_dimension_numbers(
+        x.shape, w.shape, ("NHWC", "HWIO", "NHWC")
+    )
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (stride, stride),
+        padding, dimension_numbers=dn, feature_group_count=groups,
+    )
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if shift is not None:
+        y = y + shift.astype(jnp.float32)
     return _ACTS[act](y).astype(x.dtype)
 
 

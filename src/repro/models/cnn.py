@@ -23,7 +23,8 @@ from repro.models.layers import ACTS, dense_init
 # ---------------------------------------------------------------------------
 
 
-def _conv_ref(x, w, b, *, stride, padding, groups, act):
+def _conv_ref(x, w, b, *, stride, padding, groups, act, scale=None,
+              shift=None):
     dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
     y = jax.lax.conv_general_dilated(
         x, w, (stride, stride), padding, dimension_numbers=dn,
@@ -31,14 +32,25 @@ def _conv_ref(x, w, b, *, stride, padding, groups, act):
     )
     if b is not None:
         y = y + b
+    if scale is not None:
+        y = y * scale
+    if shift is not None:
+        y = y + shift
     return ACTS[act](y)
 
 
-def conv2d(x, w, b=None, *, stride=1, padding="SAME", groups=1, act="none"):
-    """Conv + bias + act: a fusedmac site (the paper's inner conv loops)."""
+def conv2d(x, w, b=None, *, stride=1, padding="SAME", groups=1, act="none",
+           scale=None, shift=None):
+    """Conv + bias + folded-BN affine + act: one conv_mac/fusedmac site.
+
+    ``scale``/``shift`` carry the folded batchnorm so the whole post-conv
+    epilogue sits *inside* the dispatch pattern and can fuse into the
+    fused_conv kernel (one HBM round-trip instead of four).
+    """
     return dispatch.call(
         "fused_conv", _conv_ref, x, w, b,
         stride=stride, padding=padding, groups=groups, act=act,
+        scale=scale, shift=shift,
     )
 
 
@@ -145,14 +157,15 @@ def mobilenetv1_init(key):
 
 
 def mobilenetv1_apply(p, x):
-    x = conv2d(x, p["stem"]["w"], stride=2)
-    x = ACTS["relu"](_affine(x, p["stem"]["bn"]["s"], p["stem"]["bn"]["b"]))
+    x = conv2d(x, p["stem"]["w"], stride=2, scale=p["stem"]["bn"]["s"],
+               shift=p["stem"]["bn"]["b"], act="relu")
     for blk, (stride, _) in zip(p["blocks"], _MBV1_CFG):
         cin = blk["dw"]["w"].shape[-1]
-        x = conv2d(x, blk["dw"]["w"], stride=stride, groups=cin)
-        x = ACTS["relu"](_affine(x, blk["dw"]["bn"]["s"], blk["dw"]["bn"]["b"]))
-        x = conv2d(x, blk["pw"]["w"])
-        x = ACTS["relu"](_affine(x, blk["pw"]["bn"]["s"], blk["pw"]["bn"]["b"]))
+        x = conv2d(x, blk["dw"]["w"], stride=stride, groups=cin,
+                   scale=blk["dw"]["bn"]["s"], shift=blk["dw"]["bn"]["b"],
+                   act="relu")
+        x = conv2d(x, blk["pw"]["w"], scale=blk["pw"]["bn"]["s"],
+                   shift=blk["pw"]["bn"]["b"], act="relu")
     x = avgpool_global(x)
     return dense(x, p["head"]["w"], p["head"]["b"])
 
@@ -236,22 +249,23 @@ def resnet50_init(key):
 
 
 def resnet50_apply(p, x):
-    x = conv2d(x, p["stem"]["w"], stride=2)
-    x = ACTS["relu"](_affine(x, p["stem"]["bn"]["s"], p["stem"]["bn"]["b"]))
+    x = conv2d(x, p["stem"]["w"], stride=2, scale=p["stem"]["bn"]["s"],
+               shift=p["stem"]["bn"]["b"], act="relu")
     x = maxpool(x, 3, 2)
     for stage, (n_blocks, width, stage_stride) in zip(p["stages"], _R50_STAGES):
         for bi, blk in enumerate(stage):
             s = stage_stride if bi == 0 else 1
             res = x
-            y = conv2d(x, blk["c1"]["w"])
-            y = ACTS["relu"](_affine(y, blk["c1"]["bn"]["s"], blk["c1"]["bn"]["b"]))
-            y = conv2d(y, blk["c2"]["w"], stride=s)
-            y = ACTS["relu"](_affine(y, blk["c2"]["bn"]["s"], blk["c2"]["bn"]["b"]))
-            y = conv2d(y, blk["c3"]["w"])
-            y = _affine(y, blk["c3"]["bn"]["s"], blk["c3"]["bn"]["b"])
+            y = conv2d(x, blk["c1"]["w"], scale=blk["c1"]["bn"]["s"],
+                       shift=blk["c1"]["bn"]["b"], act="relu")
+            y = conv2d(y, blk["c2"]["w"], stride=s, scale=blk["c2"]["bn"]["s"],
+                       shift=blk["c2"]["bn"]["b"], act="relu")
+            y = conv2d(y, blk["c3"]["w"], scale=blk["c3"]["bn"]["s"],
+                       shift=blk["c3"]["bn"]["b"])
             if "proj" in blk:
-                res = conv2d(x, blk["proj"]["w"], stride=s)
-                res = _affine(res, blk["proj"]["bn"]["s"], blk["proj"]["bn"]["b"])
+                res = conv2d(x, blk["proj"]["w"], stride=s,
+                             scale=blk["proj"]["bn"]["s"],
+                             shift=blk["proj"]["bn"]["b"])
             x = ACTS["relu"](res + y)
     x = avgpool_global(x)
     return dense(x, p["head"]["w"], p["head"]["b"])
@@ -301,28 +315,25 @@ def mobilenetv2_init(key):
 
 
 def mobilenetv2_apply(p, x):
-    x = conv2d(x, p["stem"]["w"], stride=2)
-    x = jnp.minimum(ACTS["relu"](
-        _affine(x, p["stem"]["bn"]["s"], p["stem"]["bn"]["b"])), 6.0)
+    x = conv2d(x, p["stem"]["w"], stride=2, scale=p["stem"]["bn"]["s"],
+               shift=p["stem"]["bn"]["b"], act="relu6")
     for blk, (expand, stride) in zip(p["blocks"], _MBV2_FLAT):
         res = x
         y = x
         if expand != 1:
-            y = conv2d(y, blk["ex"]["w"])
-            y = jnp.minimum(ACTS["relu"](
-                _affine(y, blk["ex"]["bn"]["s"], blk["ex"]["bn"]["b"])), 6.0)
+            y = conv2d(y, blk["ex"]["w"], scale=blk["ex"]["bn"]["s"],
+                       shift=blk["ex"]["bn"]["b"], act="relu6")
         mid = blk["dw"]["w"].shape[-1]
-        y = conv2d(y, blk["dw"]["w"], stride=stride, groups=mid)
-        y = jnp.minimum(ACTS["relu"](
-            _affine(y, blk["dw"]["bn"]["s"], blk["dw"]["bn"]["b"])), 6.0)
-        y = conv2d(y, blk["pw"]["w"])
-        y = _affine(y, blk["pw"]["bn"]["s"], blk["pw"]["bn"]["b"])
+        y = conv2d(y, blk["dw"]["w"], stride=stride, groups=mid,
+                   scale=blk["dw"]["bn"]["s"], shift=blk["dw"]["bn"]["b"],
+                   act="relu6")
+        y = conv2d(y, blk["pw"]["w"], scale=blk["pw"]["bn"]["s"],
+                   shift=blk["pw"]["bn"]["b"])
         if stride == 1 and res.shape == y.shape:
             y = y + res
         x = y
-    x = conv2d(x, p["last"]["w"])
-    x = jnp.minimum(ACTS["relu"](
-        _affine(x, p["last"]["bn"]["s"], p["last"]["bn"]["b"])), 6.0)
+    x = conv2d(x, p["last"]["w"], scale=p["last"]["bn"]["s"],
+               shift=p["last"]["bn"]["b"], act="relu6")
     x = avgpool_global(x)
     return dense(x, p["head"]["w"], p["head"]["b"])
 
@@ -364,8 +375,10 @@ def densenet121_init(key):
 
 
 def densenet121_apply(p, x):
-    x = conv2d(x, p["stem"]["w"], stride=2)
-    x = ACTS["relu"](_affine(x, p["stem"]["bn"]["s"], p["stem"]["bn"]["b"]))
+    # stem is the only post-conv BN+act chain; the dense layers are
+    # pre-activation (BN-relu-conv), which stays outside the conv epilogue
+    x = conv2d(x, p["stem"]["w"], stride=2, scale=p["stem"]["bn"]["s"],
+               shift=p["stem"]["bn"]["b"], act="relu")
     x = maxpool(x, 3, 2)
     for block in p["blocks"]:
         for lyr in block["layers"]:

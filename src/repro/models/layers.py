@@ -101,6 +101,7 @@ ACTS = {
     # plain max (not the custom_jvp wrapper) so the chess_rewrite-analogue
     # peephole pass sees the dot->add->max instruction group
     "relu": lambda x: jnp.maximum(x, 0.0),
+    "relu6": lambda x: jnp.minimum(jnp.maximum(x, 0.0), 6.0),
     "none": lambda x: x,
 }
 

@@ -1,0 +1,236 @@
+"""fused_conv kernel + conv_mac extension wiring.
+
+Three layers of validation: (1) the int8 implicit-GEMM kernel vs an exact
+quantized oracle (same int math, f32 conv) and vs the float fused oracle
+within int8-quant tolerance; (2) dispatch coverage — under v4/pallas every
+non-grouped conv in all six CNNs reaches the kernel (no silent baseline
+fallback); (3) end-to-end model equivalence and the profiler/cost-model
+conv-epilogue accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel, profiler
+from repro.core.extensions import (
+    EXTENSIONS, extension_context, patterns_for_level,
+)
+from repro.kernels import fused_conv as fc
+from repro.kernels import ops, ref
+from repro.models import cnn
+
+
+def _rand_case(seed, h, w_sp, cin, cout, k):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (2, h, w_sp, cin), jnp.float32)
+    w = jax.random.normal(ks[1], (k, k, cin, cout), jnp.float32)
+    w = w / np.sqrt(k * k * cin)
+    b = jax.random.normal(ks[2], (cout,)) * 0.1
+    s = 0.5 + jax.random.uniform(ks[3], (cout,))
+    t = jax.random.normal(ks[4], (cout,)) * 0.1
+    return x, w, b, s, t
+
+
+def _quant_oracle(x, w, b, s, t, *, stride, padding, act):
+    """Mirror the wrapper's int8 quantization, then run the float oracle on
+    the dequantized operands — bit-faithful to the kernel up to f32 conv
+    accumulation order."""
+    xf = x.astype(jnp.float32)
+    xs = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-8) / 127.0
+    xq = jnp.clip(jnp.round(xf / xs), -127, 127) * xs
+    wf = w.astype(jnp.float32)
+    ws = jnp.maximum(jnp.max(jnp.abs(wf), axis=(0, 1, 2)), 1e-8) / 127.0
+    wq = jnp.clip(jnp.round(wf / ws), -127, 127) * ws
+    return ref.fused_conv_ref(xq, wq, b, stride=stride, padding=padding,
+                              groups=1, act=act, scale=s, shift=t)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("act", ["none", "relu", "relu6"])
+def test_fused_conv_vs_oracles(stride, padding, act):
+    # odd H/W/Cin/Cout: exercises spatial + channel padding correctness
+    x, w, b, s, t = _rand_case(stride * 7 + len(padding), 13, 11, 5, 9, 3)
+    out = ops._pallas_fused_conv(x, w, b, stride=stride, padding=padding,
+                                 groups=1, act=act, scale=s, shift=t)
+    # exact against the quantized oracle (same int math)
+    want_q = _quant_oracle(x, w, b, s, t, stride=stride, padding=padding,
+                           act=act)
+    assert out.shape == want_q.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_q),
+                               rtol=1e-3, atol=1e-3)
+    # close to the float reference within int8-quant tolerance
+    want = cnn._conv_ref(x, w, b, stride=stride, padding=padding, groups=1,
+                         act=act, scale=s, shift=t)
+    tol = 0.08 * float(jnp.max(jnp.abs(want))) + 0.05
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=tol)
+
+
+@pytest.mark.parametrize("h,w_sp,cin,cout,k", [
+    (16, 16, 17, 33, 5),   # odd channels, 5x5 kernel
+    (8, 9, 130, 140, 3),   # multi-tile Cin (>BK) and Cout (>BN)
+])
+def test_fused_conv_multi_tile_shapes(h, w_sp, cin, cout, k):
+    x, w, b, s, t = _rand_case(h + cin, h, w_sp, cin, cout, k)
+    out = ops._pallas_fused_conv(x, w, b, stride=2, padding="SAME",
+                                 groups=1, act="relu", scale=s, shift=t)
+    want_q = _quant_oracle(x, w, b, s, t, stride=2, padding="SAME",
+                           act="relu")
+    assert out.shape == want_q.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_q),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fused_conv_no_bias_no_affine():
+    x, w, _, _, _ = _rand_case(3, 12, 12, 8, 16, 3)
+    out = ops._pallas_fused_conv(x, w, None, stride=1, padding="SAME",
+                                 groups=1, act="none", scale=None, shift=None)
+    want_q = _quant_oracle(x, w, None, None, None, stride=1, padding="SAME",
+                           act="none")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_q),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_degenerate_valid_conv_matches_baseline_empty_output():
+    """Kernel larger than the input under VALID: empty output, no crash."""
+    x = jnp.ones((1, 4, 4, 2))
+    w = jnp.ones((6, 6, 2, 3))
+    out = ops._pallas_fused_conv(x, w, None, stride=2, padding="VALID",
+                                 groups=1, act="none", scale=None, shift=None)
+    want = cnn._conv_ref(x, w, None, stride=2, padding="VALID", groups=1,
+                         act="none")
+    assert out.shape == want.shape == (1, 0, 0, 3)
+
+
+def test_grouped_conv_falls_back_to_fused_ref():
+    """Depthwise convs take the jnp fallback and stay exact vs baseline."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(ks[0], (1, 10, 10, 12), jnp.float32)
+    w = jax.random.normal(ks[1], (3, 3, 1, 12), jnp.float32)
+    s = jnp.ones((12,)) * 1.3
+    t = jnp.zeros((12,))
+    out = ops._pallas_fused_conv(x, w, None, stride=2, padding="SAME",
+                                 groups=12, act="relu", scale=s, shift=t)
+    want = cnn._conv_ref(x, w, None, stride=2, padding="SAME", groups=12,
+                         act="relu", scale=s, shift=t)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# depthwise conv sites per model: these legitimately fall back
+_GROUPED_SITES = {"mobilenetv1": 13, "mobilenetv2": 17}
+
+
+@pytest.mark.parametrize("name", list(cnn.CNN_MODELS))
+def test_all_cnns_dispatch_every_nongrouped_conv(name, monkeypatch):
+    """Acceptance: under v4/pallas no stride-1/2 SAME/VALID non-grouped conv
+    silently falls back to the baseline — every site hits the kernel."""
+    init, apply, in_shape = cnn.get_cnn(name)
+    p = init(jax.random.PRNGKey(0))
+    x = jnp.zeros((1, *in_shape))
+    total = profiler.profile_fn(
+        lambda x: apply(p, x), x
+    ).site_counts["fused_conv"]
+    calls = []
+    real = fc.fused_conv_int8
+
+    def counting(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(fc, "fused_conv_int8", counting)
+    with extension_context("v4", backend="pallas"):
+        jax.eval_shape(lambda x: apply(p, x), x)
+    assert total > 0
+    assert len(calls) == total - _GROUPED_SITES.get(name, 0) > 0
+
+
+def test_lenet5_e2e_v4_pallas():
+    init, apply, in_shape = cnn.get_cnn("lenet5")
+    p = init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *in_shape))
+    base = apply(p, x)
+    with extension_context("v4", backend="pallas"):
+        fused = apply(p, x)
+    rel = float(jnp.linalg.norm(fused - base) / jnp.linalg.norm(base))
+    assert np.isfinite(np.asarray(fused)).all()
+    assert rel < 0.05, rel
+
+
+def test_mobilenetv2_e2e_v4_pallas():
+    """Full inverted-residual stack (52 convs, 35 through the kernel) stays
+    within accumulated int8-quant tolerance of the float baseline."""
+    init, apply, _ = cnn.get_cnn("mobilenetv2")
+    p = init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
+    base = apply(p, x)
+    with extension_context("v4", backend="pallas"):
+        fused = apply(p, x)
+    rel = float(jnp.linalg.norm(fused - base) / jnp.linalg.norm(base))
+    assert np.isfinite(np.asarray(fused)).all()
+    assert rel < 0.2, rel
+
+
+def test_conv_mac_extension_registered_and_recommended():
+    assert "fused_conv" in EXTENSIONS["conv_mac"].patterns
+    assert EXTENSIONS["conv_mac"].applicable_classes == ("cnn",)
+    for lvl in ("v1", "v2", "v3", "v4"):
+        assert "fused_conv" in patterns_for_level(lvl)
+    assert "fused_conv" not in patterns_for_level("v0")
+    from repro.core.classes import recommend
+
+    init, apply, in_shape = cnn.get_cnn("lenet5")
+    p = init(jax.random.PRNGKey(0))
+    prof = profiler.profile_fn(lambda x: apply(p, x),
+                               jnp.zeros((1, *in_shape)))
+    cls, exts = recommend(prof)
+    assert cls == "cnn" and "conv_mac" in exts
+
+
+def test_profiler_accounts_conv_epilogue_bytes():
+    init, apply, in_shape = cnn.get_cnn("resnet50")
+    p = init(jax.random.PRNGKey(0))
+    prof = profiler.profile_fn(lambda x: apply(p, x),
+                               jnp.zeros((1, *in_shape)))
+    ins = prof.as_costmodel_inputs()
+    assert ins["conv_epilogue_bytes"] > 0
+    assert 0 < ins["conv_flops"] <= ins["matmul_flops"]
+    # the v3 fusedmac/conv_mac delta must actually shave HBM bytes
+    v0 = costmodel.apply_level(ins, "v0")
+    v3 = costmodel.apply_level(ins, "v3")
+    assert v3["hbm_bytes"] < v0["hbm_bytes"]
+
+
+def test_profiler_skips_degenerate_conv_epilogue():
+    """Kernel larger than input (empty output) must not record negative or
+    spurious conv_epilogue bytes."""
+    x = jnp.ones((1, 4, 20, 2))
+    w = jnp.ones((7, 7, 2, 3))
+    prof = profiler.profile_fn(
+        lambda x: cnn.conv2d(x, w, stride=2, padding="VALID", act="relu"), x
+    )
+    assert prof.site_counts["fused_conv"] == 1
+    assert prof.site_bytes["conv_epilogue"] == 0
+
+
+def test_conv_stride_recording_guards_non_4d():
+    """1D convs must not record a bogus (1, 0) address-bump immediate."""
+    def f(x, w):
+        dn = jax.lax.conv_dimension_numbers(
+            x.shape, w.shape, ("NWC", "WIO", "NWC")
+        )
+        return jax.lax.conv_general_dilated(
+            x, w, (1,), "SAME", dimension_numbers=dn
+        )
+
+    prof = profiler.profile_fn(f, jnp.zeros((1, 8, 4)), jnp.zeros((3, 4, 4)))
+    assert prof.counts["conv"] == 1
+    assert (1, 0) not in prof.conv_strides
+    # 2D convs still record the NHWC row stride (W * C elements)
+    init, apply, in_shape = cnn.get_cnn("lenet5")
+    p = init(jax.random.PRNGKey(0))
+    prof2 = profiler.profile_fn(lambda x: apply(p, x),
+                                jnp.zeros((1, *in_shape)))
+    assert prof2.conv_strides
+    assert all(i2 > 0 for (_, i2) in prof2.conv_strides)

@@ -1,7 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import math
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
