@@ -1,6 +1,14 @@
-"""Shared benchmark plumbing: timing + CSV emission + cached CNN profiles."""
+"""Shared benchmark plumbing: timing + CSV/JSON emission + cached CNN
+profiles.
+
+Besides the human-readable CSV stream, each benchmark module's rows are
+dumped to a machine-readable ``BENCH_<module>.json`` (list of {name,
+us_per_call, derived}) so CI can upload them as artifacts and the perf
+trajectory is diffable across PRs.
+"""
 from __future__ import annotations
 
+import json
 import time
 from functools import lru_cache
 
@@ -16,6 +24,21 @@ CSV_ROWS: list[tuple[str, float, str]] = []
 def emit(name: str, us_per_call: float, derived: str) -> None:
     CSV_ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def write_bench_json(group: str,
+                     rows: list[tuple[str, float, str]] | None = None,
+                     path: str | None = None) -> str:
+    """Dump rows (default: everything emitted so far) as BENCH_<group>.json."""
+    rows = CSV_ROWS if rows is None else rows
+    path = path or f"BENCH_{group}.json"
+    payload = [
+        {"name": name, "us_per_call": us, "derived": derived}
+        for name, us, derived in rows
+    ]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 def time_fn(fn, *args, reps: int = 3) -> float:

@@ -1,6 +1,9 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes per-module
+``BENCH_<module>.json`` (machine-readable; CI uploads them as artifacts so
+the perf trajectory is tracked across PRs).
+
   fig3_patterns    <- paper Fig 3 + Fig 4 (pattern profile, immediates)
   fig11_cycles     <- paper Fig 11 (cycles/inference, v0..v4)
   fig12_energy     <- paper Fig 12 (energy/inference, eq. 1)
@@ -8,16 +11,21 @@ Prints ``name,us_per_call,derived`` CSV rows.
   table10_memory   <- paper Table 10 (DM/PM per version)
   kernel/*         <- Pallas kernel micro-benches (interpret mode)
   roofline/*       <- dry-run roofline terms (assignment §Roofline)
+  compile/*        <- marvel.compile AOT path (compile-once-call-many)
+
+Usage: python -m benchmarks.run [module ...]   (default: all)
 """
 from __future__ import annotations
 
 import sys
 
+from benchmarks import common
+
 
 def main() -> None:
     from benchmarks import (
-        bench_cycles, bench_energy, bench_kernels, bench_memory,
-        bench_patterns, bench_resources, bench_roofline,
+        bench_compile, bench_cycles, bench_energy, bench_kernels,
+        bench_memory, bench_patterns, bench_resources, bench_roofline,
     )
 
     print("name,us_per_call,derived")
@@ -25,13 +33,19 @@ def main() -> None:
         "patterns": bench_patterns, "cycles": bench_cycles,
         "energy": bench_energy, "resources": bench_resources,
         "memory": bench_memory, "kernels": bench_kernels,
-        "roofline": bench_roofline,
+        "roofline": bench_roofline, "compile": bench_compile,
     }
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = set(sys.argv[1:])
+    unknown = only - set(mods)
+    if unknown:
+        raise SystemExit(f"unknown benchmark module(s) {sorted(unknown)}; "
+                         f"choose from {sorted(mods)}")
     for name, mod in mods.items():
-        if only and only != name:
+        if only and name not in only:
             continue
+        start = len(common.CSV_ROWS)
         mod.run()
+        common.write_bench_json(name, common.CSV_ROWS[start:])
 
 
 if __name__ == "__main__":

@@ -1,32 +1,45 @@
 """Paper reproduction driver: the full MARVEL flow on all six CNNs
 (LeNet-5*, MobileNetV1/V2, ResNet50, VGG16, DenseNet121) — Fig 3 profile,
 class detection, chess_rewrite fusion, and the v0..v4 cycle/energy tables
-(Figs 11/12).
+(Figs 11/12) — through the one front door, ``marvel.compile``, which also
+verifies the baked AOT artifact against the baseline.
 
     PYTHONPATH=src python examples/marvel_cnn_flow.py [--models lenet5,...]
+                                                      [--quantize] [--level v4]
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.pipeline import run_marvel_flow
+from repro import marvel
 from repro.models.cnn import CNN_MODELS, get_cnn
-from repro.quant.ptq import quantize_tree
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--models", default=",".join(CNN_MODELS))
+    ap.add_argument("--level", default="v4")
+    ap.add_argument("--quantize", action="store_true",
+                    help="bake int8 PTQ into the artifact (paper step 3)")
     args = ap.parse_args()
     for name in args.models.split(","):
         init, apply, in_shape = get_cnn(name)
         params = init(jax.random.PRNGKey(0))
         x = jnp.zeros((1, *in_shape))
-        q, qstats = quantize_tree(params)  # paper step 3: int8 PTQ
-        rep = run_marvel_flow(lambda x: apply(params, x), x)
-        print(f"\n=== {name} (int8 PTQ: {qstats['quantized']} weight tensors)")
-        print(rep.summary())
+        prog = marvel.compile(
+            apply, x, params=params, level=args.level,
+            quantize=args.quantize, precompile=False,
+        )
+        x1 = jax.random.normal(jax.random.PRNGKey(1), (1, *in_shape))
+        y_base = apply(params, x1)
+        y_prog = prog(x1)
+        err = float(jnp.max(jnp.abs(y_base - y_prog)))
+        q = (f"int8 PTQ: {prog.quant_stats['quantized']} weight tensors, "
+             if args.quantize else "")
+        print(f"\n=== {name} ({q}baked artifact max|err| vs baseline "
+              f"{err:.2e})")
+        print(prog.summary())
 
 
 if __name__ == "__main__":

@@ -1,26 +1,50 @@
-"""Quickstart: the MARVEL flow in six lines, on the paper's LeNet-5*.
+"""Quickstart: one front door — a model in, a deployable artifact out.
+
+``marvel.compile`` runs the whole MARVEL flow (profile -> classify ->
+class-aware extension selection -> chess_rewrite -> pattern->impl resolution
+baked at trace time -> AOT compile) and returns a MarvelProgram: the repo's
+analogue of the paper's ISA-extended core + bare-metal binary.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core.pipeline import run_marvel_flow
+from repro import marvel
 from repro.models.cnn import get_cnn
 
 init, apply, in_shape = get_cnn("lenet5")
 params = init(jax.random.PRNGKey(0))
 x = jnp.zeros((1, *in_shape))
 
-# profile -> class-aware extension selection -> chess_rewrite -> v0..v4 report
-report = run_marvel_flow(lambda x: apply(params, x), x)
-print(report.summary())
+# one call: profile -> class -> extensions -> rewrite -> baked AOT executable
+prog = marvel.compile(lambda x: apply(params, x), x, level="v4")
+print(prog.summary())
 
-# the rewritten program really computes the same thing
-from repro.core.rewrite import rewrite
+# the artifact is the callable — same shape reuses the AOT executable
+y = prog(jnp.ones((1, *in_shape)))
+y = prog(jnp.ones((1, *in_shape)))
+print(f"\ncache: {prog.cache_hits} hits / {prog.cache_misses} misses "
+      f"({prog.cache_size} shape bucket(s)); impls baked: "
+      f"{prog.resolved_extensions or 'baseline (v0-equivalent on CPU)'}")
+print(f"modeled cost at v4: {prog.cost('v4')}")
 
-rewritten, stats = rewrite(lambda x: apply(params, x), x)
-y0 = apply(params, jnp.ones((1, *in_shape)))
-y1 = rewritten(jnp.ones((1, *in_shape)))
-print(f"\nrewrites applied: {stats}; max |diff| = "
+# int8 PTQ variant: the artifact carries the deployed rounding error
+progq = marvel.compile(apply, x, params=params, quantize=True)
+yq = progq(jnp.ones((1, *in_shape)))
+print(f"\nint8 PTQ: {progq.quant_stats['quantized']} weight tensors "
+      f"quantized; max |f32 - int8| = "
+      f"{float(jnp.max(jnp.abs(y - yq))):.2e}")
+
+# the chess_rewrite pass is baked into the artifact — its custom
+# instructions show in the deployed jaxpr, and it computes the same thing
+from repro.core.rewrite import count_custom_instructions, rewrite
+
+x1 = jnp.ones((1, *in_shape))
+print(f"\nbaked custom instructions: "
+      f"{count_custom_instructions(prog.baked_jaxpr(x1))}")
+rewritten, stats = rewrite(lambda x: apply(params, x), x1)
+y0 = apply(params, x1)
+y1 = rewritten(x1)
+print(f"rewrites applied: {stats}; max |baseline - rewritten| = "
       f"{float(jnp.max(jnp.abs(y0 - y1))):.2e}")

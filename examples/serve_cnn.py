@@ -1,0 +1,53 @@
+"""Serve a compiled CNN artifact: marvel.compile -> prog.serve() -> requests.
+
+Demonstrates the deployable-artifact property end to end: one compile, a
+warmed shape-bucketed AOT cache, then a queue of single-image requests served
+in micro-batches with zero recompiles.
+
+    PYTHONPATH=src python examples/serve_cnn.py [--model lenet5] [--n 37]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import marvel
+from repro.models.cnn import get_cnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="lenet5")
+    ap.add_argument("--n", type=int, default=37, help="requests to serve")
+    ap.add_argument("--max-batch", type=int, default=8)
+    args = ap.parse_args()
+
+    init, apply, in_shape = get_cnn(args.model)
+    params = init(jax.random.PRNGKey(0))
+    x = jnp.zeros((1, *in_shape))
+
+    prog = marvel.compile(apply, x, params=params, level="v4",
+                          precompile=False)
+    engine = prog.serve(max_batch=args.max_batch)
+    engine.warmup(in_shape)  # pre-build every batch bucket from shapes alone
+    print(f"warmed {prog.cache_size} AOT bucket(s) "
+          f"({prog.cache_misses} compiles)")
+
+    rng = np.random.default_rng(0)
+    for uid in range(args.n):
+        engine.submit(uid, rng.standard_normal(in_shape).astype(np.float32))
+    t0 = time.perf_counter()
+    results = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    counts = np.bincount([r.label for r in results.values()])
+    print(f"served {len(results)} requests in {engine.batches_run} batches "
+          f"in {dt * 1e3:.1f} ms ({dt / args.n * 1e6:.0f} us/request)")
+    print(f"cache after serving: {prog.cache_hits} hits / "
+          f"{prog.cache_misses} misses (recompiles during serving: 0 "
+          f"expected)\nclass histogram: {counts}")
+
+
+if __name__ == "__main__":
+    main()

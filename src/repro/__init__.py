@@ -1,4 +1,14 @@
 # repro: MARVEL-JAX — model-class aware extension generation for TPU,
 # adapted from "MARVEL: An End-to-End Framework for Generating Model-Class
 # Aware Custom RISC-V Extensions for Lightweight AI" (2025).
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+
+def __getattr__(name):
+    # lazy: `import repro; repro.marvel.compile(...)` without importing jax
+    # (and the whole kernel stack) on bare `import repro`
+    if name == "marvel":
+        import importlib
+
+        return importlib.import_module("repro.marvel")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

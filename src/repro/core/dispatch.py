@@ -3,9 +3,21 @@
 The paper retargets the Chess compiler with ``chess_rewrite`` rules so that
 *unchanged* application code picks up custom instructions.  Here, model code
 calls :func:`call` with a named fusable *pattern* and its baseline (pure-jnp)
-implementation; whichever :class:`ExtensionSet` is active may substitute a
+implementation; whichever :class:`ResolvedTable` is active may substitute a
 fused implementation (a Pallas TPU kernel, or a restructured jnp form).  With
-no active extensions the baseline runs — that is processor version **v0**.
+no active table the baseline runs — that is processor version **v0**.
+
+Resolution semantics (the "baked binary" property)
+--------------------------------------------------
+The pattern -> impl choice is an explicit, immutable, *hashable*
+:class:`ResolvedTable`.  ``call`` consults the table active **while the
+function body executes** — which, under ``jax.jit`` / AOT lowering, is trace
+time.  A table bound to a function with :meth:`ResolvedTable.bind` (what
+``repro.marvel.compile`` does) is therefore captured in the closure and baked
+into the jaxpr: the compiled executable keeps its impls no matter what table
+(or none) is active at call time, across threads, and across jit caches.
+The legacy :func:`active_extensions` thread-local context remains as a shim
+over :func:`use_table` for code that still resolves ambiently.
 
 Keeping this module tiny and dependency-free avoids import cycles: model code
 imports only this; ``repro.core.extensions`` registers implementations here.
@@ -13,41 +25,150 @@ imports only this; ``repro.core.extensions`` registers implementations here.
 from __future__ import annotations
 
 import contextlib
+import functools
 import threading
-from typing import Any, Callable
+from typing import Any, Callable, Iterator, Mapping
 
 _state = threading.local()
 
 # name -> {impl_name -> callable}; populated by repro.core.extensions / kernels
 _REGISTRY: dict[str, dict[str, Callable[..., Any]]] = {}
+# (pattern, impl_name) -> tuple of platforms the impl is production-ready on,
+# or None meaning "any platform" (used by backend="auto" resolution)
+_PLATFORMS: dict[tuple[str, str], tuple[str, ...] | None] = {}
+
+# impl names that always mean "run the baseline"
+BASELINE_IMPLS = ("baseline", "ref")
 
 
-def register_impl(pattern: str, impl_name: str, fn: Callable[..., Any]) -> None:
+def register_impl(pattern: str, impl_name: str, fn: Callable[..., Any], *,
+                  platforms: tuple[str, ...] | None = None) -> None:
+    """Register ``fn`` as the ``impl_name`` backend for ``pattern``.
+
+    ``platforms`` restricts where ``backend="auto"`` may pick this impl
+    (e.g. ``("tpu",)`` for Pallas kernels whose CPU form is interpret-mode
+    emulation); explicit backend selection ignores it.
+    """
     _REGISTRY.setdefault(pattern, {})[impl_name] = fn
+    _PLATFORMS[(pattern, impl_name)] = platforms
+
+
+def unregister_impl(pattern: str, impl_name: str) -> None:
+    """Remove a registered impl (tests / plugin teardown)."""
+    _REGISTRY.get(pattern, {}).pop(impl_name, None)
+    if not _REGISTRY.get(pattern):
+        _REGISTRY.pop(pattern, None)
+    _PLATFORMS.pop((pattern, impl_name), None)
 
 
 def registered(pattern: str) -> dict[str, Callable[..., Any]]:
     return dict(_REGISTRY.get(pattern, {}))
 
 
-def _active() -> dict[str, str]:
-    """Map of pattern -> chosen impl_name for the current context."""
-    return getattr(_state, "active", {})
+def registered_backends() -> set[str]:
+    """Every impl name any pattern is registered under, plus the baselines."""
+    names = set(BASELINE_IMPLS)
+    for impls in _REGISTRY.values():
+        names |= impls.keys()
+    return names
+
+
+def supported(pattern: str, impl_name: str, platform: str) -> bool:
+    """Is ``impl_name`` registered for ``pattern`` and production-ready on
+    ``platform``?  (The predicate behind ``backend="auto"``.)"""
+    if impl_name not in _REGISTRY.get(pattern, {}):
+        return False
+    plats = _PLATFORMS.get((pattern, impl_name))
+    return plats is None or platform in plats
+
+
+class ResolvedTable(Mapping):
+    """Immutable pattern -> impl_name mapping, resolved once up front.
+
+    Hashable and comparable, so it can key compile caches; :meth:`bind`
+    closure-captures it into a callable so jit/AOT tracing bakes the impl
+    choice into the program (thread-safe — no ambient state at call time).
+    """
+
+    __slots__ = ("_map",)
+
+    def __init__(self, mapping: Mapping[str, str] = ()):  # type: ignore[assignment]
+        self._map = dict(mapping)
+
+    def __getitem__(self, pattern: str) -> str:
+        return self._map[pattern]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._map)
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def __hash__(self) -> int:
+        return hash(frozenset(self._map.items()))
+
+    def __eq__(self, other: object) -> bool:
+        if isinstance(other, ResolvedTable):
+            return self._map == other._map
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{k}->{v}" for k, v in sorted(self._map.items()))
+        return f"ResolvedTable({inner})"
+
+    def impl_for(self, pattern: str) -> str | None:
+        return self._map.get(pattern)
+
+    def bind(self, fn: Callable[..., Any]) -> Callable[..., Any]:
+        """Return ``fn`` with this table active while its body runs.
+
+        Under ``jax.jit``/AOT the body runs at trace time, so the table is
+        baked into the traced program; the wrapper carries the table on
+        ``__marvel_table__`` for introspection.
+        """
+
+        @functools.wraps(fn)
+        def bound(*args, **kwargs):
+            with use_table(self):
+                return fn(*args, **kwargs)
+
+        bound.__marvel_table__ = self  # type: ignore[attr-defined]
+        return bound
+
+
+EMPTY_TABLE = ResolvedTable()
+
+
+def current_table() -> ResolvedTable:
+    """The table consulted by :func:`call` on this thread (v0 if none)."""
+    return getattr(_state, "table", EMPTY_TABLE)
 
 
 @contextlib.contextmanager
-def active_extensions(mapping: dict[str, str]):
-    old = _active()
-    _state.active = dict(mapping)
+def use_table(table: ResolvedTable | Mapping[str, str]):
+    """Activate ``table`` on this thread for the duration of the block.
+
+    Nested uses restore the outer table on exit; other threads are
+    unaffected (each thread sees its own stack).
+    """
+    if not isinstance(table, ResolvedTable):
+        table = ResolvedTable(table)
+    old = current_table()
+    _state.table = table
     try:
-        yield
+        yield table
     finally:
-        _state.active = old
+        _state.table = old
+
+
+def active_extensions(mapping: Mapping[str, str]):
+    """Legacy shim: thread-local pattern->impl activation (see use_table)."""
+    return use_table(mapping)
 
 
 def call(pattern: str, baseline: Callable[..., Any], *args, **kwargs):
-    impl_name = _active().get(pattern)
-    if impl_name is None or impl_name == "baseline":
+    impl_name = current_table().impl_for(pattern)
+    if impl_name is None or impl_name in BASELINE_IMPLS:
         return baseline(*args, **kwargs)
     impl = _REGISTRY.get(pattern, {}).get(impl_name)
     if impl is None:

@@ -7,14 +7,19 @@ v2  + add2i     (fused residual-add + RMSNorm)
 v3  + fusedmac  (GEMM + bias + activation epilogue fusion)
 v4  + zol       (grid-pipelined streaming: flash attention / chunked scans)
 
-paper <-> repo mapping (v-level -> extension -> pattern -> pallas kernel):
+paper <-> repo mapping (v-level -> extension -> pattern -> pallas kernel);
+the ``resolved`` column says when the pattern -> impl choice is fixed:
+``trace`` = baked into the jaxpr while tracing (jit / AOT — the table active
+*at trace time* is captured, exactly like the paper's synthesized core), and
+in eager execution trace time and call time coincide, so every row is
+``trace``:
 
-  level  extension  pattern(s)              kernel (repro/kernels/)
-  v1+    mac        mac_matmul(_int8)       mac_matmul.py
-  v1+    conv_mac   fused_conv              fused_conv.py (CNN class only)
-  v2+    add2i      residual_rmsnorm        residual_rmsnorm.py
-  v3+    fusedmac   matmul_epilogue         matmul_epilogue.py
-  v4     zol        flash_attention,        flash_attention.py,
+  level  extension  pattern(s)              kernel (repro/kernels/)  resolved
+  v1+    mac        mac_matmul(_int8)       mac_matmul.py            trace
+  v1+    conv_mac   fused_conv              fused_conv.py (CNN only) trace
+  v2+    add2i      residual_rmsnorm        residual_rmsnorm.py      trace
+  v3+    fusedmac   matmul_epilogue         matmul_epilogue.py       trace
+  v4     zol        flash_attention,        flash_attention.py,      trace
                     wkv_chunk, ssm_chunk    wkv_chunk.py
 
 ``conv_mac`` is the paper's mac/fusedmac pair as it appears in conv inner
@@ -23,13 +28,21 @@ bias + folded-BN + activation epilogue fused in-register, activated from v1
 (it IS the conv mac) for the paper's own model class (cnn).
 
 Each extension names a dispatch *pattern* and the backends that implement it:
-``ref`` (pure jnp, algorithmically fused — used on CPU and as oracle) and
-``pallas`` (the TPU kernel from repro/kernels, registered on import).
+``ref`` (pure jnp, algorithmically fused — used on CPU and as oracle),
+``pallas`` (the TPU kernel from repro/kernels, registered on import), and
+``auto`` (resolve per-pattern: ``pallas`` where it is registered for the
+current platform, ``ref`` otherwise — the same call works on CPU and TPU).
+:func:`resolve_table` performs that resolution ONCE, up front, into an
+immutable :class:`repro.core.dispatch.ResolvedTable`; ``repro.marvel.compile``
+bakes the table into the traced program, and :func:`extension_context` is the
+backward-compatible ambient shim over the same mechanism.
 """
 from __future__ import annotations
 
 import contextlib
 from dataclasses import dataclass, field
+
+import jax
 
 from repro.core import dispatch
 
@@ -95,21 +108,66 @@ def patterns_for_level(level: str) -> list[str]:
     return pats
 
 
+def _ensure_backends_registered() -> None:
+    # the pallas backend registers on import of repro.kernels.ops; make the
+    # registry complete before validating backend names against it
+    import repro.kernels.ops  # noqa: F401
+
+
+def resolve_table(level: str, backend: str = "ref", *,
+                  extensions: list[str] | None = None,
+                  platform: str | None = None) -> dispatch.ResolvedTable:
+    """Resolve (level, backend) -> an immutable pattern->impl table, ONCE.
+
+    ``backend="ref"``/``"baseline"`` keeps the pure-jnp baselines (the cost
+    model then owns the version deltas); a named backend (e.g. ``"pallas"``)
+    is forced for every level pattern that registers it; ``"auto"`` picks
+    ``pallas`` per-pattern where it is registered for ``platform`` (default:
+    the current JAX backend) and falls back to the baseline otherwise.
+    ``extensions`` (names from :data:`EXTENSIONS`) restricts the table to the
+    class-aware selection.  Unknown levels and backends raise ``ValueError``.
+    """
+    if level not in LEVEL_EXTENSIONS:
+        raise ValueError(
+            f"unknown processor version {level!r}; "
+            f"known levels: {sorted(LEVEL_EXTENSIONS)}"
+        )
+    if backend in dispatch.BASELINE_IMPLS:
+        # pure-baseline table; skip importing the kernel stack entirely
+        return dispatch.EMPTY_TABLE
+    _ensure_backends_registered()
+    known = dispatch.registered_backends() | {"auto"}
+    if backend not in known:
+        raise ValueError(
+            f"unknown backend {backend!r}; registered backends: "
+            f"{sorted(known)}"
+        )
+    names = LEVEL_EXTENSIONS[level]
+    if extensions is not None:
+        wanted = set(extensions)
+        names = tuple(n for n in names if n in wanted)
+    mapping: dict[str, str] = {}
+    if platform is None:
+        platform = jax.default_backend()
+    for ext in names:
+        for pat in EXTENSIONS[ext].patterns:
+            if backend == "auto":
+                if dispatch.supported(pat, "pallas", platform):
+                    mapping[pat] = "pallas"
+            elif backend in dispatch.registered(pat):
+                mapping[pat] = backend
+    return dispatch.ResolvedTable(mapping)
+
+
 @contextlib.contextmanager
 def extension_context(level: str, backend: str = "ref"):
-    """Activate a processor version.
+    """Activate a processor version ambiently (thread-local).
 
-    backend='ref' keeps the pure-jnp baselines (CPU / dry-run); the version
-    differences are then accounted by the cost model. backend='pallas' swaps
-    in the TPU kernels (or their interpret-mode forms in tests) for every
-    pattern that has one registered.
+    Backward-compatible shim over :func:`resolve_table` +
+    :func:`repro.core.dispatch.use_table`; for a deployable artifact with the
+    table baked in, use ``repro.marvel.compile`` instead.
     """
-    mapping: dict[str, str] = {}
-    if backend != "ref":
-        for pat in patterns_for_level(level):
-            if backend in dispatch.registered(pat):
-                mapping[pat] = backend
-    with dispatch.active_extensions(mapping):
+    with dispatch.use_table(resolve_table(level, backend)):
         yield
 
 

@@ -3,6 +3,10 @@
 model (Python) -> trace/jaxpr ("TVM->C") -> profile on baseline ("simulator")
 -> class detection + extension selection -> rewrite ("chess_rewrite")
 -> per-version cost/energy report (Figs 11/12) -> AOT compile ("RTL+bitfile").
+
+The single front door is :func:`repro.marvel.compile`, which returns the
+deployable ``MarvelProgram`` artifact; :func:`run_marvel_flow` remains as the
+report-only entry point and delegates to it.
 """
 from __future__ import annotations
 
@@ -12,7 +16,6 @@ from typing import Any, Callable
 import jax
 
 from repro.core import classes, costmodel, profiler, rewrite
-from repro.core.extensions import LEVEL_EXTENSIONS
 
 
 @dataclass
@@ -21,6 +24,8 @@ class MarvelReport:
     recommended_extensions: list[str]
     profile: profiler.PatternProfile
     rewrite_stats: dict
+    # did the chess_rewrite pass succeed? (False => rewrite_stats["error"])
+    rewrite_ok: bool = True
     # per processor-version modeled metrics (Fig 11/12 analogues):
     # rv32_* is the FAITHFUL reproduction (paper's issue-slot accounting,
     # paper's FPGA power); tpu_* is the hardware-adapted roofline model.
@@ -33,10 +38,13 @@ class MarvelReport:
     tpu_speedup_v4: float = 0.0
 
     def summary(self) -> str:
+        rw = self.rewrite_stats if self.rewrite_ok else (
+            f"FAILED: {self.rewrite_stats.get('error', '?')}"
+        )
         lines = [
             f"model class: {self.model_class}",
             f"extensions:  {', '.join(self.recommended_extensions) or '(none)'}",
-            f"rewrites:    {self.rewrite_stats}",
+            f"rewrites:    {rw}",
             f"{'ver':<4} {'rv32 cycles':>14} {'rv32 E(J)':>11}"
             f" {'tpu cycles':>12} {'tpu E(J)':>10} {'HBM bytes':>12}",
         ]
@@ -55,25 +63,16 @@ class MarvelReport:
         return "\n".join(lines)
 
 
-def run_marvel_flow(fn: Callable, *example_args, chips: int = 1,
-                    do_rewrite: bool = True) -> MarvelReport:
-    """Profile ``fn`` at the given example args (ShapeDtypeStructs fine),
-    select class-aware extensions, and produce the per-version report."""
-    prof = profiler.profile_fn(fn, *example_args)
-    model_class, exts = classes.recommend(prof)
-
-    stats = {}
-    if do_rewrite:
-        try:
-            _, stats = rewrite.rewrite(fn, *example_args)
-        except Exception as e:  # rewriting is an optimization, never fatal
-            stats = {"error": str(e)}
-
+def build_report(prof: profiler.PatternProfile, model_class: str,
+                 exts: list[str], rewrite_stats: dict, *,
+                 rewrite_ok: bool = True, chips: int = 1) -> MarvelReport:
+    """Fill the per-version cost/energy tables from a profile (Figs 11/12)."""
     report = MarvelReport(
         model_class=model_class,
         recommended_extensions=exts,
         profile=prof,
-        rewrite_stats=stats,
+        rewrite_stats=rewrite_stats,
+        rewrite_ok=rewrite_ok,
     )
     base = prof.as_costmodel_inputs()
     for lvl in costmodel.LEVELS:
@@ -96,3 +95,20 @@ def run_marvel_flow(fn: Callable, *example_args, chips: int = 1,
         report.tpu_cycles["v4"], 1e-30
     )
     return report
+
+
+def run_marvel_flow(fn: Callable, *example_args, chips: int = 1,
+                    do_rewrite: bool = True) -> MarvelReport:
+    """Profile ``fn`` at the given example args (ShapeDtypeStructs fine),
+    select class-aware extensions, and produce the per-version report.
+
+    Report-only front: delegates to :func:`repro.marvel.compile` (the full
+    artifact pipeline) with lowering deferred, and returns its report.
+    """
+    from repro import marvel  # local import: marvel imports this module
+
+    prog = marvel.compile(
+        fn, *example_args, level="v4", backend="ref", chips=chips,
+        do_rewrite=do_rewrite, precompile=False,
+    )
+    return prog.report

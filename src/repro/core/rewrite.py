@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax import core as jcore
 from jax.extend import core as jex_core
-from jax.interpreters import ad
+from jax.interpreters import ad, mlir
 
 # --- custom "instructions" -------------------------------------------------
 
@@ -90,6 +90,14 @@ def _fusedconv_abstract(x, w, b, *, conv_params, act):
 
 marvel_fusedconv_p.def_impl(_fusedconv_impl)
 marvel_fusedconv_p.def_abstract_eval(_fusedconv_abstract)
+
+# XLA lowerings via the impls, so rewritten programs jit/AOT-compile — the
+# custom instructions are deployable, not just a jaxpr-display artifact
+# (repro.marvel bakes the rewritten program into the MarvelProgram binary)
+for _p, _impl in [(marvel_mac_p, _mac_impl),
+                  (marvel_fusedmac_p, _fusedmac_impl),
+                  (marvel_fusedconv_p, _fusedconv_impl)]:
+    mlir.register_lowering(_p, mlir.lower_fun(_impl, multiple_results=False))
 
 CUSTOM_PRIMS = {"marvel_mac", "marvel_fusedmac", "marvel_fusedconv"}
 
@@ -212,8 +220,15 @@ def rewrite_jaxpr(closed: jcore.ClosedJaxpr) -> tuple[jcore.ClosedJaxpr, dict]:
 
 
 def rewrite(fn: Callable, *example_args) -> tuple[Callable, dict]:
-    """Trace fn, apply the peephole pass, return (callable, fusion stats)."""
-    closed = jax.make_jaxpr(fn)(*example_args)
+    """Trace fn, apply the peephole pass, return (callable, fusion stats).
+
+    The callable preserves ``fn``'s output pytree structure and is itself
+    jit/AOT-compilable (the custom primitives carry lowerings).  Note the
+    rewritten jaxpr is specialized to ``example_args``'s shapes — re-rewrite
+    per shape bucket (as MarvelProgram.lower does) for other shapes.
+    """
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
+    out_tree = jax.tree_util.tree_structure(out_shape)
     new_closed, stats = rewrite_jaxpr(closed)
 
     def rewritten(*args):
@@ -221,7 +236,7 @@ def rewrite(fn: Callable, *example_args) -> tuple[Callable, dict]:
         out = jcore.eval_jaxpr(
             new_closed.jaxpr, new_closed.consts, *flat
         )
-        return out[0] if len(out) == 1 else tuple(out)
+        return jax.tree_util.tree_unflatten(out_tree, out)
 
     return rewritten, stats
 

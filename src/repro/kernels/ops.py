@@ -1,11 +1,17 @@
 """jit'd wrappers + dispatch registration: the ``pallas`` backend.
 
 Importing this module registers every kernel under its MARVEL pattern name,
-so ``extension_context(level, backend="pallas")`` swaps them in without any
-model-code change (chess_rewrite property).  Wrappers adapt the model-layer
-calling conventions (grouped GQA heads, optional bias, quant dicts) to the
-kernels' 2D/3D tile layouts, falling back to the jnp reference for cases a
-kernel doesn't cover (cross-attention, windows, decode with kv_len).
+so ``marvel.compile(..., backend="pallas")`` / ``extension_context(level,
+backend="pallas")`` swap them in without any model-code change (chess_rewrite
+property).  Wrappers adapt the model-layer calling conventions (grouped GQA
+heads, optional bias, quant dicts) to the kernels' 2D/3D tile layouts,
+falling back to the jnp reference for cases a kernel doesn't cover
+(cross-attention, windows, decode with kv_len).
+
+Registrations carry ``platforms=("tpu",)``: ``backend="auto"`` only picks a
+Pallas kernel where it is the production form (Mosaic on TPU); on CPU the
+kernels still run — forced via ``backend="pallas"`` — but in interpret mode,
+which is correctness emulation, not a serving path.
 """
 from __future__ import annotations
 
@@ -127,12 +133,19 @@ def _pallas_wkv_chunk(r, k, v, lw, u, s0, chunk):
 
 
 def register():
-    dispatch.register_impl("mac_matmul_int8", "pallas", _pallas_mac_matmul_int8)
-    dispatch.register_impl("fused_conv", "pallas", _pallas_fused_conv)
-    dispatch.register_impl("matmul_epilogue", "pallas", _pallas_matmul_epilogue)
-    dispatch.register_impl("residual_rmsnorm", "pallas", _pallas_residual_rmsnorm)
-    dispatch.register_impl("flash_attention", "pallas", _pallas_flash_attention)
-    dispatch.register_impl("wkv_chunk", "pallas", _pallas_wkv_chunk)
+    tpu = ("tpu",)
+    dispatch.register_impl("mac_matmul_int8", "pallas", _pallas_mac_matmul_int8,
+                           platforms=tpu)
+    dispatch.register_impl("fused_conv", "pallas", _pallas_fused_conv,
+                           platforms=tpu)
+    dispatch.register_impl("matmul_epilogue", "pallas", _pallas_matmul_epilogue,
+                           platforms=tpu)
+    dispatch.register_impl("residual_rmsnorm", "pallas",
+                           _pallas_residual_rmsnorm, platforms=tpu)
+    dispatch.register_impl("flash_attention", "pallas",
+                           _pallas_flash_attention, platforms=tpu)
+    dispatch.register_impl("wkv_chunk", "pallas", _pallas_wkv_chunk,
+                           platforms=tpu)
 
 
 register()

@@ -1,0 +1,270 @@
+"""marvel.compile — one front door that turns a model into a deployable
+MarvelProgram artifact.
+
+The paper's output is not a report: it is an ISA-extended core plus an
+optimized bare-metal binary with no runtime dependencies.  This module is the
+repo's analogue of that end state — one call runs the whole flow
+
+    profile -> classify -> class-aware extension selection -> chess_rewrite
+    -> (optional int8 PTQ) -> pattern->impl resolution BAKED at trace time
+    -> AOT-lowered executable (shape/dtype-bucketed compile cache)
+
+and returns a :class:`MarvelProgram` whose ``__call__`` is the baked binary:
+the resolved extension table is closure-captured into the traced program, so
+nothing about its behaviour depends on ambient context managers, thread-local
+state, or jit-cache invisibility at call time.
+
+    from repro import marvel
+    prog = marvel.compile(lambda x: apply(params, x), x, level="v4")
+    y = prog(x)                  # AOT executable; same shape -> cache hit
+    prog.report.summary()        # v0..v4 cycle/energy tables (Figs 11/12)
+    prog.resolved_extensions     # the baked pattern -> impl table
+    prog.cost("v2")              # per-level modeled cost accessors
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+from repro.core import classes as classes_mod
+from repro.core import costmodel, dispatch, profiler
+from repro.core import rewrite as rewrite_mod
+from repro.core.extensions import resolve_table
+from repro.core.pipeline import MarvelReport, build_report
+from repro.quant.ptq import fake_quantize_tree
+
+
+def _bucket_key(args: tuple) -> tuple:
+    """Shape/dtype bucket for the AOT compile cache (treedef + leaf avals)."""
+    flat, treedef = jax.tree_util.tree_flatten(args)
+    leaves = tuple(
+        (tuple(getattr(a, "shape", ())),
+         str(getattr(a, "dtype", type(a).__name__)))
+        for a in flat
+    )
+    return (treedef, leaves)
+
+
+@dataclass
+class MarvelProgram:
+    """The deployable artifact: a table-baked, AOT-compiled executable plus
+    the analysis that produced it.
+
+    ``__call__`` looks up (or builds) the AOT executable for the argument
+    shapes/dtypes and runs it — compile once, call many.  ``cache_hits`` /
+    ``cache_misses`` count bucket reuse, the serving-facing signal that the
+    binary really is baked.
+    """
+
+    fn: Callable  # table-bound (and optionally fake-quantized) callable
+    level: str
+    backend: str  # as requested (possibly "auto")
+    table: dispatch.ResolvedTable
+    report: MarvelReport
+    chips: int = 1
+    donate: tuple[int, ...] = ()
+    quantized: bool = False
+    quant_stats: dict = field(default_factory=dict)
+    # apply the chess_rewrite pass to the program that is actually lowered
+    # (set by compile() when the pass succeeded on the example args)
+    rewrite_baked: bool = False
+    cache_hits: int = 0
+    cache_misses: int = 0
+    _cache: dict = field(default_factory=dict, repr=False)
+
+    @property
+    def model_class(self) -> str:
+        return self.report.model_class
+
+    @property
+    def resolved_extensions(self) -> dict[str, str]:
+        """The baked pattern -> impl mapping (empty means pure baseline)."""
+        return dict(self.table)
+
+    def cost(self, level: str | None = None) -> dict[str, float]:
+        """Modeled per-inference cost at ``level`` (default: the compiled
+        level): rv32/tpu cycles + energy and HBM bytes (Fig 11/12 rows)."""
+        level = level or self.level
+        if level not in costmodel.LEVELS:
+            raise ValueError(
+                f"unknown processor version {level!r}; "
+                f"known levels: {costmodel.LEVELS}"
+            )
+        r = self.report
+        return {
+            "rv32_cycles": r.rv32_cycles[level],
+            "rv32_energy_j": r.rv32_energy_j[level],
+            "tpu_cycles": r.tpu_cycles[level],
+            "tpu_energy_j": r.tpu_energy_j[level],
+            "hbm_bytes": r.hbm_bytes[level],
+        }
+
+    def _executable_fn(self, *args) -> Callable:
+        """What actually lowers: the table-bound fn, chess_rewritten for this
+        shape bucket (the rewritten jaxpr is shape-specialized, so the pass
+        re-runs per bucket; it already succeeded on the example args)."""
+        if self.rewrite_baked:
+            try:
+                fn, _ = rewrite_mod.rewrite(self.fn, *args)
+                return fn
+            except Exception:  # never lose the artifact to the optimizer
+                return self.fn
+        return self.fn
+
+    def baked_jaxpr(self, *args):
+        """The jaxpr of the program this bucket deploys — custom marvel_*
+        instructions visible (Fig 5's v0-vs-v4 assembly analogue)."""
+        return jax.make_jaxpr(self._executable_fn(*args))(*args)
+
+    def lower(self, *args):
+        """AOT-lower for these args (ShapeDtypeStructs fine); no caching."""
+        return jax.jit(self._executable_fn(*args),
+                       donate_argnums=self.donate).lower(*args)
+
+    def executable_for(self, *args):
+        """The compiled executable for this shape/dtype bucket (build on
+        miss).  Accepts ShapeDtypeStructs, so buckets can be warmed ahead of
+        serving without touching real data."""
+        key = _bucket_key(args)
+        exe = self._cache.get(key)
+        if exe is None:
+            self.cache_misses += 1
+            exe = self.lower(*args).compile()
+            self._cache[key] = exe
+        else:
+            self.cache_hits += 1
+        return exe
+
+    def __call__(self, *args):
+        return self.executable_for(*args)(*args)
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    def serve(self, **engine_kwargs):
+        """A batch-inference engine over this artifact (CNN classifiers).
+
+        The engine drives ``__call__`` with bucketed batches, so serving
+        reuses the AOT cache — one executable per batch bucket.
+        """
+        if self.model_class != "cnn":
+            raise NotImplementedError(
+                f"serve() currently covers the cnn model class; this program "
+                f"is {self.model_class!r} (use repro.runtime.server for LMs)"
+            )
+        from repro.runtime.cnn_server import CnnBatchEngine
+
+        return CnnBatchEngine(self, **engine_kwargs)
+
+    def summary(self) -> str:
+        head = (
+            f"MarvelProgram(level={self.level}, backend={self.backend}, "
+            f"quantized={self.quantized}, "
+            f"impls={self.resolved_extensions or 'baseline'})"
+        )
+        return head + "\n" + self.report.summary()
+
+
+def compile(fn: Callable, *example_args, level: str = "v4",
+            backend: str = "auto", quantize: bool = False, params=None,
+            donate: tuple[int, ...] = (), chips: int = 1,
+            do_rewrite: bool = True, precompile: bool = True,
+            platform: str | None = None) -> MarvelProgram:
+    """Run the full MARVEL flow on ``fn`` and return the deployable artifact.
+
+    Args:
+      fn: the model callable.  Either closes over its params
+        (``fn(*example_args)``) or, when ``params`` is given, takes them
+        first (``fn(params, *example_args)``).
+      example_args: example inputs (concrete arrays or ShapeDtypeStructs).
+      level: processor version to bake (``v0``..``v4``).
+      backend: ``"auto"`` (pallas per-pattern where production-ready on the
+        current platform, baseline otherwise), ``"ref"``/``"baseline"``, or a
+        registered backend name (``"pallas"`` forces kernels everywhere,
+        interpret mode off-TPU).  Unknown names raise ``ValueError``.
+      quantize: apply int8 PTQ to ``params`` (requires ``params``); the
+        artifact then carries the deployed model's int8 rounding error.
+      params: optional pytree of model parameters to bind (and quantize).
+      donate: argnums of ``example_args`` to donate to the executable.
+      chips: cost-model chip count.
+      do_rewrite: run the chess_rewrite jaxpr pass for the report.
+      precompile: eagerly build the AOT executable for the example-arg
+        bucket (compile-at-deploy; disable for report-only flows).
+      platform: override the platform ``backend="auto"`` resolves against.
+    """
+    quant_stats: dict = {}
+    if params is not None:
+        bound_params = params
+        if quantize:
+            bound_params, quant_stats = fake_quantize_tree(params)
+        model_fn = lambda *a: fn(bound_params, *a)  # noqa: E731
+    else:
+        if quantize:
+            raise ValueError(
+                "quantize=True needs the parameter pytree: pass params=..."
+            )
+        model_fn = fn
+
+    # 1-2) profile on the baseline + model-class detection ("simulator" step)
+    prof = profiler.profile_fn(model_fn, *example_args)
+    model_class, exts = classes_mod.recommend(prof)
+
+    # 3) class-aware extension selection -> explicit resolved table, baked
+    # by closure capture: jit/AOT tracing of bound_fn resolves every
+    # dispatch site against it at trace time
+    table = resolve_table(level, backend, extensions=exts, platform=platform)
+    bound_fn = table.bind(model_fn)
+
+    # 4) chess_rewrite of the bound program — the fusions land in the
+    # deployed binary, and the report counts what was actually baked;
+    # failures degrade with a warning, never silently
+    rewrite_stats: dict = {}
+    rewrite_ok = True
+    if do_rewrite:
+        try:
+            _, rewrite_stats = rewrite_mod.rewrite(bound_fn, *example_args)
+        except Exception as e:  # rewriting is an optimization, never fatal
+            rewrite_stats = {"error": str(e)}
+            rewrite_ok = False
+            warnings.warn(
+                f"chess_rewrite failed ({e!r}); continuing without jaxpr "
+                f"fusion — see MarvelReport.rewrite_ok",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+
+    report = build_report(prof, model_class, exts, rewrite_stats,
+                          rewrite_ok=rewrite_ok, chips=chips)
+
+    # 5) the artifact: rewritten (per shape bucket) + AOT-lowered
+    program = MarvelProgram(
+        fn=bound_fn,
+        level=level,
+        backend=backend,
+        table=table,
+        report=report,
+        chips=chips,
+        donate=tuple(donate),
+        quantized=bool(quantize),
+        quant_stats=quant_stats,
+        rewrite_baked=do_rewrite and rewrite_ok,
+    )
+
+    # 6) AOT-lower the example bucket now (deploy-time compile counts as the
+    # first cache miss; every same-shape call after it is a hit)
+    if precompile:
+        program.executable_for(*example_args)
+    return program
+
+
+def compile_timed(fn: Callable, *example_args, **kwargs
+                  ) -> tuple[MarvelProgram, float]:
+    """compile() plus wall-clock seconds spent — benchmark convenience."""
+    t0 = time.perf_counter()
+    prog = compile(fn, *example_args, **kwargs)
+    return prog, time.perf_counter() - t0

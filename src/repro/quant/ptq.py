@@ -24,12 +24,11 @@ def dequantize(q: dict) -> jax.Array:
     return q["w_int8"].astype(jnp.float32) * q["scale"]
 
 
-def quantize_tree(params, predicate=None):
-    """Quantize every >=2D floating leaf (weights); keep others as-is.
-
-    Returns a pytree where quantized leaves become {"w_int8","scale"} dicts.
-    predicate(name, leaf) -> bool can exclude leaves (e.g. norm scales).
-    """
+def _map_weight_leaves(params, transform, predicate=None):
+    """Shared PTQ traversal: apply ``transform`` to every eligible weight
+    leaf (>=2D floating, predicate-approved), keep others as-is.  One
+    eligibility rule for both the real- and fake-quant paths, so their
+    "quantized" counts always correspond."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     total, quant = 0, 0
@@ -42,11 +41,34 @@ def quantize_tree(params, predicate=None):
             and jnp.issubdtype(leaf.dtype, jnp.floating)
             and (predicate is None or predicate(name, leaf))
         )
-        out.append(quantize_weight(leaf) if eligible else leaf)
+        out.append(transform(leaf) if eligible else leaf)
         quant += int(eligible)
     return jax.tree_util.tree_unflatten(treedef, out), {
         "quantized": quant, "total": total
     }
+
+
+def quantize_tree(params, predicate=None):
+    """Quantize every >=2D floating leaf (weights); keep others as-is.
+
+    Returns a pytree where quantized leaves become {"w_int8","scale"} dicts.
+    predicate(name, leaf) -> bool can exclude leaves (e.g. norm scales).
+    """
+    return _map_weight_leaves(params, quantize_weight, predicate)
+
+
+def fake_quantize_tree(params, predicate=None):
+    """int8 PTQ with the tree structure preserved: each eligible weight is
+    quantized then dequantized in place (w -> dequantize(quantize(w))), so
+    the result drops into any model apply unchanged while carrying exactly
+    the int8 rounding error of the deployed artifact.  Returns
+    (params_like_tree, {"quantized": n, "total": m}).
+    """
+    return _map_weight_leaves(
+        params,
+        lambda w: dequantize(quantize_weight(w)).astype(w.dtype),
+        predicate,
+    )
 
 
 def quantized_bytes(params) -> int:

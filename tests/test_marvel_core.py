@@ -144,6 +144,106 @@ def test_marvel_flow_end_to_end_cnn():
     ) >= 3
 
 
+def test_dispatch_nested_contexts_restore():
+    from repro.core import dispatch
+
+    assert len(dispatch.current_table()) == 0
+    with dispatch.use_table({"a": "x"}):
+        assert dict(dispatch.current_table()) == {"a": "x"}
+        with dispatch.use_table({"b": "y"}):
+            # inner table REPLACES (not merges) and restores on exit
+            assert dict(dispatch.current_table()) == {"b": "y"}
+        assert dict(dispatch.current_table()) == {"a": "x"}
+    assert len(dispatch.current_table()) == 0
+    # ...even when the body raises
+    with pytest.raises(RuntimeError):
+        with dispatch.use_table({"a": "x"}):
+            raise RuntimeError("boom")
+    assert len(dispatch.current_table()) == 0
+
+
+def test_dispatch_per_thread_isolation():
+    import threading
+
+    from repro.core import dispatch
+
+    seen = {}
+
+    def worker():
+        seen["table"] = dispatch.current_table()
+        with dispatch.use_table({"thread": "only"}):
+            seen["inner"] = dict(dispatch.current_table())
+
+    with dispatch.use_table({"main": "impl"}):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        # the other thread's context never leaked into this one
+        assert dict(dispatch.current_table()) == {"main": "impl"}
+    assert len(seen["table"]) == 0  # ...and ours never leaked into it
+    assert seen["inner"] == {"thread": "only"}
+
+
+def test_dispatch_resolved_table_baked_under_jit():
+    """A jitted fn compiled inside a context keeps its impls outside it —
+    resolution happens at trace time, baked into the executable."""
+    from repro.core import dispatch
+
+    dispatch.register_impl("_test_boost", "boost", lambda x: x + 100.0)
+    try:
+        def f(x):
+            return dispatch.call("_test_boost", lambda x: x, x)
+
+        jf = jax.jit(f)
+        with dispatch.use_table({"_test_boost": "boost"}):
+            inside = float(jf(jnp.zeros(())))
+        outside = float(jf(jnp.zeros(())))  # cached executable: impl persists
+        assert inside == 100.0 and outside == 100.0
+        # a function traced OUTSIDE any context stays baseline forever
+        jf2 = jax.jit(lambda x: f(x) * 1.0)
+        base = float(jf2(jnp.zeros(())))
+        with dispatch.use_table({"_test_boost": "boost"}):
+            still_base = float(jf2(jnp.zeros(())))  # cache hit: no retrace
+        assert base == 0.0 and still_base == 0.0
+        # bind() closure-captures the table: no ambient context needed at all
+        bound = dispatch.ResolvedTable({"_test_boost": "boost"}).bind(f)
+        assert float(jax.jit(bound)(jnp.zeros(()))) == 100.0
+    finally:
+        # don't leak 'boost' into registered_backends() for other tests
+        dispatch.unregister_impl("_test_boost", "boost")
+    assert "boost" not in dispatch.registered_backends()
+
+
+def test_dispatch_resolved_table_hashable_mapping():
+    from repro.core.dispatch import ResolvedTable
+
+    a = ResolvedTable({"p": "x", "q": "y"})
+    b = ResolvedTable({"q": "y", "p": "x"})
+    assert a == b and hash(a) == hash(b) and len(a) == 2
+    assert a.impl_for("p") == "x" and a.impl_for("zz") is None
+    assert dict(a) == {"p": "x", "q": "y"}
+
+
+def test_extension_context_is_resolve_table_shim():
+    import repro.kernels.ops  # noqa: F401
+    from repro.core import dispatch
+    from repro.core.extensions import resolve_table
+
+    with extension_context("v2", backend="pallas"):
+        assert dispatch.current_table() == resolve_table("v2", "pallas")
+    with extension_context("v4"):  # ref: pure-baseline table
+        assert len(dispatch.current_table()) == 0
+
+
+def test_extension_context_unknown_backend_raises():
+    with pytest.raises(ValueError, match="pallsa"):
+        with extension_context("v4", backend="pallsa"):
+            pass  # pragma: no cover
+    with pytest.raises(ValueError, match="unknown processor version"):
+        with extension_context("v99"):
+            pass  # pragma: no cover
+
+
 def test_quantize_roundtrip_error_bounded():
     w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
     q = quantize_weight(w)
@@ -159,3 +259,22 @@ def test_quantize_tree_skips_vectors():
     assert stats["quantized"] == 1
     assert isinstance(q["w"], dict) and q["w"]["w_int8"].dtype == jnp.int8
     assert q["scale"].dtype == jnp.float32
+
+
+def test_fake_quantize_tree_preserves_structure():
+    from repro.quant.ptq import fake_quantize_tree
+
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 8)),
+              "scale": jnp.ones((8,)),
+              "idx": jnp.zeros((4,), jnp.int32)}
+    fq, stats = fake_quantize_tree(params)
+    assert stats == {"quantized": 1, "total": 3}
+    # same treedef, same shapes/dtypes — drop-in for any apply fn
+    assert jax.tree_util.tree_structure(fq) == jax.tree_util.tree_structure(
+        params
+    )
+    assert fq["w"].shape == (16, 8) and fq["w"].dtype == params["w"].dtype
+    assert fq["scale"] is params["scale"]
+    # carries exactly the int8 rounding error
+    err = jnp.max(jnp.abs(fq["w"] - params["w"]))
+    assert 0.0 < float(err) <= float(jnp.max(jnp.abs(params["w"]))) / 127.0 + 1e-6
