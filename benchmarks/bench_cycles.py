@@ -36,8 +36,8 @@ def run() -> None:
         in_band = SPEEDUP_BAND[0] <= speedup <= SPEEDUP_BAND[1]
         ok &= in_band
         derived = (
-            ";".join(f"rv32_{l}={rv32[l]:.3e}" for l in costmodel.LEVELS)
-            + ";" + ";".join(f"tpu_{l}={tpu[l]:.3e}" for l in costmodel.LEVELS)
+            ";".join(f"rv32_{v}={rv32[v]:.3e}" for v in costmodel.LEVELS)
+            + ";" + ";".join(f"tpu_{v}={tpu[v]:.3e}" for v in costmodel.LEVELS)
             + f";rv32_speedup_v4={speedup:.2f}"
             + f";tpu_speedup_v4={tpu_speedup:.2f}"
             + f";conv_epilogue_bytes_saved={base['conv_epilogue_bytes']:.3e}"

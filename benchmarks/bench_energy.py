@@ -21,6 +21,6 @@ def run() -> None:
             vals[lvl] = costmodel.rv32_energy_j(cyc, lvl)
         red = vals["v0"] / vals["v4"]
         derived = ";".join(
-            f"{l}={vals[l]:.4e}J" for l in costmodel.LEVELS
+            f"{v}={vals[v]:.4e}J" for v in costmodel.LEVELS
         ) + f";reduction_v4={red:.2f}x"
         emit(f"fig12_energy/{name}", 0.0, derived)

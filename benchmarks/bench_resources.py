@@ -7,7 +7,6 @@ sites enabled, and compiled-code size delta of a representative model.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.extensions import LEVEL_EXTENSIONS
 
@@ -27,7 +26,6 @@ KERNEL_VMEM = {
 def run() -> None:
     params, apply, x = cnn_setup("mobilenetv1")
     base_code = len(jax.jit(lambda x: apply(params, x)).lower(x).as_text())
-    v0_vmem = 0
     for lvl, exts in LEVEL_EXTENSIONS.items():
         vmem = sum(KERNEL_VMEM[e] for e in exts)
         overhead = vmem / (16 * 2**20)  # fraction of 16 MB v5e VMEM

@@ -1,0 +1,86 @@
+"""Serving-tier benchmark: throughput + tail latency off the async engine.
+
+Drives the full deployment path — marvel.compile -> shard() over the local
+devices -> AsyncCnnEngine — with a wave of concurrent single-image requests,
+and emits the rows the CI bench-gate consumes: requests/s, p50/p99 latency,
+batch occupancy, and the recompiles-after-warmup counter (must be 0: the
+whole point of the bucketed AOT cache).  The synchronous engine is measured
+alongside as the no-coalescing comparison point.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+
+from benchmarks.common import cnn_setup, emit
+
+MODELS = ("lenet5", "mobilenetv1")
+REQUESTS = 64
+MAX_BATCH = 8
+
+
+async def _drive(engine, imgs) -> float:
+    t0 = time.perf_counter()
+    await engine.submit_wave(imgs)
+    return time.perf_counter() - t0
+
+
+def run() -> None:
+    from repro import marvel
+    from repro.launch.serve import random_images
+
+    for name in MODELS:
+        params, apply, x = cnn_setup(name)
+        in_shape = tuple(np.asarray(x).shape[1:])
+        prog = marvel.compile(apply, x, params=params, level="v4",
+                              precompile=False).shard()
+        imgs = random_images(in_shape, REQUESTS)
+
+        # async tier: bounded admission -> coalesce -> DP dispatch
+        engine = prog.serve(mode="async", max_batch=MAX_BATCH,
+                            max_delay_ms=2.0)
+
+        async def session(engine=engine, in_shape=in_shape, imgs=imgs):
+            async with engine:
+                engine.warmup(in_shape)
+                warm_misses = engine.compute.program.cache_misses
+                dt = await _drive(engine, imgs)
+                return dt, warm_misses
+
+        dt, warm_misses = asyncio.run(session())
+        m = engine.metrics()
+        recompiles = m["cache_misses"] - warm_misses
+        emit(
+            f"serving/{name}_async_throughput", dt / REQUESTS * 1e6,
+            f"req_s={REQUESTS / dt:.1f};batches={m['batches']};"
+            f"occupancy={m['batch_occupancy']:.2f};"
+            f"dp_shards={m['dp_shards']};"
+            f"recompiles_after_warmup={recompiles}",
+        )
+        emit(
+            f"serving/{name}_async_latency", 0.0,
+            f"p50_ms={m['p50_latency_ms']:.2f};"
+            f"p99_ms={m['p99_latency_ms']:.2f};"
+            f"deadline_flushes={m['deadline_flushes']};"
+            f"full_flushes={m['full_flushes']}",
+        )
+
+        # sync comparison: same buckets, caller-driven, no coalescing window
+        sync = prog.serve(max_batch=MAX_BATCH)
+        for uid, im in enumerate(imgs):
+            sync.submit(uid, im)
+        t0 = time.perf_counter()
+        sync.run_until_drained()
+        sdt = time.perf_counter() - t0
+        ms = sync.metrics()
+        emit(
+            f"serving/{name}_sync_throughput", sdt / REQUESTS * 1e6,
+            f"req_s={REQUESTS / sdt:.1f};batches={ms['batches']};"
+            f"occupancy={ms['batch_occupancy']:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -13,10 +13,9 @@ import time
 from functools import lru_cache
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import profiler
-from repro.models.cnn import CNN_MODELS, get_cnn
+from repro.models.cnn import get_cnn
 
 CSV_ROWS: list[tuple[str, float, str]] = []
 

@@ -1,0 +1,156 @@
+"""Perf-trajectory gate: diff BENCH_*.json against a baseline snapshot.
+
+CI runs the benchmark suite, then this module compares the fresh
+``BENCH_*.json`` files against the committed ``benchmarks/baseline/``
+snapshot (or a directory of artifacts downloaded from the previous main
+run).  Deterministic model-derived metrics are *gated*: a regression beyond
+``--tol`` (default 15%) on any ``*speedup*`` metric (higher is better) or
+any ``rv32_v*``/``tpu_v*`` cycles metric (lower is better) fails the job.
+Wall-clock metrics (``us_per_call``, ``req_s``, ``p99_ms`` ...) vary with
+the runner, so they are reported in the delta table but never gate.
+
+The delta table is written to ``$GITHUB_STEP_SUMMARY`` when set (the job
+summary page), and always printed to stdout.
+
+Usage: python -m benchmarks.gate [--baseline benchmarks/baseline]
+                                 [--current .] [--tol 0.15] [--strict]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+GATE_HIGHER = re.compile(r"speedup")
+GATE_LOWER = re.compile(r"^(rv32|tpu)_v\d$")
+
+
+def load_rows(directory: str) -> dict[str, dict[str, float]]:
+    """All BENCH_*.json rows in ``directory``: name -> numeric metrics."""
+    rows: dict[str, dict[str, float]] = {}
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        with open(path) as f:
+            for row in json.load(f):
+                rows[row["name"]] = parse_metrics(row)
+    return rows
+
+
+def parse_metrics(row: dict) -> dict[str, float]:
+    """The numeric metrics of one row: us_per_call + parsed derived k=v's."""
+    out: dict[str, float] = {}
+    if row.get("us_per_call"):
+        out["us_per_call"] = float(row["us_per_call"])
+    for part in str(row.get("derived", "")).split(";"):
+        if "=" not in part:
+            continue
+        key, _, val = part.partition("=")
+        try:
+            out[key.strip()] = float(val)
+        except ValueError:
+            continue
+    return out
+
+
+def gate_direction(row_name: str, key: str) -> int:
+    """+1: higher is better (gated); -1: lower is better (gated); 0: not
+    gated (wall-clock / informational)."""
+    if GATE_HIGHER.search(key):
+        return +1
+    if "cycles" in row_name and GATE_LOWER.match(key):
+        return -1
+    return 0
+
+
+def compare(baseline: dict, current: dict, tol: float
+            ) -> tuple[list[dict], list[str]]:
+    """Per-metric deltas for rows present in both, plus gated-but-missing."""
+    deltas, missing = [], []
+    for name, base_metrics in sorted(baseline.items()):
+        cur_metrics = current.get(name)
+        if cur_metrics is None:
+            if any(gate_direction(name, k) for k in base_metrics):
+                missing.append(name)
+            continue
+        for key, base in base_metrics.items():
+            if key not in cur_metrics:
+                continue
+            cur = cur_metrics[key]
+            delta = (cur - base) / abs(base) if base else 0.0
+            direction = gate_direction(name, key)
+            regressed = (
+                direction != 0 and (-direction * delta) > tol
+            )
+            deltas.append({
+                "row": name, "metric": key, "baseline": base,
+                "current": cur, "delta": delta, "gated": direction != 0,
+                "regressed": regressed,
+            })
+    return deltas, missing
+
+
+def markdown_table(deltas: list[dict], tol: float) -> str:
+    """Gated metrics always; ungated ones only when they moved > tol (keeps
+    the summary readable — kernels alone emit dozens of wall-clock rows)."""
+    lines = [
+        "| row | metric | baseline | current | delta | gate |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    for d in deltas:
+        if not d["gated"] and abs(d["delta"]) <= tol:
+            continue
+        status = ("**FAIL**" if d["regressed"]
+                  else "ok" if d["gated"] else "info")
+        lines.append(
+            f"| {d['row']} | {d['metric']} | {d['baseline']:.4g} "
+            f"| {d['current']:.4g} | {d['delta']:+.1%} | {status} |"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="benchmarks/baseline")
+    ap.add_argument("--current", default=".")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="max allowed regression on gated metrics")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail when a gated baseline row disappears")
+    args = ap.parse_args(argv)
+
+    baseline = load_rows(args.baseline)
+    if not baseline:
+        print(f"no BENCH_*.json under {args.baseline}; nothing to gate")
+        return 0
+    current = load_rows(args.current)
+    deltas, missing = compare(baseline, current, args.tol)
+    failures = [d for d in deltas if d["regressed"]]
+
+    table = markdown_table(deltas, args.tol)
+    n_gated = sum(d["gated"] for d in deltas)
+    verdict = (
+        f"bench-gate: {n_gated} gated metrics, {len(failures)} regression(s) "
+        f"beyond {args.tol:.0%}, {len(missing)} gated row(s) missing"
+    )
+    summary = f"## Perf trajectory vs baseline\n\n{table}\n\n{verdict}\n"
+    if missing:
+        summary += "\nmissing gated rows: " + ", ".join(missing) + "\n"
+    print(summary)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(summary)
+
+    for d in failures:
+        print(f"REGRESSION {d['row']} {d['metric']}: "
+              f"{d['baseline']:.4g} -> {d['current']:.4g} "
+              f"({d['delta']:+.1%})", file=sys.stderr)
+    if failures or (args.strict and missing):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -93,7 +93,6 @@ def main():
     arch, shape = sys.argv[1], sys.argv[2]
     only = sys.argv[3].split(",") if len(sys.argv) > 3 else None
     cfg = get_arch(arch)
-    base_run = default_run(cfg, shape)
     out = {"arch": arch, "shape": shape, "experiments": []}
 
     def measure(tag, run):

@@ -1,52 +1,70 @@
-"""Serve a compiled CNN artifact: marvel.compile -> prog.serve() -> requests.
+"""Serve a compiled CNN artifact through the async tier.
 
-Demonstrates the deployable-artifact property end to end: one compile, a
-warmed shape-bucketed AOT cache, then a queue of single-image requests served
-in micro-batches with zero recompiles.
+marvel.compile -> shard() over the local devices -> AsyncCnnEngine: one
+compile per batch bucket (warmed ahead of traffic), then a wave of
+concurrent single-image requests admitted through the bounded queue,
+coalesced into micro-batches, dispatched data-parallel across the mesh, and
+resolved per-request.  The whole client API is one awaited call per
+request::
 
-    PYTHONPATH=src python examples/serve_cnn.py [--model lenet5] [--n 37]
+    async with prog.serve(mode="async") as engine:
+        result = await engine.submit(image)        # one request
+        results = await engine.submit_wave(images)  # a concurrent wave
+
+    PYTHONPATH=src python examples/serve_cnn.py [--model lenet5] [--n 64]
 """
 import argparse
+import asyncio
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import marvel
+from repro.launch.serve import random_images
 from repro.models.cnn import get_cnn
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="lenet5")
-    ap.add_argument("--n", type=int, default=37, help="requests to serve")
+    ap.add_argument("--n", type=int, default=64, help="requests to serve")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
     args = ap.parse_args()
 
     init, apply, in_shape = get_cnn(args.model)
     params = init(jax.random.PRNGKey(0))
-    x = jnp.zeros((1, *in_shape))
+    x = np.zeros((1, *in_shape), np.float32)
 
     prog = marvel.compile(apply, x, params=params, level="v4",
                           precompile=False)
-    engine = prog.serve(max_batch=args.max_batch)
-    engine.warmup(in_shape)  # pre-build every batch bucket from shapes alone
-    print(f"warmed {prog.cache_size} AOT bucket(s) "
-          f"({prog.cache_misses} compiles)")
+    prog.shard()  # 1-D DP mesh over every local device
+    engine = prog.serve(mode="async", max_batch=args.max_batch,
+                        max_delay_ms=args.max_delay_ms)
 
-    rng = np.random.default_rng(0)
-    for uid in range(args.n):
-        engine.submit(uid, rng.standard_normal(in_shape).astype(np.float32))
-    t0 = time.perf_counter()
-    results = engine.run_until_drained()
-    dt = time.perf_counter() - t0
-    counts = np.bincount([r.label for r in results.values()])
-    print(f"served {len(results)} requests in {engine.batches_run} batches "
-          f"in {dt * 1e3:.1f} ms ({dt / args.n * 1e6:.0f} us/request)")
-    print(f"cache after serving: {prog.cache_hits} hits / "
-          f"{prog.cache_misses} misses (recompiles during serving: 0 "
-          f"expected)\nclass histogram: {counts}")
+    async def serve() -> dict:
+        async with engine:
+            engine.warmup(in_shape)  # pre-build every bucket ahead of traffic
+            print(f"warmed {prog.cache_size} AOT bucket(s) "
+                  f"({prog.cache_misses} compiles) on {prog.dp_shards} "
+                  f"DP shard(s)")
+            t0 = time.perf_counter()
+            results = await engine.submit_wave(random_images(in_shape, args.n))
+            dt = time.perf_counter() - t0
+            counts = np.bincount([r.label for r in results])
+            print(f"served {len(results)} requests in {engine.batches_run} "
+                  f"batches in {dt * 1e3:.1f} ms "
+                  f"({dt / args.n * 1e6:.0f} us/request)")
+            print(f"class histogram: {counts}")
+            return engine.metrics()
+
+    m = asyncio.run(serve())
+    print(f"metrics: p50={m['p50_latency_ms']:.1f} ms "
+          f"p99={m['p99_latency_ms']:.1f} ms "
+          f"occupancy={m['batch_occupancy']:.2f} "
+          f"cache={m['cache_hits']} hits/{m['cache_misses']} misses "
+          f"(recompiles during serving: 0 expected)")
 
 
 if __name__ == "__main__":

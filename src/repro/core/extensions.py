@@ -40,7 +40,7 @@ backward-compatible ambient shim over the same mechanism.
 from __future__ import annotations
 
 import contextlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 

@@ -11,11 +11,10 @@ report-only entry point and delegates to it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Callable
 
-import jax
 
-from repro.core import classes, costmodel, profiler, rewrite
+from repro.core import costmodel, profiler
 
 
 @dataclass

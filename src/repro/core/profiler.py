@@ -21,7 +21,7 @@ import math
 import threading
 from collections import Counter
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

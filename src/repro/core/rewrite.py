@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax import core as jcore
 from jax.extend import core as jex_core
-from jax.interpreters import ad, mlir
+from jax.interpreters import mlir
 
 # --- custom "instructions" -------------------------------------------------
 

@@ -15,7 +15,6 @@ which is correctness emulation, not a serving path.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import dispatch
@@ -27,7 +26,7 @@ from repro.kernels import matmul_epilogue as me
 from repro.kernels import residual_rmsnorm as rr
 from repro.kernels import wkv_chunk as wk
 from repro.kernels.common import conv_out_size, pad_to
-from repro.models.layers import _flash_attention_ref, _matmul_ref
+from repro.models.layers import _flash_attention_ref
 
 
 def _pallas_mac_matmul_int8(x, quant):

@@ -241,7 +241,6 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
 def _profile_step(arch_id, shape_name, mesh, run):
     """Trip-aware jaxpr profile of the cell's step function (global FLOPs)."""
     lower_fn, args, run, cfg = build_cell(arch_id, shape_name, mesh, run)
-    rules = {}
     # profile without shardings: same logical program
     from repro.runtime.steps import (
         make_prefill_step, make_serve_step, make_train_step,

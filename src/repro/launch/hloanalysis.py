@@ -15,7 +15,6 @@ per-computation totals:
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 

@@ -8,12 +8,26 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax < 0.5 has no sharding.AxisType; Auto is the default there anyway
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = (
+        {"axis_types": (axis_type.Auto,) * len(axes)} if axis_type else {}
+    )
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
+
+
+def make_serving_mesh(n_devices: int | None = None):
+    """A 1-D data-parallel mesh over the local devices — the serving tier's
+    default placement (`MarvelProgram.shard()` with no mesh argument)."""
+    n = n_devices if n_devices is not None else len(jax.devices())
+    return _make_mesh((n,), ("data",))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

@@ -1,13 +1,22 @@
-"""Serving launcher: batched greedy decoding with continuous batching.
+"""Serving launcher: LM continuous batching, or the CNN async serving tier.
 
-``python -m repro.launch.serve --arch qwen3-8b --smoke --requests 8``
+LM decode (continuous batching over decode slots)::
+
+    python -m repro.launch.serve --arch qwen3-8b --smoke --requests 8
+
+CNN async tier (marvel.compile -> shard over local devices -> async engine)::
+
+    python -m repro.launch.serve --cnn lenet5 --requests 64 --max-batch 8
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
+import json
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import get_arch, list_archs, smoke_variant
 from repro.configs.base import RunConfig
@@ -15,15 +24,7 @@ from repro.models import transformer as T
 from repro.runtime.server import Request, ServeEngine
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=list_archs(), required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args(argv)
-
+def serve_lm(args) -> None:
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
@@ -41,11 +42,69 @@ def main(argv=None):
     t0 = time.time()
     for uid in range(args.requests):
         prompt = [(uid * 7 + i) % (cfg.vocab - 1) + 1 for i in range(5)]
-        engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new))
+        engine.submit(
+            Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new)
+        )
     engine.run_until_drained()
     dt = time.time() - t0
     print(f"served {args.requests} requests ({args.max_new} tokens each) "
           f"in {dt:.1f}s with {args.slots} slots")
+    print(json.dumps(engine.metrics(), indent=1))
+
+
+def random_images(in_shape, n: int, seed: int = 0) -> list[np.ndarray]:
+    """A deterministic request wave (shared by the example + benchmarks)."""
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(in_shape).astype(np.float32)
+            for _ in range(n)]
+
+
+def serve_cnn(args) -> None:
+    from repro import marvel
+    from repro.models.cnn import get_cnn
+
+    init, apply, in_shape = get_cnn(args.cnn)
+    params = init(jax.random.PRNGKey(0))
+    x = np.zeros((1, *in_shape), np.float32)
+    prog = marvel.compile(apply, x, params=params, level="v4",
+                          precompile=False).shard()  # all local devices (DP)
+    engine = prog.serve(mode="async", max_batch=args.max_batch,
+                        max_delay_ms=args.max_delay_ms)
+
+    async def main() -> dict:
+        async with engine:
+            engine.warmup(in_shape)
+            t0 = time.perf_counter()
+            results = await engine.submit_wave(
+                random_images(in_shape, args.requests)
+            )
+            dt = time.perf_counter() - t0
+            print(f"served {len(results)} requests in "
+                  f"{engine.batches_run} batches over {prog.dp_shards} "
+                  f"DP shard(s) in {dt * 1e3:.1f} ms "
+                  f"({dt / args.requests * 1e6:.0f} us/request)")
+            return engine.metrics()
+
+    print(json.dumps(asyncio.run(main()), indent=1))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--cnn", help="serve a CNN via the async tier instead")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    if (args.cnn is None) == (args.arch is None):
+        ap.error("pass exactly one of --arch (LM) or --cnn (CNN tier)")
+    if args.cnn:
+        serve_cnn(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

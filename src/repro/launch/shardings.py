@@ -12,7 +12,6 @@ Strategy (DESIGN.md §4):
 from __future__ import annotations
 
 import re
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -160,6 +159,25 @@ def activation_rules(mesh: Mesh, run: RunConfig, *, decode_batch: int = 0,
 # ---------------------------------------------------------------------------
 # inputs
 # ---------------------------------------------------------------------------
+
+
+def dp_input_sharding(mesh: Mesh, aval) -> NamedSharding:
+    """Data-parallel placement for one serving input: leading (batch) axis
+    over the mesh's batch axes, everything else replicated.
+
+    This is the serving tier's input rule (``MarvelProgram.shard``): batch
+    dims that the DP degree doesn't divide are replicated instead of erroring,
+    so scalar/rank-0 side inputs and odd batches stay legal.
+    """
+    ndim = len(getattr(aval, "shape", ()))
+    b_axes = batch_axes(mesh)
+    dp = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in b_axes:
+        dp *= sizes[a]
+    if ndim == 0 or dp <= 1 or aval.shape[0] % dp != 0:
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return NamedSharding(mesh, P(b_axes, *([None] * (ndim - 1))))
 
 
 def input_specs(cfg: ArchConfig, run: RunConfig, mesh: Mesh):

@@ -20,6 +20,29 @@ state, or jit-cache invisibility at call time.
     prog.report.summary()        # v0..v4 cycle/energy tables (Figs 11/12)
     prog.resolved_extensions     # the baked pattern -> impl table
     prog.cost("v2")              # per-level modeled cost accessors
+
+Serving
+-------
+A compiled program is a traffic-bearing artifact, not just a callable.
+``prog.shard(mesh)`` places it onto a jax mesh (default: a 1-D data-parallel
+mesh over every local device) with batch inputs sharded over the mesh's
+batch axes via :func:`repro.launch.shardings.dp_input_sharding`; every
+bucket executable is then AOT-compiled against those ``NamedSharding``
+inputs, so one program serves N chips and the compile cache still holds one
+executable per shape bucket.  ``prog.serve()`` returns the synchronous
+:class:`repro.runtime.cnn_server.CnnBatchEngine`;
+``prog.serve(mode="async")`` returns the
+:class:`repro.runtime.cnn_server.AsyncCnnEngine` serving tier (bounded
+admission -> deadline-aware micro-batch coalescing -> DP dispatch ->
+per-request futures)::
+
+    prog = marvel.compile(apply, x, params=params).shard()   # all devices
+    async with prog.serve(mode="async", max_batch=32) as engine:
+        engine.warmup(in_shape)           # zero recompiles after this
+        result = await engine.submit(image)
+        engine.metrics()  # queue_depth, p50/p99 latency, batch_occupancy,
+                          # cache hits/misses, dp_shards — the dict the
+                          # serving benchmark and CI bench-gate consume
 """
 from __future__ import annotations
 
@@ -74,6 +97,8 @@ class MarvelProgram:
     rewrite_baked: bool = False
     cache_hits: int = 0
     cache_misses: int = 0
+    mesh: Any = None  # set by shard(); executables compile against it
+    _input_rule: Callable | None = field(default=None, repr=False)
     _cache: dict = field(default_factory=dict, repr=False)
 
     @property
@@ -120,10 +145,62 @@ class MarvelProgram:
         instructions visible (Fig 5's v0-vs-v4 assembly analogue)."""
         return jax.make_jaxpr(self._executable_fn(*args))(*args)
 
+    def shard(self, mesh=None, rules: Callable | None = None
+              ) -> "MarvelProgram":
+        """Place this program onto ``mesh`` with data-parallel batch sharding.
+
+        Every bucket executable is subsequently AOT-compiled against
+        ``NamedSharding`` inputs — batch axis split over the mesh's batch
+        axes (``pod``/``data``), everything else replicated — so one program
+        serves all the mesh's chips and the engines above it need no
+        per-shard logic.  Pass a ``make_production_mesh()``, any caller
+        mesh, or nothing (a 1-D DP mesh over every local device).
+
+        ``rules`` overrides the input-placement rule: a callable
+        ``(mesh, aval) -> Sharding`` (default
+        :func:`repro.launch.shardings.dp_input_sharding`).
+
+        Returns ``self`` so ``compile(...).shard(mesh).serve()`` chains; the
+        AOT cache is cleared because unsharded executables are placed wrong.
+        """
+        from repro.launch.mesh import make_serving_mesh
+        from repro.launch.shardings import dp_input_sharding
+
+        self.mesh = mesh if mesh is not None else make_serving_mesh()
+        self._input_rule = rules or dp_input_sharding
+        self._cache.clear()
+        return self
+
+    @property
+    def dp_shards(self) -> int:
+        """Ways the batch axis is split (1 when unsharded)."""
+        if self.mesh is None:
+            return 1
+        from repro.launch.mesh import batch_axes
+
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        n = 1
+        for a in batch_axes(self.mesh):
+            n *= sizes[a]
+        return n
+
+    def _in_shardings(self, args):
+        """Per-leaf input shardings for the current mesh (None = unsharded)."""
+        if self.mesh is None:
+            return None
+        return jax.tree_util.tree_map(
+            lambda a: self._input_rule(self.mesh, a), args
+        )
+
     def lower(self, *args):
-        """AOT-lower for these args (ShapeDtypeStructs fine); no caching."""
-        return jax.jit(self._executable_fn(*args),
-                       donate_argnums=self.donate).lower(*args)
+        """AOT-lower for these args (ShapeDtypeStructs fine); no caching.
+
+        When sharded, lowering pins the batch-DP ``NamedSharding`` on every
+        input, so the compiled executable runs SPMD across the mesh."""
+        shardings = self._in_shardings(args)
+        jit_kwargs = {} if shardings is None else {"in_shardings": shardings}
+        return jax.jit(self._executable_fn(*args), donate_argnums=self.donate,
+                       **jit_kwargs).lower(*args)
 
     def executable_for(self, *args):
         """The compiled executable for this shape/dtype bucket (build on
@@ -146,20 +223,41 @@ class MarvelProgram:
     def cache_size(self) -> int:
         return len(self._cache)
 
-    def serve(self, **engine_kwargs):
+    def serve(self, mode: str = "sync", **engine_kwargs):
         """A batch-inference engine over this artifact (CNN classifiers).
 
-        The engine drives ``__call__`` with bucketed batches, so serving
-        reuses the AOT cache — one executable per batch bucket.
+        ``mode="sync"`` returns the caller-driven
+        :class:`~repro.runtime.cnn_server.CnnBatchEngine`; ``mode="async"``
+        returns the :class:`~repro.runtime.cnn_server.AsyncCnnEngine`
+        serving tier (``await engine.submit(x)``).  Both drive ``__call__``
+        with bucketed batches, so serving reuses the AOT cache — one
+        executable per batch bucket — and both respect :meth:`shard`:
+        buckets round up to ``dp_shards`` and batches dispatch SPMD across
+        the mesh.
         """
         if self.model_class != "cnn":
             raise NotImplementedError(
                 f"serve() currently covers the cnn model class; this program "
                 f"is {self.model_class!r} (use repro.runtime.server for LMs)"
             )
-        from repro.runtime.cnn_server import CnnBatchEngine
+        from repro.runtime.cnn_server import AsyncCnnEngine, CnnBatchEngine
 
-        return CnnBatchEngine(self, **engine_kwargs)
+        engines = {"sync": CnnBatchEngine, "async": AsyncCnnEngine}
+        if mode not in engines:
+            raise ValueError(
+                f"unknown serve mode {mode!r}; choose from {sorted(engines)}"
+            )
+        return engines[mode](self, **engine_kwargs)
+
+    def metrics(self) -> dict:
+        """Cache + shard counters, the program's slice of the serving
+        metrics surface (the engines merge this into theirs)."""
+        return {
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_size": self.cache_size,
+            "dp_shards": self.dp_shards,
+        }
 
     def summary(self) -> str:
         head = (

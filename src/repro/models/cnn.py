@@ -9,7 +9,6 @@ Convs and dense layers go through the dispatch patterns so the MARVEL flow
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -294,7 +293,6 @@ def mobilenetv2_init(key):
     blocks = []
     for expand, cout, n, stride in _MBV2_CFG:
         for b in range(n):
-            s = stride if b == 0 else 1
             mid = cin * expand
             blk = {}
             if expand != 1:

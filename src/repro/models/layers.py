@@ -215,7 +215,7 @@ def _chunked_attention(q, k, v, *, causal, q_offset=0, chunk=512, kv_len=None):
     scale = 1.0 / math.sqrt(dh)
 
     def body(carry, xs):
-        acc, m, l = carry
+        acc, m, den = carry
         ci, kci, vci = xs
         kpos = ci * chunk + jnp.arange(chunk)
         s = jnp.einsum("bqkgd,bskd->bkgqs", q, kci).astype(jnp.float32) * scale
@@ -233,20 +233,20 @@ def _chunked_attention(q, k, v, *, causal, q_offset=0, chunk=512, kv_len=None):
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l = l * corr + jnp.sum(p, axis=-1)
+        den = den * corr + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vci.dtype), vci)
         acc = acc * corr[..., None] + pv.astype(jnp.float32)
-        return (acc, m_new, l), None
+        return (acc, m_new, den), None
 
     acc0 = jnp.zeros((B, K, G, Sq, dv), jnp.float32)
     m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
-    (acc, m, l), _ = jax.lax.scan(
+    (acc, m, den), _ = jax.lax.scan(
         body, (acc0, m0, l0), (jnp.arange(n_chunks), kc, vc)
     )
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = acc / jnp.maximum(den[..., None], 1e-30)
     out = out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,Sq,K,G,dv)
-    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B,K,G,Sq)
+    lse = m + jnp.log(jnp.maximum(den, 1e-30))  # (B,K,G,Sq)
     return out, lse
 
 

@@ -79,7 +79,6 @@ def moe_ffn(p, x, cfg, groups: int = 1):
     order = jnp.argsort(flat_expert, axis=1, stable=True)
     sorted_expert = jnp.take_along_axis(flat_expert, order, axis=1)
     sorted_token = jnp.take_along_axis(flat_token, order, axis=1)
-    sorted_gate = jnp.take_along_axis(flat_gate, order, axis=1)
     # rank within expert group = global rank - expert segment start
     group_start = jax.vmap(
         lambda se: jnp.searchsorted(se, jnp.arange(E), side="left")

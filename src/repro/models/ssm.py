@@ -118,7 +118,6 @@ def ssm_init_state(cfg, batch):
 
 def ssm_decode(p, x, state, cfg):
     """Single-token step. x: (B,1,d) -> (B,1,d), new state."""
-    B = x.shape[0]
     di, N = cfg.ssm_d_inner, cfg.ssm_state
     dt_rank = p["dt_proj"].shape[0]
     xz = mac_matmul(x, p["in_proj"])[:, 0]  # (B, 2di)

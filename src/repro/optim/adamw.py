@@ -7,7 +7,6 @@ falls out of the fsdp_tp param specs).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, NamedTuple
 

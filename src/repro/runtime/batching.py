@@ -1,0 +1,181 @@
+"""Shared micro-batching core for the serving engines.
+
+Both serving planes — the LM continuous-batching engine
+(:class:`repro.runtime.server.ServeEngine`) and the CNN batch engines
+(:mod:`repro.runtime.cnn_server`) — need the same primitives: power-of-two
+batch buckets so the AOT compile cache stays small, a bounded admission queue
+that rejects instead of growing without limit, a slot-refill discipline, and
+a metrics surface (queue depth, latency percentiles, batch occupancy) that
+benchmarks and CI can assert on.  This module owns those primitives; the
+engines own only their dispatch loops.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class AdmissionError(RuntimeError):
+    """Raised when a request is rejected because the queue is at capacity."""
+
+
+def admit_or_raise(pending: int, capacity: int | None) -> None:
+    """The one admission check both serving planes share: reject (raise)
+    when the queue is at capacity; ``capacity=None`` admits everything."""
+    if capacity is not None and pending >= capacity:
+        raise AdmissionError(
+            f"queue at capacity ({capacity}); request rejected"
+        )
+
+
+# ---------------------------------------------------------------------------
+# buckets
+# ---------------------------------------------------------------------------
+
+
+def pow2_buckets(max_batch: int) -> tuple[int, ...]:
+    """1, 2, 4, ... up to (and including) ``max_batch``."""
+    out, b = [], 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+def round_up_buckets(buckets: tuple[int, ...], multiple: int
+                     ) -> tuple[int, ...]:
+    """Round every bucket up to a multiple (DP: shards must divide batch)."""
+    if multiple <= 1:
+        return tuple(sorted(set(buckets)))
+    up = [-(-b // multiple) * multiple for b in buckets]
+    return tuple(sorted(set(up)))
+
+
+def bucket_for(buckets: tuple[int, ...], n: int) -> int:
+    """The smallest bucket that fits ``n`` requests (largest if none do)."""
+    for b in buckets:
+        if b >= n:
+            return b
+    return buckets[-1]
+
+
+def pad_batch(x: np.ndarray, bucket: int) -> np.ndarray:
+    """Pad the leading (batch) axis with zero lanes up to ``bucket``."""
+    if x.shape[0] >= bucket:
+        return x
+    pad = np.zeros((bucket - x.shape[0], *x.shape[1:]), x.dtype)
+    return np.concatenate([x, pad])
+
+
+# ---------------------------------------------------------------------------
+# admission-controlled queue
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BoundedQueue:
+    """A deque with admission control: ``push`` raises :class:`AdmissionError`
+    at capacity instead of queueing unboundedly (``capacity=None`` disables
+    the bound)."""
+
+    capacity: int | None = None
+    rejected: int = 0
+    _q: deque = field(default_factory=deque)
+
+    def push(self, item) -> None:
+        try:
+            admit_or_raise(len(self._q), self.capacity)
+        except AdmissionError:
+            self.rejected += 1
+            raise
+        self._q.append(item)
+
+    def popleft(self):
+        return self._q.popleft()
+
+    def pop_up_to(self, n: int) -> list:
+        return [self._q.popleft() for _ in range(min(n, len(self._q)))]
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+def refill_slots(slots: list, queue, on_fill) -> list[int]:
+    """Fill empty (None) lanes from the queue; ``on_fill(lane, req)`` does the
+    engine-specific lane reset.  Returns the lanes filled."""
+    filled = []
+    for i, slot in enumerate(slots):
+        if slot is None and queue:
+            req = queue.popleft()
+            slots[i] = req
+            on_fill(i, req)
+            filled.append(i)
+    return filled
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EngineMetrics:
+    """Monotone serving counters + a bounded latency reservoir.
+
+    ``snapshot()`` is the serving metrics surface: a flat dict the engines
+    re-export (merged with the program's cache counters) so benchmarks and
+    the CI bench-gate can assert on it.
+    """
+
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    batches: int = 0
+    lanes_used: int = 0
+    lanes_total: int = 0
+    deadline_flushes: int = 0
+    full_flushes: int = 0
+    _latencies_ms: deque = field(default_factory=lambda: deque(maxlen=4096))
+
+    def observe_latency(self, ms: float) -> None:
+        self._latencies_ms.append(float(ms))
+
+    def observe_batch(self, used: int, total: int, *,
+                      deadline: bool = False) -> None:
+        self.batches += 1
+        self.lanes_used += used
+        self.lanes_total += total
+        if deadline:
+            self.deadline_flushes += 1
+        else:
+            self.full_flushes += 1
+
+    def latency_ms(self, pct: float) -> float:
+        if not self._latencies_ms:
+            return 0.0
+        xs = sorted(self._latencies_ms)
+        i = min(len(xs) - 1, int(round(pct / 100.0 * (len(xs) - 1))))
+        return xs[i]
+
+    def snapshot(self, *, queue_depth: int = 0, **extra) -> dict:
+        occ = self.lanes_used / self.lanes_total if self.lanes_total else 0.0
+        out = {
+            "queue_depth": queue_depth,
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "batches": self.batches,
+            "batch_occupancy": occ,
+            "deadline_flushes": self.deadline_flushes,
+            "full_flushes": self.full_flushes,
+            "p50_latency_ms": self.latency_ms(50),
+            "p99_latency_ms": self.latency_ms(99),
+        }
+        out.update(extra)
+        return out

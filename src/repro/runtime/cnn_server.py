@@ -1,20 +1,37 @@
 """Batch-inference serving for CNN classifiers over a MarvelProgram.
 
-The LM side (repro.runtime.server) does continuous batching over decode
-slots; CNN classification is simpler — stateless single-shot requests — so
-the engine micro-batches the queue into power-of-two buckets and drives the
-artifact's ``__call__``.  Because MarvelProgram keeps one AOT executable per
-shape bucket, a drained queue of thousands of requests compiles at most
-``len(buckets)`` times, and :meth:`warmup` can pre-build every bucket from
-ShapeDtypeStructs before the first request arrives.
+Two planes share one compute core (:class:`_BucketedCompute`):
+
+* :class:`CnnBatchEngine` — the synchronous engine: callers submit, then
+  drive ``step()``/``run_until_drained()`` themselves.  Good for batch jobs
+  and tests.
+* :class:`AsyncCnnEngine` — the serving tier: an ``asyncio`` request plane
+  (bounded admission queue -> deadline-aware micro-batch coalescing -> one
+  compute thread -> per-request futures) decoupled from the blocking jax
+  dispatch, so thousands of in-flight requests cost one event loop, not one
+  thread each::
+
+      prog = marvel.compile(apply, x, params=params).shard(mesh)
+      async with prog.serve(mode="async", max_batch=32) as engine:
+          result = await engine.submit(image)
+
+Batches are padded to power-of-two buckets (rounded up to the program's DP
+shard count when sharded), so a drained queue of thousands of requests
+compiles at most ``len(buckets)`` times and :meth:`warmup` can pre-build
+every bucket from ShapeDtypeStructs before the first request arrives.
 """
 from __future__ import annotations
 
-from collections import deque
-from dataclasses import dataclass, field
+import asyncio
+import concurrent.futures
+import time
+from dataclasses import dataclass
 
 import jax
 import numpy as np
+
+from repro.runtime import batching
+from repro.runtime.batching import AdmissionError  # re-export  # noqa: F401
 
 
 @dataclass
@@ -24,39 +41,22 @@ class CnnRequest:
     label: int | None = None
     probs: np.ndarray | None = None
     done: bool = False
+    latency_ms: float = 0.0
 
 
-def _pow2_buckets(max_batch: int) -> tuple[int, ...]:
-    out, b = [], 1
-    while b < max_batch:
-        out.append(b)
-        b *= 2
-    out.append(max_batch)
-    return tuple(out)
+class _BucketedCompute:
+    """program + buckets + the batched classify step (shared by both
+    engines).  Buckets are rounded up to the program's DP shard count so a
+    sharded program always sees batch dims its mesh divides."""
 
-
-@dataclass
-class CnnBatchEngine:
-    """Queue -> bucketed batches -> MarvelProgram -> per-request results."""
-
-    program: object  # MarvelProgram (duck-typed: __call__, executable_for)
-    max_batch: int = 8
-    buckets: tuple[int, ...] = ()
-    queue: deque = field(default_factory=deque)
-    results: dict = field(default_factory=dict)
-    batches_run: int = 0
-
-    def __post_init__(self):
-        if not self.buckets:
-            self.buckets = _pow2_buckets(self.max_batch)
-        self.buckets = tuple(sorted(set(self.buckets)))
+    def __init__(self, program, max_batch: int = 8,
+                 buckets: tuple[int, ...] = ()):
+        self.program = program
+        if not buckets:
+            buckets = batching.pow2_buckets(max_batch)
+        dp = int(getattr(program, "dp_shards", 1) or 1)
+        self.buckets = batching.round_up_buckets(buckets, dp)
         self.max_batch = self.buckets[-1]
-
-    def _bucket_for(self, n: int) -> int:
-        for b in self.buckets:
-            if b >= n:
-                return b
-        return self.buckets[-1]
 
     def warmup(self, in_shape: tuple[int, ...], dtype="float32") -> None:
         """Pre-compile every batch bucket from shapes alone (no data)."""
@@ -64,9 +64,54 @@ class CnnBatchEngine:
             spec = jax.ShapeDtypeStruct((b, *in_shape), np.dtype(dtype))
             self.program.executable_for(spec)
 
+    def classify(self, images: list[np.ndarray]
+                 ) -> tuple[np.ndarray, np.ndarray]:
+        """One padded bucket through the program -> (labels, probs) for the
+        real lanes (padding lanes are computed and discarded)."""
+        n = len(images)
+        bucket = batching.bucket_for(self.buckets, n)
+        x = batching.pad_batch(np.stack(images), bucket)
+        logits = np.asarray(self.program(x))[:n]
+        z = logits - logits.max(axis=-1, keepdims=True)
+        probs = np.exp(z) / np.exp(z).sum(axis=-1, keepdims=True)
+        return np.argmax(logits, axis=-1), probs
+
+
+class CnnBatchEngine:
+    """Queue -> bucketed batches -> MarvelProgram -> per-request results
+    (synchronous plane; the caller drives ``step()``)."""
+
+    def __init__(self, program, max_batch: int = 8,
+                 buckets: tuple[int, ...] = (),
+                 max_pending: int | None = None):
+        self.compute = _BucketedCompute(program, max_batch, buckets)
+        self.queue = batching.BoundedQueue(capacity=max_pending)
+        self.results: dict[int, CnnRequest] = {}
+        self._metrics = batching.EngineMetrics()
+
+    @property
+    def program(self):
+        return self.compute.program
+
+    @property
+    def buckets(self) -> tuple[int, ...]:
+        return self.compute.buckets
+
+    @property
+    def max_batch(self) -> int:
+        return self.compute.max_batch
+
+    @property
+    def batches_run(self) -> int:
+        return self._metrics.batches
+
+    def warmup(self, in_shape: tuple[int, ...], dtype="float32") -> None:
+        self.compute.warmup(in_shape, dtype)
+
     def submit(self, uid: int, image) -> CnnRequest:
         req = CnnRequest(uid=uid, image=np.asarray(image))
-        self.queue.append(req)
+        self.queue.push(req)  # AdmissionError surfaces to the caller
+        self._metrics.submitted += 1
         return req
 
     def step(self) -> list[CnnRequest]:
@@ -74,22 +119,20 @@ class CnnBatchEngine:
         the smallest bucket so the AOT cache hits."""
         if not self.queue:
             return []
-        reqs = [self.queue.popleft()
-                for _ in range(min(self.max_batch, len(self.queue)))]
-        bucket = self._bucket_for(len(reqs))
-        x = np.stack([r.image for r in reqs])
-        if bucket > len(reqs):  # pad lanes with zeros; results are discarded
-            pad = np.zeros((bucket - len(reqs), *x.shape[1:]), x.dtype)
-            x = np.concatenate([x, pad])
-        logits = np.asarray(self.program(x))
-        self.batches_run += 1
-        z = logits - logits.max(axis=-1, keepdims=True)
-        probs = np.exp(z) / np.exp(z).sum(axis=-1, keepdims=True)
+        t0 = time.perf_counter()
+        reqs = self.queue.pop_up_to(self.max_batch)
+        labels, probs = self.compute.classify([r.image for r in reqs])
+        bucket = batching.bucket_for(self.buckets, len(reqs))
+        self._metrics.observe_batch(len(reqs), bucket)
+        ms = (time.perf_counter() - t0) * 1e3
         for i, req in enumerate(reqs):
-            req.label = int(np.argmax(logits[i]))
+            req.label = int(labels[i])
             req.probs = probs[i]
             req.done = True
+            req.latency_ms = ms
             self.results[req.uid] = req
+            self._metrics.completed += 1
+            self._metrics.observe_latency(ms)
         return reqs
 
     @property
@@ -102,3 +145,200 @@ class CnnBatchEngine:
             self.step()
             steps += 1
         return self.results
+
+    def metrics(self) -> dict:
+        """The serving metrics surface (program cache counters included)."""
+        self._metrics.rejected = self.queue.rejected
+        return self._metrics.snapshot(
+            queue_depth=len(self.queue), **_program_metrics(self.program)
+        )
+
+
+class AsyncCnnEngine:
+    """The async serving tier: request plane decoupled from compute plane.
+
+    ``submit()`` applies admission control (bounded queue -> fast
+    :class:`AdmissionError`, never unbounded memory), a background batcher
+    coalesces requests into pow-2 buckets — flushing on a full bucket or on
+    the coalesce deadline, whichever first — and one compute thread runs the
+    blocking jax dispatch so the event loop never stalls.  Each request's
+    future resolves, in submission order within its batch, to the finished
+    :class:`CnnRequest`.
+    """
+
+    def __init__(self, program, max_batch: int = 8,
+                 buckets: tuple[int, ...] = (),
+                 max_pending: int = 1024,
+                 max_delay_ms: float = 2.0):
+        self.compute = _BucketedCompute(program, max_batch, buckets)
+        self.max_pending = max_pending
+        self.max_delay_ms = max_delay_ms
+        self._metrics = batching.EngineMetrics()
+        self._queue: asyncio.Queue | None = None
+        self._batcher: asyncio.Task | None = None
+        self._pool: concurrent.futures.ThreadPoolExecutor | None = None
+        self._uid = 0
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self) -> "AsyncCnnEngine":
+        if self._batcher is None:
+            self._queue = asyncio.Queue()
+            # one compute thread = the compute plane; jax dispatch serializes
+            # there while the event loop keeps admitting requests
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="cnn-compute"
+            )
+            self._batcher = asyncio.get_running_loop().create_task(
+                self._run_batcher()
+            )
+        return self
+
+    async def stop(self) -> None:
+        if self._batcher is not None:
+            # close the request plane FIRST: a submit racing stop() raises
+            # instead of landing behind the sentinel, where its future would
+            # never resolve (the batcher exits at the sentinel)
+            queue, self._queue = self._queue, None
+            await queue.put(None)  # sentinel: flush + exit
+            await self._batcher
+            self._batcher = None
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    async def __aenter__(self) -> "AsyncCnnEngine":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- request plane ------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        return self._queue.qsize() if self._queue is not None else 0
+
+    def submit_nowait(self, image, *, uid: int | None = None,
+                      deadline_ms: float | None = None) -> asyncio.Future:
+        """Admit one request (or raise :class:`AdmissionError`); returns the
+        future that resolves to its finished :class:`CnnRequest`."""
+        if self._queue is None:
+            raise RuntimeError(
+                "engine not started: use `async with engine:` or "
+                "`await engine.start()`"
+            )
+        try:
+            batching.admit_or_raise(self.pending, self.max_pending)
+        except AdmissionError:
+            self._metrics.rejected += 1
+            raise
+        loop = asyncio.get_running_loop()
+        if uid is None:
+            uid = self._uid
+        self._uid = max(self._uid, uid) + 1
+        req = CnnRequest(uid=uid, image=np.asarray(image))
+        fut = loop.create_future()
+        t0 = loop.time()
+        deadline = None if deadline_ms is None else t0 + deadline_ms / 1e3
+        self._queue.put_nowait((req, fut, t0, deadline))
+        self._metrics.submitted += 1
+        return fut
+
+    async def submit(self, image, *, uid: int | None = None,
+                     deadline_ms: float | None = None) -> CnnRequest:
+        """Admit one request and await its result."""
+        return await self.submit_nowait(
+            image, uid=uid, deadline_ms=deadline_ms
+        )
+
+    async def submit_wave(self, images) -> list[CnnRequest]:
+        """Admit a wave of requests concurrently and await every result —
+        the whole-client loop (the launcher, example, and serving benchmark
+        all drive the engine through this one call)."""
+        return await asyncio.gather(*(self.submit(im) for im in images))
+
+    # -- batcher (coalescing) + compute plane -------------------------------
+
+    async def _run_batcher(self) -> None:
+        loop = asyncio.get_running_loop()
+        queue = self._queue  # stop() nulls self._queue before the sentinel
+        closing = False
+        while not closing:
+            item = await queue.get()
+            if item is None:
+                return
+            batch = [item]
+            flush_at = loop.time() + self.max_delay_ms / 1e3
+            if item[3] is not None:  # per-request deadline caps the window
+                flush_at = min(flush_at, item[3])
+            deadline_flush = True
+            while len(batch) < self.compute.max_batch:
+                timeout = flush_at - loop.time()
+                if timeout <= 0:
+                    break
+                try:
+                    nxt = await asyncio.wait_for(queue.get(), timeout)
+                except asyncio.TimeoutError:
+                    break
+                if nxt is None:
+                    closing = True
+                    deadline_flush = False  # shutdown, not a window expiry
+                    break
+                batch.append(nxt)
+                if nxt[3] is not None:
+                    flush_at = min(flush_at, nxt[3])
+            else:
+                deadline_flush = False  # bucket filled before the deadline
+            await self._flush(loop, batch, deadline_flush)
+
+    async def _flush(self, loop, batch, deadline_flush: bool) -> None:
+        reqs = [b[0] for b in batch]
+        images = [r.image for r in reqs]
+        try:
+            labels, probs = await loop.run_in_executor(
+                self._pool, self.compute.classify, images
+            )
+        except Exception as e:
+            for _, fut, _, _ in batch:
+                if not fut.done():
+                    fut.set_exception(e)
+            return
+        bucket = batching.bucket_for(self.compute.buckets, len(reqs))
+        self._metrics.observe_batch(len(reqs), bucket,
+                                    deadline=deadline_flush)
+        now = loop.time()
+        for i, (req, fut, t0, _) in enumerate(batch):
+            req.label = int(labels[i])
+            req.probs = probs[i]
+            req.done = True
+            req.latency_ms = (now - t0) * 1e3
+            self._metrics.completed += 1
+            self._metrics.observe_latency(req.latency_ms)
+            if not fut.done():  # resolved in submission order within batch
+                fut.set_result(req)
+
+    # -- observability ------------------------------------------------------
+
+    def warmup(self, in_shape: tuple[int, ...], dtype="float32") -> None:
+        self.compute.warmup(in_shape, dtype)
+
+    @property
+    def batches_run(self) -> int:
+        return self._metrics.batches
+
+    def metrics(self) -> dict:
+        """The serving metrics surface (program cache counters included)."""
+        return self._metrics.snapshot(
+            queue_depth=self.pending,
+            **_program_metrics(self.compute.program),
+        )
+
+
+def _program_metrics(program) -> dict:
+    """Cache hit/miss + shard counters re-exported from the MarvelProgram."""
+    return {
+        "cache_hits": getattr(program, "cache_hits", 0),
+        "cache_misses": getattr(program, "cache_misses", 0),
+        "cache_size": getattr(program, "cache_size", 0),
+        "dp_shards": int(getattr(program, "dp_shards", 1) or 1),
+    }

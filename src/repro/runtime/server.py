@@ -4,10 +4,17 @@ Requests queue up; a slot map assigns each to a batch lane. Each engine step
 decodes one token for every active lane; finished lanes (EOS or max tokens)
 are released and refilled from the queue — the standard continuous-batching
 pattern, sized to the compiled decode batch so no reshapes/recompiles occur.
+
+The queue/slot/metrics plumbing is the shared serving core in
+:mod:`repro.runtime.batching` (the CNN engines use the same one): admission
+control via :class:`~repro.runtime.batching.BoundedQueue` (``max_pending``),
+slot refill via :func:`~repro.runtime.batching.refill_slots`, and a
+``metrics()`` dict (queue depth, lane occupancy, latency percentiles) in the
+same shape the CNN tier emits.
 """
 from __future__ import annotations
 
-from collections import deque
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -16,6 +23,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, RunConfig
 from repro.models import transformer as T
+from repro.runtime import batching
 
 
 @dataclass
@@ -26,16 +34,18 @@ class Request:
     eos_id: int = -1  # -1: never
     generated: list[int] = field(default_factory=list)
     done: bool = False
+    _t0: float = 0.0
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ArchConfig, run: RunConfig, *,
-                 batch_slots: int = 4, max_len: int = 256, frames=None):
+                 batch_slots: int = 4, max_len: int = 256, frames=None,
+                 max_pending: int | None = None):
         self.params = params
         self.cfg = cfg
         self.run = run
         self.slots: list[Request | None] = [None] * batch_slots
-        self.queue: deque[Request] = deque()
+        self.queue = batching.BoundedQueue(capacity=max_pending)
         self.max_len = max_len
         self.state = T.init_decode_state(
             params, cfg, run, batch=batch_slots, max_len=max_len, frames=frames
@@ -46,31 +56,32 @@ class ServeEngine:
         )
         self._next_tok = np.zeros((batch_slots, 1), np.int32)
         self._prompt_pos = np.zeros(batch_slots, np.int32)
+        self._metrics = batching.EngineMetrics()
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        req._t0 = time.perf_counter()
+        self.queue.push(req)  # AdmissionError surfaces to the caller
+        self._metrics.submitted += 1
 
-    def _fill_slots(self) -> None:
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
-                req = self.queue.popleft()
-                self.slots[i] = req
-                # reset this lane's position; prompt is fed token by token
-                idx = np.array(self.state["index"], copy=True)
-                idx[i] = 0
-                self.state["index"] = jnp.asarray(idx)
-                self._prompt_pos[i] = 0
-                self._next_tok[i, 0] = req.prompt[0]
+    def _on_fill(self, i: int, req: Request) -> None:
+        # reset this lane's position; prompt is fed token by token
+        idx = np.array(self.state["index"], copy=True)
+        idx[i] = 0
+        self.state["index"] = jnp.asarray(idx)
+        self._prompt_pos[i] = 0
+        self._next_tok[i, 0] = req.prompt[0]
 
     def step(self) -> None:
         """One engine step = one decode step for every active lane."""
-        self._fill_slots()
+        batching.refill_slots(self.slots, self.queue, self._on_fill)
         logits, self.state = self._step(
             self.params, self.state, jnp.asarray(self._next_tok)
         )
         sampled = np.asarray(
             jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1), np.int32
         )
+        used = sum(s is not None for s in self.slots)
+        self._metrics.observe_batch(used, len(self.slots))
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -87,6 +98,10 @@ class ServeEngine:
                     or total >= self.max_len - 1):
                 req.done = True
                 self.slots[i] = None
+                self._metrics.completed += 1
+                self._metrics.observe_latency(
+                    (time.perf_counter() - req._t0) * 1e3
+                )
 
     @property
     def active(self) -> int:
@@ -97,3 +112,8 @@ class ServeEngine:
         while self.active and steps < max_steps:
             self.step()
             steps += 1
+
+    def metrics(self) -> dict:
+        """The serving metrics surface — same shape as the CNN engines'."""
+        self._metrics.rejected = self.queue.rejected
+        return self._metrics.snapshot(queue_depth=len(self.queue))

@@ -2,8 +2,6 @@
 serve_step (single-token decode) — the units the launcher jits/lowers."""
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

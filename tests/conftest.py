@@ -4,3 +4,13 @@
 import jax
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+def pytest_configure(config):
+    # registered here as well as pytest.ini so `-p no:cacheprovider` runs and
+    # direct pytest invocations from other cwds still know the marker
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tests (full six-CNN compile sweeps, serving "
+        'soak); the fast CI lane runs -m "not slow"',
+    )

@@ -1,0 +1,103 @@
+"""The CI bench-gate: derived-metric parsing, gating directions, tolerance."""
+import json
+
+import pytest
+
+from benchmarks import gate
+
+
+def test_parse_metrics_mixed_derived():
+    row = {"name": "x", "us_per_call": 12.5,
+           "derived": "tpu_speedup_v4=2.08;paper_band=True;note=abc"}
+    m = gate.parse_metrics(row)
+    assert m == {"us_per_call": 12.5, "tpu_speedup_v4": 2.08}
+
+
+def test_gate_directions():
+    assert gate.gate_direction("fig11_cycles/lenet5", "tpu_speedup_v4") == +1
+    assert gate.gate_direction("fig11_cycles/lenet5", "rv32_v0") == -1
+    assert gate.gate_direction("serving/x", "req_s") == 0  # wall clock
+    assert gate.gate_direction("compile/x", "us_per_call") == 0
+    # cycles keys only gate on cycles rows
+    assert gate.gate_direction("fig12_energy/lenet5", "rv32_v0") == 0
+
+
+def test_compare_flags_regressions_by_direction():
+    base = {"fig11_cycles/m": {"tpu_speedup_v4": 2.0, "rv32_v4": 100.0}}
+    # speedup down 20% AND cycles up 20%: both regress at tol=0.15
+    cur = {"fig11_cycles/m": {"tpu_speedup_v4": 1.6, "rv32_v4": 120.0}}
+    deltas, missing = gate.compare(base, cur, tol=0.15)
+    assert not missing
+    assert sorted(d["metric"] for d in deltas if d["regressed"]) == [
+        "rv32_v4", "tpu_speedup_v4"
+    ]
+    # within tolerance: no failures
+    cur_ok = {"fig11_cycles/m": {"tpu_speedup_v4": 1.9, "rv32_v4": 110.0}}
+    deltas, _ = gate.compare(base, cur_ok, tol=0.15)
+    assert not any(d["regressed"] for d in deltas)
+    # improvements never fail
+    cur_up = {"fig11_cycles/m": {"tpu_speedup_v4": 3.0, "rv32_v4": 50.0}}
+    deltas, _ = gate.compare(base, cur_up, tol=0.15)
+    assert not any(d["regressed"] for d in deltas)
+
+
+def test_compare_reports_missing_gated_rows():
+    base = {"fig11_cycles/m": {"tpu_speedup_v4": 2.0},
+            "kernel/k": {"us_per_call": 5.0}}
+    deltas, missing = gate.compare(base, {}, tol=0.15)
+    assert missing == ["fig11_cycles/m"]  # wall-clock rows may vanish freely
+    assert deltas == []
+
+
+def test_main_end_to_end(tmp_path, monkeypatch, capsys):
+    basedir, curdir = tmp_path / "base", tmp_path / "cur"
+    basedir.mkdir()
+    curdir.mkdir()
+    rows = [{"name": "fig11_cycles/m", "us_per_call": 0.0,
+             "derived": "tpu_speedup_v4=2.00"}]
+    (basedir / "BENCH_cycles.json").write_text(json.dumps(rows))
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+
+    # identical current -> pass, and the delta table lands in the summary
+    (curdir / "BENCH_cycles.json").write_text(json.dumps(rows))
+    rc = gate.main(["--baseline", str(basedir), "--current", str(curdir)])
+    assert rc == 0
+    assert "tpu_speedup_v4" in summary.read_text()
+
+    # >15% speedup regression -> non-zero exit naming the metric
+    bad = [{"name": "fig11_cycles/m", "us_per_call": 0.0,
+            "derived": "tpu_speedup_v4=1.20"}]
+    (curdir / "BENCH_cycles.json").write_text(json.dumps(bad))
+    rc = gate.main(["--baseline", str(basedir), "--current", str(curdir)])
+    assert rc == 1
+    assert "REGRESSION" in capsys.readouterr().err
+
+    # empty baseline dir -> nothing to gate, pass
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    rc = gate.main(["--baseline", str(empty), "--current", str(curdir)])
+    assert rc == 0
+
+
+def test_missing_rows_fail_only_in_strict_mode(tmp_path):
+    basedir, curdir = tmp_path / "base", tmp_path / "cur"
+    basedir.mkdir()
+    curdir.mkdir()
+    rows = [{"name": "fig11_cycles/m", "us_per_call": 0.0,
+             "derived": "tpu_speedup_v4=2.00"}]
+    (basedir / "BENCH_cycles.json").write_text(json.dumps(rows))
+    args = ["--baseline", str(basedir), "--current", str(curdir)]
+    assert gate.main(args) == 0
+    assert gate.main(args + ["--strict"]) == 1
+
+
+@pytest.mark.parametrize("module", ["serving", "cycles", "compile"])
+def test_committed_baseline_covers_gated_modules(module):
+    import pathlib
+
+    repo_root = pathlib.Path(__file__).resolve().parents[1]
+    path = repo_root / "benchmarks" / "baseline" / f"BENCH_{module}.json"
+    assert path.exists(), "baseline snapshot missing; re-run benchmarks.run"
+    rows = json.loads(path.read_text())
+    assert rows, path

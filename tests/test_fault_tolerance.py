@@ -4,7 +4,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt import (
     AsyncCheckpointer, latest_step, restore_checkpoint, save_checkpoint,
@@ -73,8 +72,8 @@ def test_train_resume_continues_loss_curve(tmp_path):
     cfg = smoke_variant(get_arch("granite-3-2b"))
     ckpt = str(tmp_path / "ck")
     full = train(cfg, RUN, TrainerConfig(total_steps=6, ckpt_every=100))
-    part = train(cfg, RUN, TrainerConfig(total_steps=3, ckpt_every=3,
-                                         ckpt_dir=ckpt))
+    train(cfg, RUN, TrainerConfig(total_steps=3, ckpt_every=3,  # writes ckpt
+          ckpt_dir=ckpt))
     resumed = train(cfg, RUN, TrainerConfig(total_steps=6, ckpt_every=3,
                                             ckpt_dir=ckpt))
     assert resumed.resumed_from == 3

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops  # registers pallas impls
+from repro.kernels import ops  # noqa: F401  (registers pallas impls)
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mac_matmul import mac_matmul_int8

@@ -7,7 +7,6 @@ split by shape, extension resolution is baked at trace time, unknown
 backends raise, rewrite failures warn, and the CNN batch-inference path
 serves real requests off the artifact.
 """
-import threading
 import warnings
 
 import jax
@@ -16,7 +15,6 @@ import numpy as np
 import pytest
 
 from repro import marvel
-from repro.core import dispatch
 from repro.core.extensions import extension_context, resolve_table
 from repro.core.pipeline import MarvelReport, run_marvel_flow
 from repro.models.cnn import CNN_MODELS, get_cnn
@@ -34,6 +32,7 @@ def _setup(name):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow  # the six-CNN sweep is the fast lane's long pole
 @pytest.mark.parametrize("name", list(CNN_MODELS))
 def test_compile_matches_baseline_all_six(name):
     params, apply, x = _setup(name)

@@ -67,7 +67,7 @@ def test_moe_differentiable():
         return jnp.sum(jnp.square(y)) + 0.01 * aux
 
     g = jax.grad(loss)(p)
-    gnorm = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
+    gnorm = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
     assert np.isfinite(gnorm) and gnorm > 0
     # router must receive gradient (through the gate weights)
     assert float(jnp.sum(jnp.abs(g["router"]))) > 0

@@ -1,6 +1,4 @@
 """Hypothesis property tests on system invariants."""
-import math
-
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
@@ -9,11 +7,11 @@ import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from hypothesis import given
 
 from repro.core import costmodel
 from repro.models.layers import (
-    _chunked_attention, _naive_attention, _rms_norm_ref, apply_rope,
+    _chunked_attention, _rms_norm_ref, apply_rope,
 )
 from repro.quant.ptq import dequantize, quantize_weight
 

@@ -1,6 +1,5 @@
 """ServeEngine: continuous batching drains the queue; lanes are isolated."""
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_arch, smoke_variant
 from repro.configs.base import RunConfig

@@ -1,0 +1,346 @@
+"""The async serving tier + shared batching core.
+
+Unit tests run on CPU against a fake 1x1 "mesh" (a real jax mesh over the
+single local device): admission control rejects over capacity, deadline
+coalescing flushes partial batches, per-request futures resolve in
+submission order within a bucket, metrics counters are monotone, and a
+warmed program never recompiles under traffic.  The multi-device DP smoke
+test only runs when ``jax.devices()`` has more than one entry.
+"""
+import asyncio
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro import marvel
+from repro.models.cnn import get_cnn
+from repro.runtime import batching
+from repro.runtime.batching import AdmissionError
+
+
+# ---------------------------------------------------------------------------
+# batching core (no jax involved)
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_buckets_and_lookup():
+    assert batching.pow2_buckets(8) == (1, 2, 4, 8)
+    assert batching.pow2_buckets(6) == (1, 2, 4, 6)
+    assert batching.bucket_for((1, 2, 4, 8), 3) == 4
+    assert batching.bucket_for((1, 2, 4, 8), 9) == 8  # clamp to largest
+
+
+def test_round_up_buckets_for_dp():
+    assert batching.round_up_buckets((1, 2, 4, 8), 4) == (4, 8)
+    assert batching.round_up_buckets((1, 2, 4, 8), 3) == (3, 6, 9)
+    assert batching.round_up_buckets((1, 2, 4, 8), 1) == (1, 2, 4, 8)
+
+
+def test_pad_batch_adds_zero_lanes():
+    x = np.ones((3, 2), np.float32)
+    y = batching.pad_batch(x, 8)
+    assert y.shape == (8, 2)
+    np.testing.assert_array_equal(y[3:], 0)
+    assert batching.pad_batch(x, 2) is x  # already big enough
+
+
+def test_bounded_queue_admission():
+    q = batching.BoundedQueue(capacity=2)
+    q.push("a")
+    q.push("b")
+    with pytest.raises(AdmissionError, match="capacity"):
+        q.push("c")
+    assert q.rejected == 1 and len(q) == 2
+    assert q.pop_up_to(5) == ["a", "b"]
+    q.push("d")  # space again after draining
+
+
+def test_engine_metrics_percentiles_and_occupancy():
+    m = batching.EngineMetrics()
+    for ms in range(1, 101):
+        m.observe_latency(float(ms))
+    m.observe_batch(3, 4)
+    m.observe_batch(4, 4, deadline=True)
+    snap = m.snapshot(queue_depth=7)
+    assert snap["p50_latency_ms"] == pytest.approx(50, abs=2)
+    assert snap["p99_latency_ms"] == pytest.approx(99, abs=2)
+    assert snap["batch_occupancy"] == pytest.approx(7 / 8)
+    assert snap["queue_depth"] == 7
+    assert snap["deadline_flushes"] == 1 and snap["full_flushes"] == 1
+
+
+def test_bucketed_compute_rounds_buckets_to_dp_shards():
+    from repro.runtime.cnn_server import _BucketedCompute
+
+    fake = SimpleNamespace(dp_shards=4)
+    core = _BucketedCompute(fake, max_batch=8)
+    assert core.buckets == (4, 8)
+    assert core.max_batch == 8
+
+
+# ---------------------------------------------------------------------------
+# the async engine over a real compiled program on a fake 1x1 mesh
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lenet_prog():
+    init, apply, in_shape = get_cnn("lenet5")
+    params = init(jax.random.PRNGKey(0))
+    x = np.zeros((1, *in_shape), np.float32)
+    prog = marvel.compile(apply, x, params=params, precompile=False)
+    mesh = jax.make_mesh((1,), ("data",))  # 1x1 "mesh": DP plumbing, 1 chip
+    prog.shard(mesh)
+    return prog, apply, params, in_shape
+
+
+def _images(in_shape, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(in_shape).astype(np.float32)
+            for _ in range(n)]
+
+
+def test_shard_returns_self_and_reports_dp(lenet_prog):
+    prog, _, _, _ = lenet_prog
+    assert prog.dp_shards == 1
+    assert prog.mesh is not None
+    assert prog.metrics()["dp_shards"] == 1
+
+
+def test_async_results_match_reference(lenet_prog):
+    prog, apply, params, in_shape = lenet_prog
+    imgs = _images(in_shape, 6)
+
+    async def main():
+        async with prog.serve(mode="async", max_batch=4) as engine:
+            return await asyncio.gather(*[engine.submit(im) for im in imgs])
+
+    results = asyncio.run(main())
+    import jax.numpy as jnp
+
+    want = np.argmax(np.asarray(apply(params, jnp.stack(imgs))), axis=-1)
+    assert [r.label for r in results] == list(want)
+    assert all(r.done and r.latency_ms > 0 for r in results)
+
+
+def test_admission_rejects_over_capacity(lenet_prog):
+    prog, _, _, in_shape = lenet_prog
+    imgs = _images(in_shape, 3)
+
+    async def main():
+        engine = prog.serve(mode="async", max_batch=8, max_pending=2)
+        async with engine:
+            # no await between the three submits: the batcher can't drain,
+            # so the third must bounce off the bounded queue
+            f1 = engine.submit_nowait(imgs[0])
+            f2 = engine.submit_nowait(imgs[1])
+            with pytest.raises(AdmissionError, match="capacity"):
+                engine.submit_nowait(imgs[2])
+            done = await asyncio.gather(f1, f2)
+        return done, engine.metrics()
+
+    done, m = asyncio.run(main())
+    assert all(r.done for r in done)
+    assert m["rejected"] == 1 and m["completed"] == 2
+
+
+def test_deadline_coalescing_flushes_partial_batches(lenet_prog):
+    prog, _, _, in_shape = lenet_prog
+    imgs = _images(in_shape, 3)
+
+    async def main():
+        engine = prog.serve(mode="async", max_batch=8, max_delay_ms=15.0)
+        async with engine:
+            results = await asyncio.gather(
+                *[engine.submit(im) for im in imgs]
+            )
+        return results, engine.metrics()
+
+    results, m = asyncio.run(main())
+    assert len(results) == 3
+    # a partial bucket (3 of 8) went out on the deadline, not on fill
+    assert m["batches"] == 1
+    assert m["deadline_flushes"] == 1 and m["full_flushes"] == 0
+    assert m["batch_occupancy"] == pytest.approx(3 / 4)  # bucket_for(3) == 4
+
+
+def test_full_bucket_flushes_before_deadline(lenet_prog):
+    prog, _, _, in_shape = lenet_prog
+    imgs = _images(in_shape, 4)
+
+    async def main():
+        # coalesce window long enough that only a full bucket can flush first
+        engine = prog.serve(mode="async", max_batch=4, max_delay_ms=5_000.0)
+        async with engine:
+            return await asyncio.gather(*[engine.submit(im) for im in imgs])
+
+    results = asyncio.run(main())
+    assert len(results) == 4
+
+
+def test_futures_resolve_in_submission_order(lenet_prog):
+    prog, _, _, in_shape = lenet_prog
+    imgs = _images(in_shape, 6)
+    order = []
+
+    async def main():
+        async with prog.serve(mode="async", max_batch=8) as engine:
+            futs = [engine.submit_nowait(im, uid=i)
+                    for i, im in enumerate(imgs)]
+            for fut in futs:
+                fut.add_done_callback(lambda f: order.append(f.result().uid))
+            await asyncio.gather(*futs)
+
+    asyncio.run(main())
+    assert order == list(range(6))  # one bucket -> submission order
+
+
+def test_metrics_counters_are_monotone(lenet_prog):
+    prog, _, _, in_shape = lenet_prog
+    monotone = ("submitted", "completed", "batches", "cache_misses")
+    snaps = []
+
+    async def main():
+        async with prog.serve(mode="async", max_batch=4) as engine:
+            snaps.append(engine.metrics())
+            for wave in range(3):
+                await asyncio.gather(*[
+                    engine.submit(im)
+                    for im in _images(in_shape, 2 + wave, seed=wave)
+                ])
+                snaps.append(engine.metrics())
+
+    asyncio.run(main())
+    for a, b in zip(snaps, snaps[1:]):
+        for key in monotone:
+            assert b[key] >= a[key], (key, a, b)
+    assert snaps[-1]["completed"] == 2 + 3 + 4
+
+
+def test_warmup_means_zero_recompiles_under_traffic(lenet_prog):
+    prog, _, _, in_shape = lenet_prog
+
+    async def main():
+        async with prog.serve(mode="async", max_batch=4) as engine:
+            engine.warmup(in_shape)
+            warmed = prog.cache_misses
+            for wave in range(3):  # odd sizes exercise every bucket
+                await asyncio.gather(*[
+                    engine.submit(im)
+                    for im in _images(in_shape, 1 + 2 * wave, seed=wave)
+                ])
+            return warmed, engine.metrics()
+
+    warmed, m = asyncio.run(main())
+    assert m["cache_misses"] == warmed  # zero per-request recompiles
+    assert m["cache_hits"] >= m["batches"]
+
+
+def test_sync_engine_admission_and_metrics(lenet_prog):
+    prog, _, _, in_shape = lenet_prog
+    engine = prog.serve(max_batch=4, max_pending=2)
+    engine.submit(0, np.zeros(in_shape, np.float32))
+    engine.submit(1, np.zeros(in_shape, np.float32))
+    with pytest.raises(AdmissionError):
+        engine.submit(2, np.zeros(in_shape, np.float32))
+    engine.run_until_drained()
+    m = engine.metrics()
+    assert m["completed"] == 2 and m["rejected"] == 1
+    assert m["queue_depth"] == 0
+
+
+def test_submit_after_stop_raises_instead_of_hanging(lenet_prog):
+    prog, _, _, in_shape = lenet_prog
+
+    async def main():
+        engine = prog.serve(mode="async", max_batch=4)
+        with pytest.raises(RuntimeError, match="not started"):
+            engine.submit_nowait(np.zeros(in_shape, np.float32))
+        async with engine:
+            await engine.submit(np.zeros(in_shape, np.float32))
+        with pytest.raises(RuntimeError, match="not started"):
+            engine.submit_nowait(np.zeros(in_shape, np.float32))
+
+    asyncio.run(main())
+
+
+def test_submit_racing_stop_is_rejected_not_dropped(lenet_prog):
+    """A request admitted concurrently with stop() must error, never land
+    behind the shutdown sentinel where its future would hang forever."""
+    prog, _, _, in_shape = lenet_prog
+
+    async def main():
+        engine = prog.serve(mode="async", max_batch=4)
+        await engine.start()
+        stop_task = asyncio.create_task(engine.stop())
+        await asyncio.sleep(0)  # stop() runs to its first suspension point;
+        # the request plane is already closed by then
+        with pytest.raises(RuntimeError, match="not started"):
+            engine.submit_nowait(np.zeros(in_shape, np.float32))
+        await stop_task
+
+    asyncio.run(main())
+
+
+def test_serve_mode_validation(lenet_prog):
+    prog, _, _, _ = lenet_prog
+    with pytest.raises(ValueError, match="sync"):
+        prog.serve(mode="threads")
+
+
+@pytest.mark.slow
+def test_serving_soak(lenet_prog):
+    """300 requests in ragged waves: every future resolves, nothing
+    recompiles after warmup, and the counters stay consistent."""
+    prog, apply, params, in_shape = lenet_prog
+    total = 300
+
+    async def main():
+        async with prog.serve(mode="async", max_batch=8,
+                              max_delay_ms=1.0) as engine:
+            engine.warmup(in_shape)
+            warmed = prog.cache_misses
+            results = []
+            rng = np.random.default_rng(7)
+            sent = 0
+            while sent < total:
+                n = int(rng.integers(1, 17))
+                n = min(n, total - sent)
+                wave = await asyncio.gather(*[
+                    engine.submit(im)
+                    for im in _images(in_shape, n, seed=sent)
+                ])
+                results.extend(wave)
+                sent += n
+            return warmed, results, engine.metrics()
+
+    warmed, results, m = asyncio.run(main())
+    assert len(results) == total and all(r.done for r in results)
+    assert m["completed"] == total and m["submitted"] == total
+    assert m["cache_misses"] == warmed
+    assert m["p99_latency_ms"] >= m["p50_latency_ms"] > 0
+
+
+# ---------------------------------------------------------------------------
+# multi-device DP (skipped on single-device CI)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 local devices for DP")
+def test_dp_smoke_across_local_devices():
+    init, apply, in_shape = get_cnn("lenet5")
+    params = init(jax.random.PRNGKey(0))
+    x = np.zeros((1, *in_shape), np.float32)
+    prog = marvel.compile(apply, x, params=params, precompile=False).shard()
+    ndev = len(jax.devices())
+    assert prog.dp_shards == ndev
+    engine = prog.serve(max_batch=2 * ndev)
+    assert all(b % ndev == 0 for b in engine.buckets)
+    engine.warmup(in_shape)
+    for i in range(2 * ndev + 1):
+        engine.submit(i, np.zeros(in_shape, np.float32))
+    results = engine.run_until_drained()
+    assert len(results) == 2 * ndev + 1

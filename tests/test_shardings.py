@@ -3,11 +3,9 @@ divisibility regressions without any 512-device compile."""
 import math
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import SHAPES, get_arch, list_archs
-from repro.configs.base import RunConfig
 from repro.launch.shardings import default_run, param_spec
 from repro.models import transformer as T
 

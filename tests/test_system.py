@@ -28,7 +28,7 @@ def test_marvel_pipeline_end_to_end():
     assert set(rep.recommended_extensions) >= {"mac", "fusedmac"}
     assert 1.7 <= rep.rv32_speedup_v4 <= 2.4  # paper: "up to 2x"
     # monotone cycle improvement v0 -> v4
-    cyc = [rep.rv32_cycles[l] for l in ("v0", "v1", "v2", "v3", "v4")]
+    cyc = [rep.rv32_cycles[v] for v in ("v0", "v1", "v2", "v3", "v4")]
     assert all(a >= b for a, b in zip(cyc, cyc[1:]))
 
 
