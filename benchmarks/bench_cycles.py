@@ -41,6 +41,8 @@ def run() -> None:
             + f";rv32_speedup_v4={speedup:.2f}"
             + f";tpu_speedup_v4={tpu_speedup:.2f}"
             + f";conv_epilogue_bytes_saved={base['conv_epilogue_bytes']:.3e}"
+            + f";dw_epilogue_bytes_saved={base['dw_epilogue_bytes']:.3e}"
+            + f";dw_hbm_bytes_saved={base['sep_intermediate_bytes']:.3e}"
             + f";paper_band={in_band}"
         )
         emit(f"fig11_cycles/{name}", 0.0, derived)

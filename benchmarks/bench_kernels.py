@@ -58,3 +58,47 @@ def run() -> None:
         nbytes = n * h * ww * cin + k * k * cin * cout + 4 * n * ho * wo * cout
         emit(f"kernel/fused_conv_s{stride}_{act}_{h}x{ww}x{cin}", us,
              f"arith_intensity={flops / nbytes:.1f}")
+
+    # dw_mac: per-channel int8 depthwise MAC + fused epilogue (the mobile
+    # CNN hot path); AI is intrinsically low (no channel contraction —
+    # VPU-bound), the win is the in-register epilogue
+    from repro.kernels.depthwise_conv import depthwise_conv_int8, sep_block_int8
+
+    wd = jax.random.randint(jax.random.PRNGKey(7), (k, k, cin),
+                            -15, 16, jnp.int8)
+    esd = jnp.full((cin,), 1e-3, jnp.float32)  # per-INPUT-channel epilogue
+    ebd = jnp.zeros((cin,), jnp.float32)
+    for stride, act in [(1, "relu"), (2, "relu6")]:
+        ho = conv_out_size(h, k, stride, "SAME")
+        wo = conv_out_size(ww, k, stride, "SAME")
+        us = time_fn(
+            lambda a, b: depthwise_conv_int8(a, b, esd, ebd, stride=stride,
+                                             padding="SAME", act=act), xc, wd
+        )
+        flops = 2 * n * ho * wo * cin * k * k
+        nbytes = n * h * ww * cin + k * k * cin + 4 * n * ho * wo * cin
+        emit(f"kernel/depthwise_conv_s{stride}_{act}_{h}x{ww}x{cin}", us,
+             f"arith_intensity={flops / nbytes:.1f}")
+
+    # sep_block: fused dw->pw separable block; dw_hbm_bytes_saved is the
+    # (N, Ho, Wo, C) f32 intermediate write+read the fusion never issues
+    wp = jax.random.randint(jax.random.PRNGKey(8), (cin, cout),
+                            -15, 16, jnp.int8)
+    ps = jnp.full((cout,), 1e-3, jnp.float32)
+    pb = jnp.zeros((cout,), jnp.float32)
+    for stride in (1, 2):
+        ho = conv_out_size(h, k, stride, "SAME")
+        wo = conv_out_size(ww, k, stride, "SAME")
+        us = time_fn(
+            lambda a, b, c: sep_block_int8(a, b, esd, ebd, c, ps, pb,
+                                           stride=stride, padding="SAME",
+                                           dw_act="relu", pw_act="none"),
+            xc, wd, wp,
+        )
+        flops = 2 * n * ho * wo * cin * (k * k + cout)
+        nbytes = (n * h * ww * cin + k * k * cin + cin * cout
+                  + 4 * n * ho * wo * cout)
+        saved = 2 * 4 * n * ho * wo * cin
+        emit(f"kernel/sep_block_s{stride}_{h}x{ww}x{cin}x{cout}", us,
+             f"arith_intensity={flops / nbytes:.1f};"
+             f"dw_hbm_bytes_saved={saved:.3e}")

@@ -18,7 +18,13 @@ KERNEL_VMEM = {
     # padded 64x64 image slab + weight tile (int8) + int32 acc + epilogue vecs
     "conv_mac": 66 * 66 * 128 * 1 + 128 * 128 * 1 + 128 * 128 * 4 + 2 * 128 * 4,
     "add2i": 2 * 256 * 4096 * 2,  # two row blocks (worst-case D=4096)
-    "fusedmac": 2 * 128 * 128 * 2 + 128 * 128 * 4,
+    # padded image slab + (KH,KW,BC) taps (int8) + int32 acc + epilogue vecs
+    "dw_mac": 66 * 66 * 128 * 1 + 3 * 3 * 128 * 1 + 128 * 128 * 4 + 2 * 128 * 4,
+    # fusedmac also carries the sep_block datapath (padded image slab + dw
+    # taps + pw weight tile + f32 acc) on top of the GEMM-epilogue tiles
+    "fusedmac": (2 * 128 * 128 * 2 + 128 * 128 * 4
+                 + 66 * 66 * 128 * 1 + 3 * 3 * 128 * 1
+                 + 128 * 128 * 1 + 128 * 128 * 4),
     "zol": (128 * 128 + 2 * 128 * 128) * 2 + 128 * (128 + 2) * 4,  # flash tiles
 }
 

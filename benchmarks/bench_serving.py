@@ -69,6 +69,7 @@ def run() -> None:
 
         # sync comparison: same buckets, caller-driven, no coalescing window
         sync = prog.serve(max_batch=MAX_BATCH)
+        sync.warmup(in_shape)
         for uid, im in enumerate(imgs):
             sync.submit(uid, im)
         t0 = time.perf_counter()
@@ -79,6 +80,18 @@ def run() -> None:
             f"serving/{name}_sync_throughput", sdt / REQUESTS * 1e6,
             f"req_s={REQUESTS / sdt:.1f};batches={ms['batches']};"
             f"occupancy={ms['batch_occupancy']:.2f}",
+        )
+
+        # the async tier must stay within a small constant of the sync
+        # plane (it adds one loop handoff per flush, never per request);
+        # handoffs_per_batch == 1 is the structural assert, the ratio row
+        # is wall-clock (informational in the gate, like every timing)
+        handoffs = m["loop_handoffs"] / max(m["batches"], 1)
+        emit(
+            f"serving/{name}_async_vs_sync", 0.0,
+            f"async_sync_ratio={sdt / dt:.3f};"
+            f"handoffs_per_batch={handoffs:.2f};"
+            f"async_req_s={REQUESTS / dt:.1f};sync_req_s={REQUESTS / sdt:.1f}",
         )
 
 

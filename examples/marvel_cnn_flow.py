@@ -4,6 +4,12 @@ class detection, chess_rewrite fusion, and the v0..v4 cycle/energy tables
 (Figs 11/12) — through the one front door, ``marvel.compile``, which also
 verifies the baked AOT artifact against the baseline.
 
+The mobile models (MobileNetV1/V2) exercise the depthwise-separable fast
+path: each dw->pw block is one ``sep_block`` dispatch site, covered by the
+``dw_mac`` per-channel MAC extension from v2 and the fused sep_block kernel
+(depthwise intermediate never materialized in HBM) from v3 — watch their
+``dw_epilogue_bytes``/``sep_intermediate`` rows move the cycle ladder.
+
     PYTHONPATH=src python examples/marvel_cnn_flow.py [--models lenet5,...]
                                                       [--quantize] [--level v4]
 """

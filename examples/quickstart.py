@@ -48,3 +48,18 @@ y0 = apply(params, x1)
 y1 = rewritten(x1)
 print(f"rewrites applied: {stats}; max |baseline - rewritten| = "
       f"{float(jnp.max(jnp.abs(y0 - y1))):.2e}")
+
+# the mobile CNN class rides the depthwise-separable fast path: each
+# dw->pw block is ONE sep_block site (per-channel dw_mac kernel at v2+,
+# the fused sep_block kernel — intermediate never touches HBM — at v3+),
+# and the class-aware selection picks dw_mac only where the profile
+# actually shows depthwise sites
+minit, mapply, min_shape = get_cnn("mobilenetv1")
+mparams = minit(jax.random.PRNGKey(1))
+prog_m = marvel.compile(lambda x: mapply(mparams, x),
+                        jnp.zeros((1, *min_shape)), level="v4",
+                        precompile=False)
+print(f"\nmobilenetv1: class={prog_m.model_class}, extensions="
+      f"{prog_m.report.recommended_extensions}")
+print(f"modeled v0->v4 speedup: rv32 {prog_m.report.rv32_speedup_v4:.2f}x, "
+      f"tpu {prog_m.report.tpu_speedup_v4:.2f}x (separable path fused)")

@@ -72,10 +72,17 @@ def energy_j(cyc: float, chips: int = 1) -> float:
 #   run at the 2x int8 MXU rate via int8_fraction
 # v2 add2i (fused residual+norm): each fused site saves one full activation
 #   tensor read + write (2 x bytes of the activation)
+# v2 dw_mac (per-channel int8 depthwise MAC): depthwise conv flops join the
+#   2x int8 rate one level after mac (at v1 they still run unquantized —
+#   the generic GEMM datapath cannot express the per-channel loop), and the
+#   dw kernel keeps the depthwise bias/BN/act chain in-register
+#   (dw_epilogue_bytes, same exact accounting as conv_epilogue_bytes)
 # v3 fusedmac (GEMM epilogue fusion): each site saves bias+act round-trip
 #   (2 x bytes of the GEMM output); fused_conv sites additionally keep the
 #   bias + folded-BN + act chain in-register (conv_epilogue_bytes: exact
-#   2 x 4 x out_elems per unfused epilogue eqn, accounted by the profiler)
+#   2 x 4 x out_elems per unfused epilogue eqn, accounted by the profiler);
+#   sep_block sites stop materializing the depthwise intermediate in HBM
+#   (sep_intermediate_bytes: one f32 write + one read per block)
 # v4 zol (grid pipelining / chunked streaming): removes per-iteration loop
 #   dispatch and avoids materializing S^2 attention scores in HBM.
 
@@ -86,10 +93,11 @@ def apply_level(profile: "dict", level: str) -> dict:
     """Take raw v0 profile dict -> adjusted terms inputs for a level.
 
     profile keys: flops, matmul_flops, hbm_bytes, weight_bytes,
-    residual_norm_bytes, epilogue_bytes, conv_epilogue_bytes,
-    attn_score_bytes, loop_iters.  (conv_flops is informational only: it is
-    already part of matmul_flops, which alone feeds int8_fraction — do not
-    add it to a delta or conv flops would be double-counted.)
+    residual_norm_bytes, epilogue_bytes, conv_epilogue_bytes, dw_flops,
+    dw_epilogue_bytes, sep_intermediate_bytes, attn_score_bytes, loop_iters.
+    (conv_flops is informational only, and dw_flops is a *subset* of
+    matmul_flops used to stage the int8 rate — do not add either to a delta
+    or conv flops would be double-counted.)
     """
     p = dict(profile)
     out = {
@@ -99,14 +107,25 @@ def apply_level(profile: "dict", level: str) -> dict:
         "int8_fraction": 0.0,
     }
     idx = LEVELS.index(level)
-    if idx >= 1:  # mac: int8 weights
+    mm_flops = p.get("matmul_flops", 0.0)
+    dw_flops = min(p.get("dw_flops", 0.0), mm_flops)
+    # GEMM-form MACs — dense layers and the 1x1 convs rerouted to
+    # matmul_epilogue — ride the v1 `mac` credit (the paper's int8 MAC GEMM
+    # instruction); fusedmac at v3 adds only their epilogue fusion.  ONLY
+    # the depthwise share is staged to v2, because its per-channel loop
+    # needs the separate dw_mac extension.
+    if idx >= 1:  # mac: int8 weights; depthwise MACs stay f32 until dw_mac
         out["hbm_bytes"] -= p.get("weight_bytes", 0.0) * 0.5
-        out["int8_fraction"] = p.get("matmul_flops", 0.0) / max(p["flops"], 1.0)
-    if idx >= 2:  # add2i: fused residual+rmsnorm
+        out["int8_fraction"] = (mm_flops - dw_flops) / max(p["flops"], 1.0)
+    if idx >= 2:  # add2i: fused residual+rmsnorm; dw_mac: int8 depthwise
         out["hbm_bytes"] -= p.get("residual_norm_bytes", 0.0)
-    if idx >= 3:  # fusedmac + conv_mac epilogue: bias/BN/act fusion
+        out["hbm_bytes"] -= p.get("dw_epilogue_bytes", 0.0)
+        out["int8_fraction"] = mm_flops / max(p["flops"], 1.0)
+    if idx >= 3:  # fusedmac + conv_mac epilogue: bias/BN/act fusion;
+        # sep_block: the depthwise intermediate never touches HBM
         out["hbm_bytes"] -= p.get("epilogue_bytes", 0.0)
         out["hbm_bytes"] -= p.get("conv_epilogue_bytes", 0.0)
+        out["hbm_bytes"] -= p.get("sep_intermediate_bytes", 0.0)
     if idx >= 4:  # zol: grid loops + streaming attention
         out["hbm_bytes"] -= p.get("attn_score_bytes", 0.0)
         out["loop_iters"] = p["loop_iters"] * 0.05  # grid seqencer handles rest
@@ -161,12 +180,21 @@ def rv32_cycles_per_mac(level: str, add2i_coverage: float = 0.86) -> float:
 
 def rv32_cycles(profile_inputs: dict, level: str,
                 add2i_coverage: float = 0.86) -> float:
-    """Modeled inference cycles on the RV32 variant (Fig 11 analogue)."""
-    macs = profile_inputs.get("matmul_flops", 0.0) / 2.0
-    other_ops = max(
-        profile_inputs["flops"] - profile_inputs.get("matmul_flops", 0.0), 0.0
-    )
-    return macs * rv32_cycles_per_mac(level, add2i_coverage) + other_ops
+    """Modeled inference cycles on the RV32 variant (Fig 11 analogue).
+
+    Depthwise MACs (``dw_flops``) pick up the mac fusion one level later
+    than dense MACs: the v1 ``mac`` instruction is the GEMM inner-product
+    form, and the per-channel depthwise loop only gains its fused MAC when
+    ``dw_mac`` lands at v2.
+    """
+    mm_flops = profile_inputs.get("matmul_flops", 0.0)
+    dw_macs = min(profile_inputs.get("dw_flops", 0.0), mm_flops) / 2.0
+    dense_macs = mm_flops / 2.0 - dw_macs
+    other_ops = max(profile_inputs["flops"] - mm_flops, 0.0)
+    dw_level = "v0" if level == "v1" else level
+    return (dense_macs * rv32_cycles_per_mac(level, add2i_coverage)
+            + dw_macs * rv32_cycles_per_mac(dw_level, add2i_coverage)
+            + other_ops)
 
 
 def rv32_energy_j(cyc: float, level: str) -> float:

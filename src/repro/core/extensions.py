@@ -4,7 +4,9 @@ v0  baseline (pure jnp / XLA default)
 v1  + mac       (int8 MAC GEMM kernel — quantized multiply-accumulate)
     + conv_mac  (int8 implicit-GEMM conv — the conv form of mac+fusedmac)
 v2  + add2i     (fused residual-add + RMSNorm)
-v3  + fusedmac  (GEMM + bias + activation epilogue fusion)
+    + dw_mac    (per-channel int8 depthwise MAC — the mobile-CNN conv form)
+v3  + fusedmac  (GEMM + bias + activation epilogue fusion; also the fused
+                 separable dw->pw block once both stages exist)
 v4  + zol       (grid-pipelined streaming: flash attention / chunked scans)
 
 paper <-> repo mapping (v-level -> extension -> pattern -> pallas kernel);
@@ -18,14 +20,21 @@ in eager execution trace time and call time coincide, so every row is
   v1+    mac        mac_matmul(_int8)       mac_matmul.py            trace
   v1+    conv_mac   fused_conv              fused_conv.py (CNN only) trace
   v2+    add2i      residual_rmsnorm        residual_rmsnorm.py      trace
-  v3+    fusedmac   matmul_epilogue         matmul_epilogue.py       trace
+  v2+    dw_mac     depthwise_conv          depthwise_conv.py (CNN)  trace
+  v3+    fusedmac   matmul_epilogue,        matmul_epilogue.py,      trace
+                    sep_block               depthwise_conv.py (CNN)
   v4     zol        flash_attention,        flash_attention.py,      trace
                     wkv_chunk, ssm_chunk    wkv_chunk.py
 
 ``conv_mac`` is the paper's mac/fusedmac pair as it appears in conv inner
 loops: one int8 MAC pass over the KH*KW*Cin reduction with the dequant +
 bias + folded-BN + activation epilogue fused in-register, activated from v1
-(it IS the conv mac) for the paper's own model class (cnn).
+(it IS the conv mac) for the paper's own model class (cnn).  ``dw_mac`` is
+its depthwise form — a per-channel (KH, KW) MAC with no channel contraction
+(the loop shape generic GEMM datapaths cannot express) — activated from v2
+for the mobile CNNs.  ``sep_block``, the fused depthwise->pointwise block
+whose intermediate never touches HBM, needs both stages' MACs plus the
+epilogue machinery, so it rides with ``fusedmac`` at v3+.
 
 Each extension names a dispatch *pattern* and the backends that implement it:
 ``ref`` (pure jnp, algorithmically fused — used on CPU and as oracle),
@@ -78,9 +87,16 @@ EXTENSIONS: dict[str, Extension] = {
             ("dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm"),
         ),
         Extension(
+            "dw_mac",
+            ("depthwise_conv",),
+            "per-channel int8 depthwise MAC + fused epilogue (mobile CNNs)",
+            ("cnn",),
+        ),
+        Extension(
             "fusedmac",
-            ("matmul_epilogue",),
-            "GEMM + bias + activation epilogue in one kernel",
+            ("matmul_epilogue", "sep_block"),
+            "GEMM + bias + activation epilogue in one kernel; fused "
+            "depthwise->pointwise separable block (CNN only)",
             ("cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm"),
         ),
         Extension(
@@ -95,9 +111,9 @@ EXTENSIONS: dict[str, Extension] = {
 LEVEL_EXTENSIONS: dict[str, tuple[str, ...]] = {
     "v0": (),
     "v1": ("mac", "conv_mac"),
-    "v2": ("mac", "conv_mac", "add2i"),
-    "v3": ("mac", "conv_mac", "add2i", "fusedmac"),
-    "v4": ("mac", "conv_mac", "add2i", "fusedmac", "zol"),
+    "v2": ("mac", "conv_mac", "add2i", "dw_mac"),
+    "v3": ("mac", "conv_mac", "add2i", "dw_mac", "fusedmac"),
+    "v4": ("mac", "conv_mac", "add2i", "dw_mac", "fusedmac", "zol"),
 }
 
 

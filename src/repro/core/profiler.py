@@ -85,6 +85,76 @@ def _recording(sink: list):
                     if ho > 0 and wo > 0:  # degenerate VALID: empty output
                         s.append(("conv_epilogue",
                                   int(2 * 4 * n * ho * wo * cout * n_post)))
+            # acts the dw/sep kernel epilogues implement (depthwise_conv.
+            # _ACTS); sites outside this set fall back in ops.py and must
+            # not claim fusion savings
+            _dw_acts = ("none", "relu", "relu6")
+            if pattern == "depthwise_conv" and len(args) >= 2:
+                # dw_mac sites: per-channel MAC flops (the mobile-CNN share
+                # of matmul_flops) + the epilogue round-trips the kernel
+                # keeps in-register — same accounting as conv_epilogue, but
+                # credited from v2 (when dw_mac lands)
+                x, w = args[0], args[1]
+                if (hasattr(x, "shape") and len(x.shape) == 4
+                        and len(getattr(w, "shape", ())) == 4
+                        and w.shape[2] == 1 and w.shape[3] == x.shape[-1]
+                        and kwargs.get("act", "none") in _dw_acts
+                        and kwargs.get("padding", "SAME") in ("SAME", "VALID")):
+                    from repro.kernels.common import conv_out_size
+
+                    kh, kw_, _, c = w.shape
+                    n, h, w_in, _ = x.shape
+                    stride = kwargs.get("stride", 1)
+                    ho = conv_out_size(h, kh, stride,
+                                       kwargs.get("padding", "SAME"))
+                    wo = conv_out_size(w_in, kw_, stride,
+                                       kwargs.get("padding", "SAME"))
+                    act = kwargs.get("act", "none")
+                    n_post = (
+                        int(len(args) > 2 and args[2] is not None)
+                        + int(kwargs.get("scale") is not None)
+                        + int(kwargs.get("shift") is not None)
+                        + (2 if act == "relu6" else int(act != "none"))
+                    )
+                    if ho > 0 and wo > 0:
+                        s.append(("dw_mac_flops",
+                                  int(2 * n * ho * wo * c * kh * kw_)))
+                        s.append(("dw_epilogue",
+                                  int(2 * 4 * n * ho * wo * c * n_post)))
+            if pattern == "sep_block" and len(args) >= 3:
+                # what the UNFUSED separable block spills to HBM: the
+                # (N, Ho, Wo, C) f32 depthwise output, written once by the
+                # dw stage and re-read by the pointwise stage (the stage
+                # sites themselves are recorded by the baseline
+                # decomposition tracing through this very hook)
+                x, w_dw, w_pw = args[0], args[1], args[2]
+                pw_1x1 = (len(getattr(w_pw, "shape", ())) == 4
+                          and w_pw.shape[0] == w_pw.shape[1] == 1
+                          and hasattr(x, "shape")
+                          and w_pw.shape[2] == x.shape[-1])
+                # mirror ops._pallas_sep_block's guard: a site the fused
+                # kernel declines decomposes, and its intermediate DOES
+                # round-trip HBM — no saving to record
+                if (hasattr(x, "shape") and len(x.shape) == 4
+                        and len(getattr(w_dw, "shape", ())) == 4
+                        and w_dw.shape[2] == 1
+                        and w_dw.shape[3] == x.shape[-1]
+                        and pw_1x1
+                        and kwargs.get("dw_act", "relu") in _dw_acts
+                        and kwargs.get("pw_act", "none") in _dw_acts
+                        and kwargs.get("padding", "SAME") in ("SAME", "VALID")):
+                    from repro.kernels.common import conv_out_size
+
+                    kh, kw_, _, c = w_dw.shape
+                    n, h, w_in, _ = x.shape
+                    stride = kwargs.get("stride", 1)
+                    ho = conv_out_size(h, kh, stride,
+                                       kwargs.get("padding", "SAME"))
+                    wo = conv_out_size(w_in, kw_, stride,
+                                       kwargs.get("padding", "SAME"))
+                    if ho > 0 and wo > 0:
+                        s.append(("sep_intermediate",
+                                  int(2 * 4 * n * ho * wo * c)))
             if pattern == "flash_attention" and len(args) >= 2:
                 # what a NON-streaming (v0) attention would spill to HBM:
                 # the Sq x Skv score matrix, written + read in f32
@@ -199,6 +269,13 @@ class PatternProfile:
             # exact per-site accounting of the conv bias/BN/act round-trips
             # the fused_conv kernel keeps in-register (see _recording)
             "conv_epilogue_bytes": float(self.site_bytes["conv_epilogue"]),
+            # depthwise share of matmul_flops (dw_mac lands at v2, one level
+            # after mac) and the dw epilogue round-trips its kernel fuses
+            "dw_flops": float(self.site_bytes["dw_mac_flops"]),
+            "dw_epilogue_bytes": float(self.site_bytes["dw_epilogue"]),
+            # the separable-block intermediate the fused sep kernel never
+            # materializes in HBM (credited at v3+ with fusedmac)
+            "sep_intermediate_bytes": float(self.site_bytes["sep_intermediate"]),
             "attn_score_bytes": float(self.site_bytes["attn_scores"]),
             "loop_iters": self.loop_iters,
         }
@@ -240,7 +317,11 @@ def _walk(jaxpr: jcore.Jaxpr, prof: PatternProfile, mult: float) -> None:
                         _walk(inner, prof, sub_mult)
             continue
 
-        prof.hbm_bytes += mult * (in_bytes + out_bytes)
+        # TRANSPARENT eqns are shape/dtype plumbing XLA compiles to bitcasts
+        # or fuses into their consumers — they move no HBM bytes, exactly as
+        # they execute no RV32 instructions (chain-transparency above)
+        if name not in TRANSPARENT:
+            prof.hbm_bytes += mult * (in_bytes + out_bytes)
 
         if name in MATMUL_PRIMS:
             fl = (

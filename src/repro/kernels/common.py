@@ -21,6 +21,39 @@ def conv_out_size(size: int, k: int, stride: int, padding: str) -> int:
     return (size - k) // stride + 1
 
 
+# the epilogue activations the int8 conv-family kernels (fused_conv,
+# depthwise_conv, sep_block) implement in-register; ops.py guards fall back
+# to the jnp references for anything else
+EPILOGUE_ACTS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
+}
+
+
+def conv_tile_plan(h: int, w_in: int, kh: int, kw: int, stride: int,
+                   padding: str, bm: int):
+    """Shared implicit-im2col tiling plan for the conv-family kernels.
+
+    Returns ``(ho, wo, boh, ohb, top, left, hp_req, wp_req)``: output
+    sizes, output rows per M tile, M-tile count, the SAME-padding split
+    (low = total // 2, matching lax), and the padded image extent that
+    keeps every (kh, kw, row-block) slice in bounds.
+    """
+    ho = conv_out_size(h, kh, stride, padding)
+    wo = conv_out_size(w_in, kw, stride, padding)
+    boh = max(1, min(ho, bm // max(wo, 1)))
+    ohb = -(-ho // boh)
+    if padding == "SAME":
+        top = max((ho - 1) * stride + kh - h, 0) // 2
+        left = max((wo - 1) * stride + kw - w_in, 0) // 2
+    else:
+        top = left = 0
+    hp_req = (ohb * boh - 1) * stride + kh
+    wp_req = (wo - 1) * stride + kw
+    return ho, wo, boh, ohb, top, left, hp_req, wp_req
+
+
 def pad_to(x: jax.Array, axis: int, multiple: int, value=0.0):
     size = x.shape[axis]
     pad = (-size) % multiple

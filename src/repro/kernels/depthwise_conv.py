@@ -1,0 +1,219 @@
+"""dw_mac kernels: depthwise int8 conv + the fused separable block.
+
+Depthwise 3x3s dominate the mobile CNN class (MobileNetV1/V2), yet they are
+the one conv form an implicit-GEMM datapath cannot express: each output
+channel contracts over only its own (KH, KW) window, so the MXU K dimension
+collapses to KH*KW*1 and the op is VPU-bound.  The ``dw_mac`` extension is
+the per-channel MAC form of the paper's ``mac``: for every channel lane the
+(KH, KW) taps are multiply-accumulated int8 x int8 -> int32 in VMEM, and the
+same pre-folded dequant + bias + folded-BN + relu/relu6 epilogue as
+``fused_conv`` is applied in-register before the single HBM write.
+
+:func:`depthwise_conv_int8` — the standalone depthwise kernel.  Grid
+``(n, oh_block, c_block, kh, kw)``: the (kh, kw) contraction dims are
+innermost so a ``(BM, BC)`` int32 accumulator carries across the taps; the
+activation tile for each tap is carved out of the VMEM-resident padded image
+(same implicit-im2col slicing as fused_conv, minus the channel contraction).
+
+:func:`sep_block_int8` — the fused separable block (dw -> 1x1 pw) that the
+mobile models emit as ONE dispatch site.  The depthwise output tile never
+round-trips through HBM: for each (cin-block) contraction step the kernel
+recomputes the depthwise tile in VMEM (taps unrolled — KH, KW are static),
+applies the depthwise epilogue in-register, and immediately contracts it
+against the int8 pointwise weight block on the MXU, accumulating f32 into
+the output tile.  The pointwise epilogue (per-channel weight dequant + bias
++ folded BN + act) runs at the last cin step.  The depthwise tile is
+recomputed once per cout block — VMEM recompute is the price of never
+materializing the (N, Ho, Wo, C) intermediate in HBM (the
+``dw_hbm_bytes_saved`` column in bench_kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import (
+    EPILOGUE_ACTS, conv_tile_plan, interpret_mode, pad_to,
+)
+
+BM, BN, BC = 128, 128, 128
+
+_ACTS = EPILOGUE_ACTS
+
+
+def _dw_patch(img, oh_block_id, kh, kw, *, stride, boh, wo):
+    """The (boh*wo, BC) activation tile for tap (kh, kw) of this output-row
+    block, carved from the VMEM-resident padded image (implicit im2col)."""
+    row0 = oh_block_id * (boh * stride) + kh
+    span_h = (boh - 1) * stride + 1
+    span_w = (wo - 1) * stride + 1
+    rows = jax.lax.dynamic_slice(
+        img, (row0, 0, 0), (span_h, img.shape[1], img.shape[2])
+    )[::stride]
+    patch = jax.lax.dynamic_slice(
+        rows, (0, kw, 0), (boh, span_w, img.shape[2])
+    )[:, ::stride]
+    return patch.reshape(boh * wo, img.shape[2])
+
+
+def _dw_kernel(x_ref, w_ref, es_ref, eb_ref, o_ref, acc_ref, *,
+               stride, boh, wo, act):
+    # grid: (n, oh_block, c_block, kh, kw); the (kh, kw) taps are innermost
+    # so the int32 accumulator carries across them
+    kh, kw = pl.program_id(3), pl.program_id(4)
+
+    @pl.when((kh == 0) & (kw == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    img = x_ref[0]  # (Hp, Wp, BC) int8
+    patch = _dw_patch(img, pl.program_id(1), kh, kw,
+                      stride=stride, boh=boh, wo=wo)
+    # per-channel MAC: one int8 tap per lane, accumulated in int32 (VPU form
+    # of the mac_matmul pattern — no channel contraction)
+    acc_ref[...] += patch.astype(jnp.int32) * w_ref[0, 0].astype(jnp.int32)
+
+    @pl.when((kh == pl.num_programs(3) - 1) & (kw == pl.num_programs(4) - 1))
+    def _epilogue():
+        # dequant + bias + folded-BN affine pre-folded into (es, eb)
+        y = acc_ref[...].astype(jnp.float32) * es_ref[...] + eb_ref[...]
+        o_ref[0] = _ACTS[act](y).reshape(boh, wo, -1).astype(o_ref.dtype)
+
+
+def _padded_image(x_int8, top, left, hp_req, wp_req):
+    """Zero-pad (exact for symmetric int8) so every tap slice is in bounds
+    (extents from :func:`repro.kernels.common.conv_tile_plan`)."""
+    _, h, w_in, _ = x_int8.shape
+    x_p = jnp.pad(x_int8, ((0, 0), (top, max(hp_req - h - top, 0)),
+                           (left, max(wp_req - w_in - left, 0)), (0, 0)))
+    x_p, _ = pad_to(x_p, 3, BC)
+    return x_p
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "act",
+                                             "out_dtype"))
+def depthwise_conv_int8(x_int8, w_int8, eff_scale, eff_bias, *, stride=1,
+                        padding="SAME", act="none", out_dtype=jnp.float32):
+    """x: (N, H, W, C) int8; w: (KH, KW, C) int8 (one tap stack per channel);
+    eff_scale/eff_bias: (C,) f32 -> act(acc*eff_scale + eff_bias), returned
+    as (N, Ho, Wo, C) ``out_dtype``."""
+    n, h, w_in, c = x_int8.shape
+    kh, kw, _ = w_int8.shape
+    ho, wo, boh, ohb, top, left, hp_req, wp_req = conv_tile_plan(
+        h, w_in, kh, kw, stride, padding, BM
+    )
+    x_p = _padded_image(x_int8, top, left, hp_req, wp_req)
+    w_p, _ = pad_to(w_int8, 2, BC)
+    es, _ = pad_to(eff_scale.reshape(1, -1).astype(jnp.float32), 1, BC)
+    eb, _ = pad_to(eff_bias.reshape(1, -1).astype(jnp.float32), 1, BC)
+    _, hp, wp, cp = x_p.shape
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, stride=stride, boh=boh, wo=wo, act=act),
+        grid=(n, ohb, cp // BC, kh, kw),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, BC),
+                         lambda ni, oi, ci, khi, kwi: (ni, 0, 0, ci)),
+            pl.BlockSpec((1, 1, BC),
+                         lambda ni, oi, ci, khi, kwi: (khi, kwi, ci)),
+            pl.BlockSpec((1, BC), lambda ni, oi, ci, khi, kwi: (0, ci)),
+            pl.BlockSpec((1, BC), lambda ni, oi, ci, khi, kwi: (0, ci)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, boh, wo, BC), lambda ni, oi, ci, khi, kwi: (ni, oi, 0, ci)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, ohb * boh, wo, cp), out_dtype),
+        scratch_shapes=[pltpu.VMEM((boh * wo, BC), jnp.int32)],
+        interpret=interpret_mode(),
+    )(x_p, w_p, es, eb)
+    return out[:, :ho, :, :c]
+
+
+def _sep_kernel(x_ref, wd_ref, ds_ref, db_ref, wp_ref, ps_ref, pb_ref,
+                o_ref, acc_ref, *, stride, boh, wo, kh, kw, dw_act, pw_act):
+    # grid: (n, oh_block, cout_block, cin_block); cin is the innermost
+    # contraction dim so the f32 pointwise accumulator carries across it
+    ci = pl.program_id(3)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    img = x_ref[0]  # (Hp, Wp, BC) int8
+    # depthwise tile for this cin block, taps unrolled (KH, KW static) —
+    # int32 MAC in registers, never written to HBM
+    dw = jnp.zeros((acc_ref.shape[0], img.shape[2]), jnp.int32)
+    for khi in range(kh):
+        for kwi in range(kw):
+            patch = _dw_patch(img, pl.program_id(1), khi, kwi,
+                              stride=stride, boh=boh, wo=wo)
+            dw += patch.astype(jnp.int32) * wd_ref[khi, kwi].astype(jnp.int32)
+    # depthwise epilogue in-register (dequant + bias + folded BN + act) ...
+    dwf = _ACTS[dw_act](dw.astype(jnp.float32) * ds_ref[...] + db_ref[...])
+    # ... feeds the MXU pointwise contraction directly from VMEM
+    acc_ref[...] += jax.lax.dot_general(
+        dwf, wp_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ci == pl.num_programs(3) - 1)
+    def _epilogue():
+        y = acc_ref[...] * ps_ref[...] + pb_ref[...]
+        o_ref[0] = _ACTS[pw_act](y).reshape(boh, wo, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "dw_act",
+                                             "pw_act", "out_dtype"))
+def sep_block_int8(x_int8, w_dw_int8, dw_scale, dw_bias, w_pw_int8,
+                   pw_scale, pw_bias, *, stride=1, padding="SAME",
+                   dw_act="relu", pw_act="none", out_dtype=jnp.float32):
+    """Fused depthwise -> pointwise block, one HBM write.
+
+    x: (N, H, W, C) int8; w_dw: (KH, KW, C) int8; w_pw: (C, Cout) int8;
+    dw_scale/dw_bias: (C,) f32 depthwise epilogue (act'd in-register);
+    pw_scale/pw_bias: (Cout,) f32 pointwise epilogue.  Returns
+    ``pw_act((dw_act(dwconv(x)) @ w_pw) * pw_scale + pw_bias)`` as
+    (N, Ho, Wo, Cout) ``out_dtype`` — the depthwise intermediate stays in
+    VMEM.
+    """
+    n, h, w_in, _ = x_int8.shape
+    kh, kw, _ = w_dw_int8.shape
+    cout = w_pw_int8.shape[1]
+    ho, wo, boh, ohb, top, left, hp_req, wp_req = conv_tile_plan(
+        h, w_in, kh, kw, stride, padding, BM
+    )
+    x_p = _padded_image(x_int8, top, left, hp_req, wp_req)
+    wd, _ = pad_to(w_dw_int8, 2, BC)
+    ds, _ = pad_to(dw_scale.reshape(1, -1).astype(jnp.float32), 1, BC)
+    db, _ = pad_to(dw_bias.reshape(1, -1).astype(jnp.float32), 1, BC)
+    wp, _ = pad_to(w_pw_int8, 0, BC)
+    wp, _ = pad_to(wp, 1, BN)
+    ps, _ = pad_to(pw_scale.reshape(1, -1).astype(jnp.float32), 1, BN)
+    pb, _ = pad_to(pw_bias.reshape(1, -1).astype(jnp.float32), 1, BN)
+    _, hp, wp_sp, cp = x_p.shape
+    nb = wp.shape[1] // BN
+    out = pl.pallas_call(
+        functools.partial(_sep_kernel, stride=stride, boh=boh, wo=wo,
+                          kh=kh, kw=kw, dw_act=dw_act, pw_act=pw_act),
+        grid=(n, ohb, nb, cp // BC),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp_sp, BC),
+                         lambda ni, oi, nbi, ci: (ni, 0, 0, ci)),
+            pl.BlockSpec((kh, kw, BC), lambda ni, oi, nbi, ci: (0, 0, ci)),
+            pl.BlockSpec((1, BC), lambda ni, oi, nbi, ci: (0, ci)),
+            pl.BlockSpec((1, BC), lambda ni, oi, nbi, ci: (0, ci)),
+            pl.BlockSpec((BC, BN), lambda ni, oi, nbi, ci: (ci, nbi)),
+            pl.BlockSpec((1, BN), lambda ni, oi, nbi, ci: (0, nbi)),
+            pl.BlockSpec((1, BN), lambda ni, oi, nbi, ci: (0, nbi)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, boh, wo, BN), lambda ni, oi, nbi, ci: (ni, oi, 0, nbi)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, ohb * boh, wo, nb * BN), out_dtype),
+        scratch_shapes=[pltpu.VMEM((boh * wo, BN), jnp.float32)],
+        interpret=interpret_mode(),
+    )(x_p, wd, ds, db, wp, ps, pb)
+    return out[:, :ho, :, :cout]

@@ -25,15 +25,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import conv_out_size, interpret_mode, pad_to
+from repro.kernels.common import (
+    EPILOGUE_ACTS, conv_tile_plan, interpret_mode, pad_to,
+)
 
 BM, BN, BK = 128, 128, 128
 
-_ACTS = {
-    "none": lambda x: x,
-    "relu": lambda x: jnp.maximum(x, 0.0),
-    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
-}
+_ACTS = EPILOGUE_ACTS
 
 
 def _kernel(x_ref, w_ref, es_ref, eb_ref, o_ref, acc_ref, *,
@@ -82,19 +80,11 @@ def fused_conv_int8(x_int8, w_int8, eff_scale, eff_bias, *, stride=1,
     returned as (N, Ho, Wo, Cout) ``out_dtype``."""
     n, h, w_in, _ = x_int8.shape
     kh, kw, _, cout = w_int8.shape
-    ho = conv_out_size(h, kh, stride, padding)
-    wo = conv_out_size(w_in, kw, stride, padding)
-    if padding == "SAME":
-        top = max((ho - 1) * stride + kh - h, 0) // 2
-        left = max((wo - 1) * stride + kw - w_in, 0) // 2
-    else:
-        top = left = 0
-    boh = max(1, min(ho, BM // max(wo, 1)))  # output rows per M tile
-    ohb = -(-ho // boh)
+    ho, wo, boh, ohb, top, left, hp_req, wp_req = conv_tile_plan(
+        h, w_in, kh, kw, stride, padding, BM
+    )
     # pad so every (kh, kw, row-block) slice is in bounds; zero padding is
     # exact for symmetric int8 (zero-point 0)
-    hp_req = (ohb * boh - 1) * stride + kh
-    wp_req = (wo - 1) * stride + kw
     x_p = jnp.pad(x_int8, ((0, 0), (top, max(hp_req - h - top, 0)),
                            (left, max(wp_req - w_in - left, 0)), (0, 0)))
     x_p, _ = pad_to(x_p, 3, BK)

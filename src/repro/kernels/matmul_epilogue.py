@@ -27,7 +27,7 @@ _ACTS = {
 }
 
 
-def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, act):
+def _kernel(x_ref, w_ref, es_ref, eb_ref, o_ref, acc_ref, *, act):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -39,23 +39,37 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, act):
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _epilogue():
-        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        # bias + folded-BN affine pre-folded into one (scale, bias) pair
+        y = acc_ref[...] * es_ref[...] + eb_ref[...]
         o_ref[...] = _ACTS[act](y).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("act",))
-def matmul_epilogue(x, w, b=None, act="none"):
-    """x: (..., K); w: (K, N); b: (N,) or None -> act(x@w + b)."""
+def matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None):
+    """x: (..., K); w: (K, N); b/scale/shift: (N,) or None ->
+    ``act((x@w + b)*scale + shift)``.  The whole epilogue folds into one
+    per-column (scale, bias) pair — ``act(acc*scale + (b*scale + shift))``
+    — applied in-register (vector math only, so a folded batchnorm costs no
+    extra HBM traffic)."""
     orig_shape = x.shape
+    n_out = w.shape[1]
     x2 = x.reshape(-1, orig_shape[-1])
-    if b is None:
-        b = jnp.zeros((w.shape[1],), jnp.float32)
-    b = b.reshape(1, -1)
+    es = jnp.ones((n_out,), jnp.float32) if scale is None else scale.astype(jnp.float32)
+    eb = jnp.zeros((n_out,), jnp.float32) if b is None else b.astype(jnp.float32) * es
+    if shift is not None:
+        eb = eb + shift.astype(jnp.float32)
+    es, eb = es.reshape(1, -1), eb.reshape(1, -1)
+    if 0 in x2.shape or 0 in w.shape:
+        # degenerate GEMM (e.g. a 1x1 conv over an empty spatial grid):
+        # nothing to tile — the empty-safe jnp contraction is exact
+        y = x2.astype(jnp.float32) @ w.astype(jnp.float32) * es + eb
+        return _ACTS[act](y).astype(x.dtype).reshape(*orig_shape[:-1], n_out)
     x2, M = pad_to(x2, 0, BM)
     x2, _ = pad_to(x2, 1, BK)
     w, _ = pad_to(w, 0, BK)
     w, N = pad_to(w, 1, BN)
-    b, _ = pad_to(b, 1, BN)
+    es, _ = pad_to(es, 1, BN)
+    eb, _ = pad_to(eb, 1, BN)
     Mp, Kp = x2.shape
     Np = w.shape[1]
     out = pl.pallas_call(
@@ -65,10 +79,11 @@ def matmul_epilogue(x, w, b=None, act="none"):
             pl.BlockSpec((BM, BK), lambda m, n, k: (m, k)),
             pl.BlockSpec((BK, BN), lambda m, n, k: (k, n)),
             pl.BlockSpec((1, BN), lambda m, n, k: (0, n)),
+            pl.BlockSpec((1, BN), lambda m, n, k: (0, n)),
         ],
         out_specs=pl.BlockSpec((BM, BN), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
         interpret=interpret_mode(),
-    )(x2, w, b)
+    )(x2, w, es, eb)
     return out[:M, :N].reshape(*orig_shape[:-1], N)

@@ -18,6 +18,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import dispatch
+from repro.kernels import depthwise_conv as dw
 from repro.kernels import flash_attention as fa
 from repro.kernels import fused_conv as fc
 from repro.kernels import mac_matmul as mm
@@ -64,12 +65,8 @@ def _pallas_fused_conv(x, w, b=None, *, stride=1, padding="SAME", groups=1,
         )
     # dynamic per-tensor activation quant + per-output-channel weight quant
     # (paper: full int8 inference; dequant folds into the kernel epilogue)
-    xf = x.astype(jnp.float32)
-    xs = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-8) / 127.0
-    x_int8 = jnp.clip(jnp.round(xf / xs), -127, 127).astype(jnp.int8)
-    wf = w.astype(jnp.float32)
-    ws = jnp.maximum(jnp.max(jnp.abs(wf), axis=(0, 1, 2)), 1e-8) / 127.0
-    w_int8 = jnp.clip(jnp.round(wf / ws), -127, 127).astype(jnp.int8)
+    x_int8, xs = _quant_int8(x)
+    w_int8, ws = _quant_int8(w, axes=(0, 1, 2))
     cout = w.shape[-1]
     dq = xs * ws  # per-channel dequant, (Cout,)
     bias = jnp.zeros((cout,), jnp.float32) if b is None else b.astype(jnp.float32)
@@ -84,8 +81,105 @@ def _pallas_fused_conv(x, w, b=None, *, stride=1, padding="SAME", groups=1,
     return out.astype(x.dtype)
 
 
-def _pallas_matmul_epilogue(x, w, b=None, act="none"):
-    return me.matmul_epilogue(x, w, b, act=act)
+def _quant_int8(a, axes=None):
+    """Symmetric int8 quantization: (int8 values, f32 scale).  ``axes=None``
+    is per-tensor (activations); a reduction-axes tuple is per-channel
+    (weights)."""
+    af = a.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(af), axis=axes), 1e-8) / 127.0
+    return jnp.clip(jnp.round(af / s), -127, 127).astype(jnp.int8), s
+
+
+def _is_depthwise(x, w):
+    """True depthwise: HWIO weights (KH, KW, 1, C) over a (N, H, W, C) x —
+    channel multiplier 1 (grouped-but-not-depthwise stays on the baseline)."""
+    return (x.ndim == 4 and w.ndim == 4 and w.shape[2] == 1
+            and w.shape[3] == x.shape[-1])
+
+
+def _dw_degenerate(x, w, stride, padding):
+    return (conv_out_size(x.shape[1], w.shape[0], stride, padding) <= 0
+            or conv_out_size(x.shape[2], w.shape[1], stride, padding) <= 0)
+
+
+def _pallas_depthwise_conv(x, w, b=None, *, stride=1, padding="SAME",
+                           act="none", scale=None, shift=None):
+    """dw_mac: quantize to int8 on the fly, run the per-channel MAC kernel.
+
+    Non-depthwise weight shapes, exotic paddings, acts the epilogue doesn't
+    implement, and degenerate outputs fall back to the fused jnp oracle
+    (still one dispatch site; the cost model owns the perf delta).
+    """
+    if getattr(w, "ndim", 0) == 3:  # squeezed (KH, KW, C) tap stack — the
+        w = w[:, :, None, :]  # form the oracle accepts; normalize to HWIO
+    if (not _is_depthwise(x, w) or padding not in ("SAME", "VALID")
+            or act not in dw._ACTS or _dw_degenerate(x, w, stride, padding)):
+        groups = 1  # grouped-but-not-depthwise: infer groups from HWIO shape
+        if (x.ndim == 4 and getattr(w, "ndim", 0) == 4 and w.shape[2]
+                and x.shape[-1] % w.shape[2] == 0):
+            groups = x.shape[-1] // w.shape[2]
+        return ref.fused_conv_ref(
+            x, w, b, stride=stride, padding=padding, groups=groups, act=act,
+            scale=scale, shift=shift,
+        )
+    c = x.shape[-1]
+    x_int8, xs = _quant_int8(x)
+    w_int8, ws = _quant_int8(w[:, :, 0, :], axes=(0, 1))  # (KH, KW, C)
+    dq = xs * ws  # per-channel dequant, (C,)
+    bias = jnp.zeros((c,), jnp.float32) if b is None else b.astype(jnp.float32)
+    s = jnp.ones((c,), jnp.float32) if scale is None else scale.astype(jnp.float32)
+    t = jnp.zeros((c,), jnp.float32) if shift is None else shift.astype(jnp.float32)
+    # same epilogue fold as fused_conv: act(acc*(dq*s) + (bias*s + t))
+    out = dw.depthwise_conv_int8(
+        x_int8, w_int8, dq * s, bias * s + t, stride=stride, padding=padding,
+        act=act,
+    )
+    return out.astype(x.dtype)
+
+
+def _pallas_sep_block(x, w_dw, w_pw, *, stride=1, padding="SAME",
+                      dw_scale=None, dw_shift=None, dw_act="relu",
+                      pw_bias=None, pw_scale=None, pw_shift=None,
+                      pw_act="none"):
+    """sep_block: fused depthwise -> pointwise, one HBM write.
+
+    Guard failures (non-depthwise dw weights, non-1x1 pointwise, exotic
+    padding/acts, degenerate output) decompose into the two stage wrappers,
+    so the depthwise and pointwise kernels still run where they can.
+    """
+    pw_1x1 = (w_pw.ndim == 4 and w_pw.shape[0] == w_pw.shape[1] == 1
+              and w_pw.shape[2] == x.shape[-1])
+    if (not _is_depthwise(x, w_dw) or not pw_1x1
+            or padding not in ("SAME", "VALID")
+            or dw_act not in dw._ACTS or pw_act not in dw._ACTS
+            or _dw_degenerate(x, w_dw, stride, padding)):
+        y = _pallas_depthwise_conv(x, w_dw, None, stride=stride,
+                                   padding=padding, act=dw_act,
+                                   scale=dw_scale, shift=dw_shift)
+        return _pallas_fused_conv(y, w_pw, pw_bias, stride=1, padding="SAME",
+                                  groups=1, act=pw_act, scale=pw_scale,
+                                  shift=pw_shift)
+    c, cout = x.shape[-1], w_pw.shape[-1]
+    x_int8, xs = _quant_int8(x)
+    wd_int8, wds = _quant_int8(w_dw[:, :, 0, :], axes=(0, 1))
+    wp_int8, wps = _quant_int8(w_pw.reshape(c, cout), axes=(0,))
+    ds = jnp.ones((c,), jnp.float32) if dw_scale is None else dw_scale.astype(jnp.float32)
+    dt = jnp.zeros((c,), jnp.float32) if dw_shift is None else dw_shift.astype(jnp.float32)
+    pb = jnp.zeros((cout,), jnp.float32) if pw_bias is None else pw_bias.astype(jnp.float32)
+    ps = jnp.ones((cout,), jnp.float32) if pw_scale is None else pw_scale.astype(jnp.float32)
+    pt = jnp.zeros((cout,), jnp.float32) if pw_shift is None else pw_shift.astype(jnp.float32)
+    # dw epilogue fold: dw_act(acc_dw*(xs*wds*ds) + dt); the pointwise stage
+    # contracts that f32 tile against int8 weights, so its fold is
+    # pw_act(acc_pw*(wps*ps) + (pb*ps + pt))
+    out = dw.sep_block_int8(
+        x_int8, wd_int8, xs * wds * ds, dt, wp_int8, wps * ps, pb * ps + pt,
+        stride=stride, padding=padding, dw_act=dw_act, pw_act=pw_act,
+    )
+    return out.astype(x.dtype)
+
+
+def _pallas_matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None):
+    return me.matmul_epilogue(x, w, b, act=act, scale=scale, shift=shift)
 
 
 def _pallas_residual_rmsnorm(res, x, scale, eps=1e-6):
@@ -136,6 +230,10 @@ def register():
     dispatch.register_impl("mac_matmul_int8", "pallas", _pallas_mac_matmul_int8,
                            platforms=tpu)
     dispatch.register_impl("fused_conv", "pallas", _pallas_fused_conv,
+                           platforms=tpu)
+    dispatch.register_impl("depthwise_conv", "pallas",
+                           _pallas_depthwise_conv, platforms=tpu)
+    dispatch.register_impl("sep_block", "pallas", _pallas_sep_block,
                            platforms=tpu)
     dispatch.register_impl("matmul_epilogue", "pallas", _pallas_matmul_epilogue,
                            platforms=tpu)

@@ -23,12 +23,16 @@ def mac_matmul_int8_ref(x_int8, w_int8, scale, out_dtype=jnp.float32):
     return (acc.astype(jnp.float32) * scale.reshape(1, -1)).astype(out_dtype)
 
 
-def matmul_epilogue_ref(x, w, b=None, act="none"):
+def matmul_epilogue_ref(x, w, b=None, act="none", scale=None, shift=None):
     y = jnp.einsum(
         "...k,kn->...n", x.astype(jnp.float32), w.astype(jnp.float32)
     )
     if b is not None:
         y = y + b.astype(jnp.float32)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if shift is not None:
+        y = y + shift.astype(jnp.float32)
     return _ACTS[act](y).astype(x.dtype)
 
 
@@ -49,6 +53,29 @@ def fused_conv_ref(x, w, b=None, *, stride=1, padding="SAME", groups=1,
     if shift is not None:
         y = y + shift.astype(jnp.float32)
     return _ACTS[act](y).astype(x.dtype)
+
+
+def depthwise_conv_ref(x, w, b=None, *, stride=1, padding="SAME",
+                       act="none", scale=None, shift=None):
+    """Depthwise-conv oracle (groups == channels); w is (KH, KW, 1, C) HWIO
+    or the squeezed (KH, KW, C) tap stack the kernel takes."""
+    if w.ndim == 3:
+        w = w[:, :, None, :]
+    return fused_conv_ref(x, w, b, stride=stride, padding=padding,
+                          groups=x.shape[-1], act=act, scale=scale,
+                          shift=shift)
+
+
+def sep_block_ref(x, w_dw, w_pw, *, stride=1, padding="SAME", dw_scale=None,
+                  dw_shift=None, dw_act="relu", pw_bias=None, pw_scale=None,
+                  pw_shift=None, pw_act="none"):
+    """Separable-block oracle: depthwise (+epilogue) -> 1x1 pointwise
+    (+epilogue), the unfused two-pass form of sep_block_int8."""
+    y = depthwise_conv_ref(x, w_dw, None, stride=stride, padding=padding,
+                           act=dw_act, scale=dw_scale, shift=dw_shift)
+    return fused_conv_ref(y, w_pw, pw_bias, stride=1, padding="SAME",
+                          groups=1, act=pw_act, scale=pw_scale,
+                          shift=pw_shift)
 
 
 def residual_rmsnorm_ref(res, x, scale, eps=1e-6):

@@ -5,6 +5,9 @@ LeNet-5* follows Table 9 exactly; the other five follow the paper's setup:
 inference graphs with BN folded to affine scale/shift (post-training deploy).
 Convs and dense layers go through the dispatch patterns so the MARVEL flow
 (profile -> extensions -> rewrite) applies to them exactly as to the LMs.
+The mobile models emit their depthwise-separable blocks as single
+``sep_block`` sites (fusable dw->pw at v3+, stage-wise dw_mac/conv_mac
+below), and 1x1 stride-1 convs dispatch as matmul_epilogue GEMMs.
 """
 from __future__ import annotations
 
@@ -38,14 +41,33 @@ def _conv_ref(x, w, b, *, stride, padding, groups, act, scale=None,
     return ACTS[act](y)
 
 
+def _conv1x1_as_matmul(x, w, b, *, act, scale, shift):
+    """A 1x1 stride-1 conv IS a GEMM over pixels — dispatch it as one.
+
+    The (1, 1, Cin, Cout) kernel becomes a (Cin, Cout) matrix contracted
+    over the channel axis (``x @ w`` batches over N, H; the Pallas wrapper
+    flattens NHWC -> (N*H*W, Cin) internally), and the bias/BN epilogue
+    rides along in the pattern, so the site dispatches as matmul_epilogue
+    (fusedmac) instead of an im2col conv (DenseNet/ResNet bottlenecks,
+    MobileNetV2 expansions)."""
+    return dense(x, w.reshape(w.shape[2], w.shape[3]), b, act=act,
+                 scale=scale, shift=shift)
+
+
 def conv2d(x, w, b=None, *, stride=1, padding="SAME", groups=1, act="none",
            scale=None, shift=None):
     """Conv + bias + folded-BN affine + act: one conv_mac/fusedmac site.
 
     ``scale``/``shift`` carry the folded batchnorm so the whole post-conv
     epilogue sits *inside* the dispatch pattern and can fuse into the
-    fused_conv kernel (one HBM round-trip instead of four).
+    fused_conv kernel (one HBM round-trip instead of four).  1x1 stride-1
+    convs are rerouted to the matmul_epilogue pattern at trace time (see
+    :func:`_conv1x1_as_matmul`) — they are GEMMs, not convolutions.
     """
+    if (groups == 1 and x.ndim == 4 and stride == 1
+            and w.shape[0] == w.shape[1] == 1
+            and padding in ("SAME", "VALID")):
+        return _conv1x1_as_matmul(x, w, b, act=act, scale=scale, shift=shift)
     return dispatch.call(
         "fused_conv", _conv_ref, x, w, b,
         stride=stride, padding=padding, groups=groups, act=act,
@@ -53,15 +75,71 @@ def conv2d(x, w, b=None, *, stride=1, padding="SAME", groups=1, act="none",
     )
 
 
-def _dense_ref(x, w, b, *, act):
+def _depthwise_ref(x, w, b, *, stride, padding, act, scale=None, shift=None):
+    return _conv_ref(x, w, b, stride=stride, padding=padding,
+                     groups=x.shape[-1], act=act, scale=scale, shift=shift)
+
+
+def depthwise_conv2d(x, w, b=None, *, stride=1, padding="SAME", act="none",
+                     scale=None, shift=None):
+    """Depthwise conv (+ fused epilogue): one dw_mac site.
+
+    ``groups == channels`` is implied by the (KH, KW, 1, C) weight shape;
+    the per-channel (KH, KW) MAC is the loop form generic GEMM datapaths
+    cannot express, so it carries its own extension (``dw_mac``, v2+).
+    """
+    return dispatch.call(
+        "depthwise_conv", _depthwise_ref, x, w, b,
+        stride=stride, padding=padding, act=act, scale=scale, shift=shift,
+    )
+
+
+def _sep_block_ref(x, w_dw, w_pw, *, stride, padding, dw_scale, dw_shift,
+                   dw_act, pw_bias, pw_scale, pw_shift, pw_act):
+    # the unfused form decomposes into the two stage *patterns*, so below
+    # v3 the depthwise (v2+) and pointwise (v1+) kernels still apply and the
+    # only cost of not fusing is the HBM round-trip of the intermediate
+    y = depthwise_conv2d(x, w_dw, stride=stride, padding=padding, act=dw_act,
+                         scale=dw_scale, shift=dw_shift)
+    return dispatch.call(
+        "fused_conv", _conv_ref, y, w_pw, pw_bias, stride=1, padding="SAME",
+        groups=1, act=pw_act, scale=pw_scale, shift=pw_shift,
+    )
+
+
+def sep_block(x, w_dw, w_pw, *, stride=1, padding="SAME", dw_scale=None,
+              dw_shift=None, dw_act="relu", pw_bias=None, pw_scale=None,
+              pw_shift=None, pw_act="none"):
+    """Depthwise-separable block (dw 3x3 -> 1x1 pw) as ONE dispatch site.
+
+    At v3+ the fused sep_block kernel keeps the depthwise output in VMEM and
+    feeds the pointwise MXU contraction directly — the (N, Ho, Wo, C)
+    intermediate never touches HBM.  Below v3 the baseline decomposition in
+    :func:`_sep_block_ref` still dispatches each stage's own pattern.
+    """
+    return dispatch.call(
+        "sep_block", _sep_block_ref, x, w_dw, w_pw,
+        stride=stride, padding=padding, dw_scale=dw_scale, dw_shift=dw_shift,
+        dw_act=dw_act, pw_bias=pw_bias, pw_scale=pw_scale, pw_shift=pw_shift,
+        pw_act=pw_act,
+    )
+
+
+def _dense_ref(x, w, b, *, act, scale=None, shift=None):
     y = x @ w
     if b is not None:
         y = y + b
+    if scale is not None:
+        y = y * scale
+    if shift is not None:
+        y = y + shift
     return ACTS[act](y)
 
 
-def dense(x, w, b=None, *, act="none"):
-    return dispatch.call("matmul_epilogue", _dense_ref, x, w, b, act=act)
+def dense(x, w, b=None, *, act="none", scale=None, shift=None):
+    """GEMM + bias + optional folded-BN affine + act: one fusedmac site."""
+    return dispatch.call("matmul_epilogue", _dense_ref, x, w, b, act=act,
+                         scale=scale, shift=shift)
 
 
 def maxpool(x, k=2, stride=2):
@@ -159,12 +237,11 @@ def mobilenetv1_apply(p, x):
     x = conv2d(x, p["stem"]["w"], stride=2, scale=p["stem"]["bn"]["s"],
                shift=p["stem"]["bn"]["b"], act="relu")
     for blk, (stride, _) in zip(p["blocks"], _MBV1_CFG):
-        cin = blk["dw"]["w"].shape[-1]
-        x = conv2d(x, blk["dw"]["w"], stride=stride, groups=cin,
-                   scale=blk["dw"]["bn"]["s"], shift=blk["dw"]["bn"]["b"],
-                   act="relu")
-        x = conv2d(x, blk["pw"]["w"], scale=blk["pw"]["bn"]["s"],
-                   shift=blk["pw"]["bn"]["b"], act="relu")
+        x = sep_block(x, blk["dw"]["w"], blk["pw"]["w"], stride=stride,
+                      dw_scale=blk["dw"]["bn"]["s"],
+                      dw_shift=blk["dw"]["bn"]["b"], dw_act="relu",
+                      pw_scale=blk["pw"]["bn"]["s"],
+                      pw_shift=blk["pw"]["bn"]["b"], pw_act="relu")
     x = avgpool_global(x)
     return dense(x, p["head"]["w"], p["head"]["b"])
 
@@ -321,12 +398,11 @@ def mobilenetv2_apply(p, x):
         if expand != 1:
             y = conv2d(y, blk["ex"]["w"], scale=blk["ex"]["bn"]["s"],
                        shift=blk["ex"]["bn"]["b"], act="relu6")
-        mid = blk["dw"]["w"].shape[-1]
-        y = conv2d(y, blk["dw"]["w"], stride=stride, groups=mid,
-                   scale=blk["dw"]["bn"]["s"], shift=blk["dw"]["bn"]["b"],
-                   act="relu6")
-        y = conv2d(y, blk["pw"]["w"], scale=blk["pw"]["bn"]["s"],
-                   shift=blk["pw"]["bn"]["b"])
+        y = sep_block(y, blk["dw"]["w"], blk["pw"]["w"], stride=stride,
+                      dw_scale=blk["dw"]["bn"]["s"],
+                      dw_shift=blk["dw"]["bn"]["b"], dw_act="relu6",
+                      pw_scale=blk["pw"]["bn"]["s"],
+                      pw_shift=blk["pw"]["bn"]["b"], pw_act="none")
         if stride == 1 and res.shape == y.shape:
             y = y + res
         x = y

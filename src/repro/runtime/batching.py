@@ -141,6 +141,10 @@ class EngineMetrics:
     lanes_total: int = 0
     deadline_flushes: int = 0
     full_flushes: int = 0
+    # cross-thread compute->loop handoffs; the async engine resolves futures
+    # in batch, so this stays == batches (one handoff per flush), never
+    # == completed (one per request) — asserted by tests and bench_serving
+    loop_handoffs: int = 0
     _latencies_ms: deque = field(default_factory=lambda: deque(maxlen=4096))
 
     def observe_latency(self, ms: float) -> None:
@@ -174,6 +178,7 @@ class EngineMetrics:
             "batch_occupancy": occ,
             "deadline_flushes": self.deadline_flushes,
             "full_flushes": self.full_flushes,
+            "loop_handoffs": self.loop_handoffs,
             "p50_latency_ms": self.latency_ms(50),
             "p99_latency_ms": self.latency_ms(99),
         }

@@ -59,10 +59,15 @@ class _BucketedCompute:
         self.max_batch = self.buckets[-1]
 
     def warmup(self, in_shape: tuple[int, ...], dtype="float32") -> None:
-        """Pre-compile every batch bucket from shapes alone (no data)."""
+        """Pre-compile AND prime every batch bucket: build the AOT
+        executable from shapes alone, then run it once on zeros so the
+        first-execution costs (device placement, runtime spin-up) are paid
+        here, not by the first live request."""
         for b in self.buckets:
             spec = jax.ShapeDtypeStruct((b, *in_shape), np.dtype(dtype))
-            self.program.executable_for(spec)
+            exe = self.program.executable_for(spec)
+            jax.block_until_ready(exe(np.zeros((b, *in_shape),
+                                               np.dtype(dtype))))
 
     def classify(self, images: list[np.ndarray]
                  ) -> tuple[np.ndarray, np.ndarray]:
@@ -157,13 +162,17 @@ class CnnBatchEngine:
 class AsyncCnnEngine:
     """The async serving tier: request plane decoupled from compute plane.
 
-    ``submit()`` applies admission control (bounded queue -> fast
-    :class:`AdmissionError`, never unbounded memory), a background batcher
-    coalesces requests into pow-2 buckets — flushing on a full bucket or on
-    the coalesce deadline, whichever first — and one compute thread runs the
-    blocking jax dispatch so the event loop never stalls.  Each request's
-    future resolves, in submission order within its batch, to the finished
-    :class:`CnnRequest`.
+    ``submit()`` applies admission control (bounded over queued + in-flight
+    requests -> fast :class:`AdmissionError`, never unbounded memory), a
+    background batcher coalesces requests into pow-2 buckets — flushing on a
+    full bucket or on the coalesce deadline, whichever first — and one
+    compute thread runs the blocking jax dispatch so the event loop never
+    stalls.  The batcher never awaits compute: it hands each batch to the
+    compute thread and keeps coalescing, so coalescing and jax dispatch
+    pipeline.  The compute thread hands a *finished batch* back to the event
+    loop with ONE ``call_soon_threadsafe`` per flush, where every future in
+    the batch resolves, in submission order, to its :class:`CnnRequest` —
+    batch-granular resolution, not per-request loop round-trips.
     """
 
     def __init__(self, program, max_batch: int = 8,
@@ -177,6 +186,10 @@ class AsyncCnnEngine:
         self._queue: asyncio.Queue | None = None
         self._batcher: asyncio.Task | None = None
         self._pool: concurrent.futures.ThreadPoolExecutor | None = None
+        self._inflight: set = set()  # executor futures of dispatched batches
+        # admitted requests whose future has not resolved yet — queued,
+        # held in the batcher's coalescing batch, or in the compute thread
+        self._live_reqs = 0
         self._uid = 0
 
     # -- lifecycle ----------------------------------------------------------
@@ -228,7 +241,11 @@ class AsyncCnnEngine:
                 "`await engine.start()`"
             )
         try:
-            batching.admit_or_raise(self.pending, self.max_pending)
+            # every admitted-but-unresolved request counts — queued,
+            # coalescing, or in the compute thread — so the bound holds end
+            # to end even though the batcher pipelines batches instead of
+            # awaiting each one
+            batching.admit_or_raise(self._live_reqs, self.max_pending)
         except AdmissionError:
             self._metrics.rejected += 1
             raise
@@ -241,6 +258,7 @@ class AsyncCnnEngine:
         t0 = loop.time()
         deadline = None if deadline_ms is None else t0 + deadline_ms / 1e3
         self._queue.put_nowait((req, fut, t0, deadline))
+        self._live_reqs += 1
         self._metrics.submitted += 1
         return fut
 
@@ -266,20 +284,25 @@ class AsyncCnnEngine:
         while not closing:
             item = await queue.get()
             if item is None:
-                return
+                break
             batch = [item]
             flush_at = loop.time() + self.max_delay_ms / 1e3
             if item[3] is not None:  # per-request deadline caps the window
                 flush_at = min(flush_at, item[3])
             deadline_flush = True
             while len(batch) < self.compute.max_batch:
-                timeout = flush_at - loop.time()
-                if timeout <= 0:
-                    break
                 try:
-                    nxt = await asyncio.wait_for(queue.get(), timeout)
-                except asyncio.TimeoutError:
-                    break
+                    # fast drain: everything already enqueued coalesces
+                    # without timer churn (no wait_for per request)
+                    nxt = queue.get_nowait()
+                except asyncio.QueueEmpty:
+                    timeout = flush_at - loop.time()
+                    if timeout <= 0:
+                        break
+                    try:
+                        nxt = await asyncio.wait_for(queue.get(), timeout)
+                    except asyncio.TimeoutError:
+                        break
                 if nxt is None:
                     closing = True
                     deadline_flush = False  # shutdown, not a window expiry
@@ -289,22 +312,48 @@ class AsyncCnnEngine:
                     flush_at = min(flush_at, nxt[3])
             else:
                 deadline_flush = False  # bucket filled before the deadline
-            await self._flush(loop, batch, deadline_flush)
+            self._dispatch(loop, batch, deadline_flush)
+        # the sentinel only stops coalescing; every dispatched batch must
+        # still resolve before stop() returns
+        while self._inflight:
+            await asyncio.gather(*list(self._inflight))
 
-    async def _flush(self, loop, batch, deadline_flush: bool) -> None:
-        reqs = [b[0] for b in batch]
-        images = [r.image for r in reqs]
-        try:
-            labels, probs = await loop.run_in_executor(
-                self._pool, self.compute.classify, images
+    def _dispatch(self, loop, batch, deadline_flush: bool) -> None:
+        """Hand one coalesced batch to the compute thread and return
+        immediately (the batcher keeps coalescing while compute runs)."""
+        images = [b[0].image for b in batch]
+
+        def compute_then_resolve():
+            # compute thread: the blocking jax dispatch, then ONE
+            # call_soon_threadsafe hands the finished batch to the loop
+            try:
+                result, err = self.compute.classify(images), None
+            except Exception as e:
+                result, err = None, e
+            loop.call_soon_threadsafe(
+                self._resolve_batch, loop, batch, result, err, deadline_flush
             )
-        except Exception as e:
+
+        fut = loop.run_in_executor(self._pool, compute_then_resolve)
+        self._inflight.add(fut)
+        fut.add_done_callback(self._inflight.discard)
+
+    def _resolve_batch(self, loop, batch, result, err,
+                       deadline_flush: bool) -> None:
+        """Event-loop callback: resolve a whole batch's futures (submission
+        order within the batch) and record its metrics."""
+        self._live_reqs -= len(batch)
+        if err is not None:
             for _, fut, _, _ in batch:
                 if not fut.done():
-                    fut.set_exception(e)
+                    fut.set_exception(err)
             return
-        bucket = batching.bucket_for(self.compute.buckets, len(reqs))
-        self._metrics.observe_batch(len(reqs), bucket,
+        labels, probs = result
+        # counted with observe_batch (not on the error path) so the
+        # structural invariant loop_handoffs == batches stays exact
+        self._metrics.loop_handoffs += 1
+        bucket = batching.bucket_for(self.compute.buckets, len(batch))
+        self._metrics.observe_batch(len(batch), bucket,
                                     deadline=deadline_flush)
         now = loop.time()
         for i, (req, fut, t0, _) in enumerate(batch):
@@ -314,7 +363,7 @@ class AsyncCnnEngine:
             req.latency_ms = (now - t0) * 1e3
             self._metrics.completed += 1
             self._metrics.observe_latency(req.latency_ms)
-            if not fut.done():  # resolved in submission order within batch
+            if not fut.done():
                 fut.set_result(req)
 
     # -- observability ------------------------------------------------------

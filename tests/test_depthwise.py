@@ -1,0 +1,356 @@
+"""depthwise_conv + sep_block kernels and the dw_mac extension wiring.
+
+The same three validation layers as test_fused_conv: (1) the int8 kernels vs
+exact quantized oracles (same int math through the float fused reference)
+across strides/paddings/acts/channel counts including non-multiples of the
+128-lane block; (2) fallback guards — non-depthwise weights, exotic padding,
+degenerate outputs — stay exact vs the jnp baseline; (3) dispatch coverage:
+at v2+ the mobile CNNs emit ZERO ``groups != 1`` baseline convs (the
+acceptance criterion this PR closes), and at v3+ their separable blocks run
+as one fused sep_block call; plus the profiler/cost-model depthwise
+accounting that moves the cycle ladders.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel, profiler
+from repro.core.extensions import (
+    EXTENSIONS, LEVEL_EXTENSIONS, extension_context, patterns_for_level,
+)
+from repro.kernels import depthwise_conv as dwk
+from repro.kernels import fused_conv as fc
+from repro.kernels import ops, ref
+from repro.models import cnn
+
+
+def _quant(a, axes):
+    s = jnp.maximum(jnp.max(jnp.abs(a.astype(jnp.float32)), axis=axes),
+                    1e-8) / 127.0
+    return jnp.clip(jnp.round(a / s), -127, 127) * s
+
+
+def _dw_case(seed, h, w_sp, c):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (2, h, w_sp, c), jnp.float32)
+    w = jax.random.normal(ks[1], (3, 3, 1, c), jnp.float32) / 3.0
+    b = jax.random.normal(ks[2], (c,)) * 0.1
+    s = 0.5 + jax.random.uniform(ks[3], (c,))
+    t = jax.random.normal(ks[4], (c,)) * 0.1
+    return x, w, b, s, t
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("act", ["none", "relu", "relu6"])
+def test_depthwise_conv_vs_quant_oracle(stride, padding, act):
+    # odd spatial and channel sizes exercise padding correctness
+    x, w, b, s, t = _dw_case(stride + len(padding), 13, 11, 5)
+    out = ops._pallas_depthwise_conv(x, w, b, stride=stride, padding=padding,
+                                     act=act, scale=s, shift=t)
+    want = ref.depthwise_conv_ref(
+        _quant(x, None), _quant(w, (0, 1, 2)), b,
+        stride=stride, padding=padding, act=act, scale=s, shift=t,
+    )
+    assert out.shape == want.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("c", [3, 128, 130])  # below/at/above the lane block
+def test_depthwise_conv_channel_tiling(c):
+    x, w, b, s, t = _dw_case(c, 10, 9, c)
+    out = ops._pallas_depthwise_conv(x, w, b, stride=2, padding="SAME",
+                                     act="relu", scale=s, shift=t)
+    want = ref.depthwise_conv_ref(
+        _quant(x, None), _quant(w, (0, 1, 2)), b,
+        stride=2, padding="SAME", act="relu", scale=s, shift=t,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def _sep_case(seed, h, w_sp, c, cout):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    x = jax.random.normal(ks[0], (2, h, w_sp, c), jnp.float32)
+    wd = jax.random.normal(ks[1], (3, 3, 1, c), jnp.float32) / 3.0
+    wp = jax.random.normal(ks[2], (1, 1, c, cout), jnp.float32) / np.sqrt(c)
+    ds = 0.5 + jax.random.uniform(ks[3], (c,))
+    dt = jax.random.normal(ks[4], (c,)) * 0.1
+    ps = 0.5 + jax.random.uniform(ks[5], (cout,))
+    pt = jax.random.normal(ks[6], (cout,)) * 0.1
+    return x, wd, wp, ds, dt, ps, pt
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("dw_act,pw_act", [("relu", "relu"),
+                                           ("relu6", "none")])
+def test_sep_block_vs_quant_oracle(stride, dw_act, pw_act):
+    x, wd, wp, ds, dt, ps, pt = _sep_case(stride, 13, 11, 5, 9)
+    out = ops._pallas_sep_block(x, wd, wp, stride=stride, dw_scale=ds,
+                                dw_shift=dt, dw_act=dw_act, pw_scale=ps,
+                                pw_shift=pt, pw_act=pw_act)
+    want = ref.sep_block_ref(
+        _quant(x, None), _quant(wd, (0, 1, 2)), _quant(wp, (0, 1, 2)),
+        stride=stride, dw_scale=ds, dw_shift=dt, dw_act=dw_act,
+        pw_scale=ps, pw_shift=pt, pw_act=pw_act,
+    )
+    assert out.shape == want.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sep_block_multi_tile_channels():
+    """Cin and Cout both above the 128 block: multi-step cin contraction
+    carrying the f32 accumulator, multi-block cout epilogue."""
+    x, wd, wp, ds, dt, ps, pt = _sep_case(9, 8, 9, 130, 140)
+    out = ops._pallas_sep_block(x, wd, wp, stride=2, dw_scale=ds,
+                                dw_shift=dt, dw_act="relu6", pw_scale=ps,
+                                pw_shift=pt, pw_act="none")
+    want = ref.sep_block_ref(
+        _quant(x, None), _quant(wd, (0, 1, 2)), _quant(wp, (0, 1, 2)),
+        stride=2, dw_scale=ds, dw_shift=dt, dw_act="relu6",
+        pw_scale=ps, pw_shift=pt, pw_act="none",
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# fallback guards
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_but_not_depthwise_falls_back_exact():
+    """groups=4 over 8 channels is NOT depthwise (channel multiplier 2 per
+    group): the wrapper must take the jnp reference, exactly."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(ks[0], (1, 10, 10, 8), jnp.float32)
+    w = jax.random.normal(ks[1], (3, 3, 2, 8), jnp.float32)
+    out = ops._pallas_depthwise_conv(x, w, None, stride=1, padding="SAME",
+                                     act="relu")
+    want = ref.fused_conv_ref(x, w, None, stride=1, padding="SAME",
+                              groups=4, act="relu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_depthwise_exotic_padding_falls_back_exact():
+    x, w, _, _, _ = _dw_case(3, 9, 9, 6)
+    pad = ((2, 1), (0, 3))
+    out = ops._pallas_depthwise_conv(x, w, None, stride=1, padding=pad,
+                                     act="none")
+    want = ref.depthwise_conv_ref(x, w, None, stride=1, padding=pad,
+                                  act="none")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_depthwise_wrapper_accepts_squeezed_taps():
+    """The (KH, KW, C) form the ref oracle accepts must work on the pallas
+    wrapper too (normalized to HWIO, same result as the 4D form)."""
+    x, w, b, s, t = _dw_case(2, 9, 9, 5)
+    out4 = ops._pallas_depthwise_conv(x, w, b, stride=1, padding="SAME",
+                                      act="relu", scale=s, shift=t)
+    out3 = ops._pallas_depthwise_conv(x, w[:, :, 0, :], b, stride=1,
+                                      padding="SAME", act="relu", scale=s,
+                                      shift=t)
+    np.testing.assert_array_equal(np.asarray(out4), np.asarray(out3))
+
+
+def test_depthwise_degenerate_valid_empty_output():
+    x = jnp.ones((1, 2, 2, 4))
+    w = jnp.ones((3, 3, 1, 4))
+    out = ops._pallas_depthwise_conv(x, w, None, stride=1, padding="VALID",
+                                     act="none")
+    assert out.shape == (1, 0, 0, 4)
+
+
+def test_sep_block_guard_decomposes_but_keeps_kernels(monkeypatch):
+    """A sep site the fused kernel can't take (exotic padding) decomposes —
+    and the stage kernels still run, not the baseline."""
+    x, wd, wp, ds, dt, ps, pt = _sep_case(5, 9, 9, 6, 10)
+    pad = ((1, 1), (1, 1))
+    called = []
+    real = dwk.depthwise_conv_int8
+    monkeypatch.setattr(dwk, "depthwise_conv_int8",
+                        lambda *a, **k: called.append(1) or real(*a, **k))
+    out = ops._pallas_sep_block(x, wd, wp, stride=1, padding=pad,
+                                dw_scale=ds, dw_shift=dt, dw_act="relu",
+                                pw_scale=ps, pw_shift=pt, pw_act="none")
+    # ((1,1),(1,1)) falls back at the sep level AND the dw level (tuple
+    # padding) — dw ref; but a SAME-equivalent guard failure on the pw
+    # side must still run the dw kernel:
+    assert not called  # exotic padding: dw wrapper also declined
+    want = ref.sep_block_ref(x, wd, wp, stride=1, padding=pad, dw_scale=ds,
+                             dw_shift=dt, dw_act="relu", pw_scale=ps,
+                             pw_shift=pt, pw_act="none")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_sep_block_non_1x1_pointwise_uses_stage_kernels(monkeypatch):
+    """3x3 'pointwise' weights can't fuse: the dw stage must still hit the
+    depthwise kernel and the pw stage the fused_conv kernel."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], (1, 9, 9, 6), jnp.float32)
+    wd = jax.random.normal(ks[1], (3, 3, 1, 6), jnp.float32) / 3.0
+    wp = jax.random.normal(ks[2], (3, 3, 6, 10), jnp.float32) / 7.0
+    dw_calls, pw_calls = [], []
+    real_dw, real_fc = dwk.depthwise_conv_int8, fc.fused_conv_int8
+    monkeypatch.setattr(dwk, "depthwise_conv_int8",
+                        lambda *a, **k: dw_calls.append(1) or real_dw(*a, **k))
+    monkeypatch.setattr(fc, "fused_conv_int8",
+                        lambda *a, **k: pw_calls.append(1) or real_fc(*a, **k))
+    ops._pallas_sep_block(x, wd, wp, stride=1, dw_act="relu", pw_act="none")
+    assert dw_calls and pw_calls
+
+
+# ---------------------------------------------------------------------------
+# dispatch coverage: the acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["mobilenetv1", "mobilenetv2"])
+def test_mobile_cnns_zero_grouped_baseline_fallbacks_at_v2(name, monkeypatch):
+    """At v2 (dw_mac active, sep_block not yet): every depthwise site runs
+    the depthwise kernel and every pointwise site the fused_conv kernel —
+    zero ``groups != 1`` convs reach the jnp baseline."""
+    init, apply, in_shape = cnn.get_cnn(name)
+    p = init(jax.random.PRNGKey(0))
+    x = jnp.zeros((1, *in_shape))
+    sites = profiler.profile_fn(lambda x: apply(p, x), x).site_counts
+    assert sites["depthwise_conv"] == sites["sep_block"] > 0
+    dw_calls, grouped_ref = [], []
+    real_dw = dwk.depthwise_conv_int8
+    monkeypatch.setattr(dwk, "depthwise_conv_int8",
+                        lambda *a, **k: dw_calls.append(1) or real_dw(*a, **k))
+    real_ref = ref.fused_conv_ref
+    monkeypatch.setattr(
+        ref, "fused_conv_ref",
+        lambda *a, **k: (grouped_ref.append(1) if k.get("groups", 1) != 1
+                         else None) or real_ref(*a, **k),
+    )
+    with extension_context("v2", backend="pallas"):
+        jax.eval_shape(lambda x: apply(p, x), x)
+    assert len(dw_calls) == sites["depthwise_conv"]
+    assert not grouped_ref  # the acceptance criterion
+
+
+@pytest.mark.parametrize("name", ["mobilenetv1", "mobilenetv2"])
+def test_mobile_cnns_fuse_sep_blocks_at_v4(name, monkeypatch):
+    """At v4 every separable block is ONE fused sep_block call: the dw
+    kernel is absorbed (zero standalone calls) and fused_conv only serves
+    the non-separable sites (the stem)."""
+    init, apply, in_shape = cnn.get_cnn(name)
+    p = init(jax.random.PRNGKey(0))
+    x = jnp.zeros((1, *in_shape))
+    sites = profiler.profile_fn(lambda x: apply(p, x), x).site_counts
+    sep_calls, dw_calls = [], []
+    real_sep = dwk.sep_block_int8
+    monkeypatch.setattr(dwk, "sep_block_int8",
+                        lambda *a, **k: sep_calls.append(1) or real_sep(*a, **k))
+    real_dw = dwk.depthwise_conv_int8
+    monkeypatch.setattr(dwk, "depthwise_conv_int8",
+                        lambda *a, **k: dw_calls.append(1) or real_dw(*a, **k))
+    with extension_context("v4", backend="pallas"):
+        jax.eval_shape(lambda x: apply(p, x), x)
+    assert len(sep_calls) == sites["sep_block"] > 0
+    assert not dw_calls
+
+
+def test_mobilenetv1_e2e_v2_and_v4_pallas():
+    """Full model through the depthwise kernels stays within accumulated
+    int8 tolerance of the float baseline at both ladder rungs."""
+    init, apply, _ = cnn.get_cnn("mobilenetv1")
+    p = init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
+    base = apply(p, x)
+    for lvl in ("v2", "v4"):
+        with extension_context(lvl, backend="pallas"):
+            fused = apply(p, x)
+        rel = float(jnp.linalg.norm(fused - base) / jnp.linalg.norm(base))
+        assert np.isfinite(np.asarray(fused)).all()
+        assert rel < 0.2, (lvl, rel)
+
+
+# ---------------------------------------------------------------------------
+# extension registry + profiler/cost-model accounting
+# ---------------------------------------------------------------------------
+
+
+def test_dw_mac_extension_registered_and_class_aware():
+    assert EXTENSIONS["dw_mac"].patterns == ("depthwise_conv",)
+    assert EXTENSIONS["dw_mac"].applicable_classes == ("cnn",)
+    assert "sep_block" in EXTENSIONS["fusedmac"].patterns
+    assert "dw_mac" not in LEVEL_EXTENSIONS["v1"]
+    for lvl in ("v2", "v3", "v4"):
+        assert "depthwise_conv" in patterns_for_level(lvl)
+    assert "sep_block" in patterns_for_level("v3")
+    assert "sep_block" not in patterns_for_level("v2")
+    from repro.core.classes import recommend
+
+    init, apply, in_shape = cnn.get_cnn("mobilenetv1")
+    p = init(jax.random.PRNGKey(0))
+    prof = profiler.profile_fn(lambda x: apply(p, x),
+                               jnp.zeros((1, *in_shape)))
+    cls, exts = recommend(prof)
+    assert cls == "cnn" and "dw_mac" in exts
+    # ...but a CNN with no depthwise sites must NOT select it
+    init, apply, in_shape = cnn.get_cnn("vgg16")
+    p = init(jax.random.PRNGKey(0))
+    prof = profiler.profile_fn(lambda x: apply(p, x),
+                               jnp.zeros((1, *in_shape)))
+    _, exts = recommend(prof)
+    assert "dw_mac" not in exts
+
+
+def test_profiler_accounts_depthwise_bytes_and_flops():
+    init, apply, in_shape = cnn.get_cnn("mobilenetv2")
+    p = init(jax.random.PRNGKey(0))
+    prof = profiler.profile_fn(lambda x: apply(p, x),
+                               jnp.zeros((1, *in_shape)))
+    ins = prof.as_costmodel_inputs()
+    assert 0 < ins["dw_flops"] < ins["matmul_flops"]
+    assert ins["dw_epilogue_bytes"] > 0
+    assert ins["sep_intermediate_bytes"] > 0
+    # the ladder moves at each rung that gains a depthwise credit
+    v1 = costmodel.apply_level(ins, "v1")
+    v2 = costmodel.apply_level(ins, "v2")
+    v3 = costmodel.apply_level(ins, "v3")
+    assert v2["hbm_bytes"] < v1["hbm_bytes"]
+    assert v3["hbm_bytes"] < v2["hbm_bytes"]
+    assert v2["int8_fraction"] > v1["int8_fraction"]  # dw joins int8 at v2
+    # rv32: depthwise MACs gain their fused MAC at v2, not v1
+    r = [costmodel.rv32_cycles(ins, lvl) for lvl in costmodel.LEVELS]
+    assert all(a >= b for a, b in zip(r, r[1:]))
+    assert r[1] > costmodel.rv32_cycles(
+        {**ins, "dw_flops": 0.0}, "v1"
+    ) - 1e-6  # v1 pays for unfused dw MACs
+
+
+def test_sep_block_and_1x1_rerouting_profile_shape():
+    """MobileNetV1's profile: 13 sep sites, 13 nested dw + pw sites, one
+    stem fused_conv, and the head dense — the whole mobile topology is
+    pattern-covered."""
+    init, apply, in_shape = cnn.get_cnn("mobilenetv1")
+    p = init(jax.random.PRNGKey(0))
+    prof = profiler.profile_fn(lambda x: apply(p, x),
+                               jnp.zeros((1, *in_shape)))
+    assert prof.site_counts["sep_block"] == 13
+    assert prof.site_counts["depthwise_conv"] == 13
+    assert prof.site_counts["fused_conv"] == 14  # stem + 13 nested pw
+    assert prof.site_counts["matmul_epilogue"] == 1  # head
+    # DenseNet: every bottleneck 1x1 is a GEMM site now, not an im2col conv
+    init, apply, in_shape = cnn.get_cnn("densenet121")
+    p = init(jax.random.PRNGKey(0))
+    prof = profiler.profile_fn(lambda x: apply(p, x),
+                               jnp.zeros((1, *in_shape)))
+    assert prof.site_counts["matmul_epilogue"] == 58 + 3 + 1  # c1s+trans+head
+    assert prof.site_counts["fused_conv"] == 59  # stem + 58 3x3 c2s

@@ -197,6 +197,26 @@ def test_futures_resolve_in_submission_order(lenet_prog):
     assert order == list(range(6))  # one bucket -> submission order
 
 
+def test_futures_resolve_in_batch_one_handoff_per_flush(lenet_prog):
+    """The compute thread hands each FINISHED BATCH to the event loop with
+    one ``call_soon_threadsafe`` (loop_handoffs == batches), never one
+    round-trip per request — the small-model serving-overhead fix."""
+    prog, _, _, in_shape = lenet_prog
+
+    async def main():
+        async with prog.serve(mode="async", max_batch=4) as engine:
+            for _ in range(3):
+                await asyncio.gather(*[
+                    engine.submit(im) for im in _images(in_shape, 4)
+                ])
+            return engine.metrics()
+
+    m = asyncio.run(main())
+    assert m["completed"] == 12
+    assert m["loop_handoffs"] == m["batches"] == 3
+    assert m["loop_handoffs"] < m["completed"]
+
+
 def test_metrics_counters_are_monotone(lenet_prog):
     prog, _, _, in_shape = lenet_prog
     monotone = ("submitted", "completed", "batches", "cache_misses")
