@@ -43,6 +43,9 @@ def run() -> None:
             + f";conv_epilogue_bytes_saved={base['conv_epilogue_bytes']:.3e}"
             + f";dw_epilogue_bytes_saved={base['dw_epilogue_bytes']:.3e}"
             + f";dw_hbm_bytes_saved={base['sep_intermediate_bytes']:.3e}"
+            + f";acc_bytes_saved={base['acc_bytes_saved']:.3e}"
+            + f";pool_bytes_saved={base['pool_saved_bytes']:.3e}"
+            + f";pool_flops={base['pool_flops']:.3e}"
             + f";paper_band={in_band}"
         )
         emit(f"fig11_cycles/{name}", 0.0, derived)

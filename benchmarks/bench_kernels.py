@@ -102,3 +102,41 @@ def run() -> None:
         emit(f"kernel/sep_block_s{stride}_{h}x{ww}x{cin}x{cout}", us,
              f"arith_intensity={flops / nbytes:.1f};"
              f"dw_hbm_bytes_saved={saved:.3e}")
+
+    # acc_mac: the residual-add epilogue on the conv kernel — same GEMM, one
+    # extra VMEM read; acc_bytes_saved is the skip-tensor round-trip the
+    # fusion never issues (one f32 write + one read of the conv output)
+    ho = conv_out_size(h, k, 1, "SAME")
+    wo = conv_out_size(ww, k, 1, "SAME")
+    res = jax.random.normal(jax.random.PRNGKey(9), (n, ho, wo, cout),
+                            jnp.float32)
+    us = time_fn(
+        lambda a, b, r: fused_conv_int8(a, b, es, eb, r, stride=1,
+                                        padding="SAME", act="relu"),
+        xc, wc, res,
+    )
+    flops = 2 * n * ho * wo * cout * (k * k * cin)
+    nbytes = (n * h * ww * cin + k * k * cin * cout
+              + 4 * n * ho * wo * cout * 2)
+    emit(f"kernel/fused_conv_residual_{h}x{ww}x{cin}", us,
+         f"arith_intensity={flops / nbytes:.1f};"
+         f"acc_bytes_saved={2 * 4 * n * ho * wo * cout:.3e}")
+
+    # pool: windowed int8/fp32 reduce + in-register rescale (the pool
+    # extension); AI is intrinsically tiny — the win is one pass, one write
+    from repro.kernels.pooling import avgpool2d, global_avgpool, maxpool2d
+
+    xf = jax.random.normal(jax.random.PRNGKey(10), (n, h, ww, cin),
+                           jnp.float32)
+    for op, fn, kk in [("max", maxpool2d, 2), ("max", maxpool2d, 3),
+                       ("avg", avgpool2d, 2)]:
+        ho = conv_out_size(h, kk, 2, "VALID")
+        wo = conv_out_size(ww, kk, 2, "VALID")
+        us = time_fn(lambda a: fn(a, k=kk, stride=2), xf)
+        flops = n * ho * wo * cin * kk * kk
+        nbytes = 4 * (n * h * ww * cin + n * ho * wo * cin)
+        emit(f"kernel/pool_{op}{kk}_s2_{h}x{ww}x{cin}", us,
+             f"arith_intensity={flops / nbytes:.2f}")
+    us = time_fn(global_avgpool, xf)
+    emit(f"kernel/pool_global_avg_{h}x{ww}x{cin}", us,
+         f"arith_intensity={(n * h * ww * cin) / (4 * n * cin * (h * ww + 1)):.2f}")

@@ -20,11 +20,17 @@ KERNEL_VMEM = {
     "add2i": 2 * 256 * 4096 * 2,  # two row blocks (worst-case D=4096)
     # padded image slab + (KH,KW,BC) taps (int8) + int32 acc + epilogue vecs
     "dw_mac": 66 * 66 * 128 * 1 + 3 * 3 * 128 * 1 + 128 * 128 * 4 + 2 * 128 * 4,
+    # pool: padded image slab (f32 worst case) + the (boh*wo, BC) f32 reduce
+    # tile — no weights, no accumulator scratch
+    "pool": 66 * 66 * 128 * 4 + 128 * 128 * 4,
     # fusedmac also carries the sep_block datapath (padded image slab + dw
     # taps + pw weight tile + f32 acc) on top of the GEMM-epilogue tiles
     "fusedmac": (2 * 128 * 128 * 2 + 128 * 128 * 4
                  + 66 * 66 * 128 * 1 + 3 * 3 * 128 * 1
                  + 128 * 128 * 1 + 128 * 128 * 4),
+    # acc_mac: the residual tile of the conv/GEMM epilogue (one (BM, BN)
+    # f32 block riding the existing datapaths)
+    "acc_mac": 128 * 128 * 4,
     "zol": (128 * 128 + 2 * 128 * 128) * 2 + 128 * (128 + 2) * 4,  # flash tiles
 }
 

@@ -29,11 +29,18 @@ GATE_LOWER = re.compile(r"^(rv32|tpu)_v\d$")
 
 
 def load_rows(directory: str) -> dict[str, dict[str, float]]:
-    """All BENCH_*.json rows in ``directory``: name -> numeric metrics."""
+    """All BENCH_*.json rows in ``directory``: name -> numeric metrics.
+
+    Malformed rows (no ``name``) are warned about and skipped — a snapshot
+    edited by hand must degrade the diff, never KeyError the gate."""
     rows: dict[str, dict[str, float]] = {}
     for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
         with open(path) as f:
             for row in json.load(f):
+                if not isinstance(row, dict) or "name" not in row:
+                    print(f"warning: skipping malformed row in {path}: "
+                          f"{row!r}", file=sys.stderr)
+                    continue
                 rows[row["name"]] = parse_metrics(row)
     return rows
 
@@ -65,9 +72,16 @@ def gate_direction(row_name: str, key: str) -> int:
 
 
 def compare(baseline: dict, current: dict, tol: float
-            ) -> tuple[list[dict], list[str]]:
-    """Per-metric deltas for rows present in both, plus gated-but-missing."""
-    deltas, missing = [], []
+            ) -> tuple[list[dict], list[str], list[str]]:
+    """Per-metric deltas for rows present in both, plus gated-but-missing
+    baseline rows and brand-new gated current rows.
+
+    Both structural changes are *reported*, never a hard failure (the
+    baseline snapshot trails the code by one merge whenever a PR adds or
+    retires a benchmark): a vanished row fails only under ``--strict``; a
+    new row just has no trajectory yet — it starts gating once it lands in
+    the snapshot."""
+    deltas, missing, added = [], [], []
     for name, base_metrics in sorted(baseline.items()):
         cur_metrics = current.get(name)
         if cur_metrics is None:
@@ -88,7 +102,12 @@ def compare(baseline: dict, current: dict, tol: float
                 "current": cur, "delta": delta, "gated": direction != 0,
                 "regressed": regressed,
             })
-    return deltas, missing
+    for name, cur_metrics in sorted(current.items()):
+        if name not in baseline and any(
+            gate_direction(name, k) for k in cur_metrics
+        ):
+            added.append(name)
+    return deltas, missing, added
 
 
 def markdown_table(deltas: list[dict], tol: float) -> str:
@@ -125,18 +144,22 @@ def main(argv=None) -> int:
         print(f"no BENCH_*.json under {args.baseline}; nothing to gate")
         return 0
     current = load_rows(args.current)
-    deltas, missing = compare(baseline, current, args.tol)
+    deltas, missing, added = compare(baseline, current, args.tol)
     failures = [d for d in deltas if d["regressed"]]
 
     table = markdown_table(deltas, args.tol)
     n_gated = sum(d["gated"] for d in deltas)
     verdict = (
         f"bench-gate: {n_gated} gated metrics, {len(failures)} regression(s) "
-        f"beyond {args.tol:.0%}, {len(missing)} gated row(s) missing"
+        f"beyond {args.tol:.0%}, {len(missing)} gated row(s) missing, "
+        f"{len(added)} new gated row(s)"
     )
     summary = f"## Perf trajectory vs baseline\n\n{table}\n\n{verdict}\n"
     if missing:
         summary += "\nmissing gated rows: " + ", ".join(missing) + "\n"
+    if added:
+        summary += ("\nnew gated rows (no trajectory yet — refresh the "
+                    "baseline snapshot): " + ", ".join(added) + "\n")
     print(summary)
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if step_summary:

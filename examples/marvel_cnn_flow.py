@@ -10,6 +10,13 @@ path: each dw->pw block is one ``sep_block`` dispatch site, covered by the
 (depthwise intermediate never materialized in HBM) from v3 — watch their
 ``dw_epilogue_bytes``/``sep_intermediate`` rows move the cycle ladder.
 
+The residual class (ResNet50, DenseNet121) exercises the PR-5 additions:
+all pooling dispatches through ``pool`` sites (int8/fp32 Pallas kernels,
+pool extension v2+), and ResNet50's 16 bottleneck skip-adds ride the
+conv/GEMM epilogues as ``acc_mac`` pseudo-sites — the per-model line below
+the summary shows the ``acc_bytes_saved``/``pool`` accounting that moves
+their v2/v3 ladder rungs.
+
     PYTHONPATH=src python examples/marvel_cnn_flow.py [--models lenet5,...]
                                                       [--quantize] [--level v4]
 """
@@ -46,6 +53,12 @@ def main():
         print(f"\n=== {name} ({q}baked artifact max|err| vs baseline "
               f"{err:.2e})")
         print(prog.summary())
+        ins = prog.report.profile.as_costmodel_inputs()
+        sites = prog.report.profile.site_counts
+        print(f"pool sites: {sites['pool']} "
+              f"(saved {ins['pool_saved_bytes']:.3e} B at v2+), "
+              f"fused skip-adds: {sites['acc_mac']} "
+              f"(saved {ins['acc_bytes_saved']:.3e} B at v3+)")
 
 
 if __name__ == "__main__":

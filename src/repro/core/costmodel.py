@@ -77,12 +77,20 @@ def energy_j(cyc: float, chips: int = 1) -> float:
 #   the generic GEMM datapath cannot express the per-channel loop), and the
 #   dw kernel keeps the depthwise bias/BN/act chain in-register
 #   (dw_epilogue_bytes, same exact accounting as conv_epilogue_bytes)
+# v2 pool (int8/fp32 pooling unit): pooled activations move int8 instead of
+#   f32 and the avg rescale stays in-register (pool_saved_bytes); on rv32
+#   the fused windowed-reduce instruction halves the per-element issue
+#   slots (pool_flops)
 # v3 fusedmac (GEMM epilogue fusion): each site saves bias+act round-trip
 #   (2 x bytes of the GEMM output); fused_conv sites additionally keep the
 #   bias + folded-BN + act chain in-register (conv_epilogue_bytes: exact
 #   2 x 4 x out_elems per unfused epilogue eqn, accounted by the profiler);
 #   sep_block sites stop materializing the depthwise intermediate in HBM
 #   (sep_intermediate_bytes: one f32 write + one read per block)
+# v3 acc_mac (residual-accumulate epilogue): each skip connection stops
+#   round-tripping the conv/GEMM output through HBM just to be added
+#   (acc_bytes_saved: one f32 write + one read per residual site); on rv32
+#   the standalone add's issue slots fold into the mac writeback (acc_flops)
 # v4 zol (grid pipelining / chunked streaming): removes per-iteration loop
 #   dispatch and avoids materializing S^2 attention scores in HBM.
 
@@ -94,7 +102,8 @@ def apply_level(profile: "dict", level: str) -> dict:
 
     profile keys: flops, matmul_flops, hbm_bytes, weight_bytes,
     residual_norm_bytes, epilogue_bytes, conv_epilogue_bytes, dw_flops,
-    dw_epilogue_bytes, sep_intermediate_bytes, attn_score_bytes, loop_iters.
+    dw_epilogue_bytes, sep_intermediate_bytes, acc_bytes_saved, acc_flops,
+    pool_flops, pool_saved_bytes, attn_score_bytes, loop_iters.
     (conv_flops is informational only, and dw_flops is a *subset* of
     matmul_flops used to stage the int8 rate — do not add either to a delta
     or conv flops would be double-counted.)
@@ -117,15 +126,19 @@ def apply_level(profile: "dict", level: str) -> dict:
     if idx >= 1:  # mac: int8 weights; depthwise MACs stay f32 until dw_mac
         out["hbm_bytes"] -= p.get("weight_bytes", 0.0) * 0.5
         out["int8_fraction"] = (mm_flops - dw_flops) / max(p["flops"], 1.0)
-    if idx >= 2:  # add2i: fused residual+rmsnorm; dw_mac: int8 depthwise
+    if idx >= 2:  # add2i: fused residual+rmsnorm; dw_mac: int8 depthwise;
+        # pool: int8 pooled activations + in-register avg rescale
         out["hbm_bytes"] -= p.get("residual_norm_bytes", 0.0)
         out["hbm_bytes"] -= p.get("dw_epilogue_bytes", 0.0)
+        out["hbm_bytes"] -= p.get("pool_saved_bytes", 0.0)
         out["int8_fraction"] = mm_flops / max(p["flops"], 1.0)
     if idx >= 3:  # fusedmac + conv_mac epilogue: bias/BN/act fusion;
-        # sep_block: the depthwise intermediate never touches HBM
+        # sep_block: the depthwise intermediate never touches HBM;
+        # acc_mac: skip-adds accumulate in-register
         out["hbm_bytes"] -= p.get("epilogue_bytes", 0.0)
         out["hbm_bytes"] -= p.get("conv_epilogue_bytes", 0.0)
         out["hbm_bytes"] -= p.get("sep_intermediate_bytes", 0.0)
+        out["hbm_bytes"] -= p.get("acc_bytes_saved", 0.0)
     if idx >= 4:  # zol: grid loops + streaming attention
         out["hbm_bytes"] -= p.get("attn_score_bytes", 0.0)
         out["loop_iters"] = p["loop_iters"] * 0.05  # grid seqencer handles rest
@@ -185,16 +198,25 @@ def rv32_cycles(profile_inputs: dict, level: str,
     Depthwise MACs (``dw_flops``) pick up the mac fusion one level later
     than dense MACs: the v1 ``mac`` instruction is the GEMM inner-product
     form, and the per-channel depthwise loop only gains its fused MAC when
-    ``dw_mac`` lands at v2.
+    ``dw_mac`` lands at v2.  Pool window ops (``pool_flops``, one
+    compare/add slot per window element at v0) halve when the fused
+    windowed-reduce instruction lands at v2; standalone skip-adds
+    (``acc_flops``, inside ``other_ops``) fold into the acc_mac writeback
+    at v3.
     """
+    idx = LEVELS.index(level)
     mm_flops = profile_inputs.get("matmul_flops", 0.0)
     dw_macs = min(profile_inputs.get("dw_flops", 0.0), mm_flops) / 2.0
     dense_macs = mm_flops / 2.0 - dw_macs
     other_ops = max(profile_inputs["flops"] - mm_flops, 0.0)
+    if idx >= 3:  # acc_mac: the skip-add rides the mac writeback slot
+        other_ops = max(other_ops - profile_inputs.get("acc_flops", 0.0), 0.0)
+    pool_ops = profile_inputs.get("pool_flops", 0.0) * (0.5 if idx >= 2
+                                                        else 1.0)
     dw_level = "v0" if level == "v1" else level
     return (dense_macs * rv32_cycles_per_mac(level, add2i_coverage)
             + dw_macs * rv32_cycles_per_mac(dw_level, add2i_coverage)
-            + other_ops)
+            + other_ops + pool_ops)
 
 
 def rv32_energy_j(cyc: float, level: str) -> float:

@@ -65,6 +65,16 @@ def registered(pattern: str) -> dict[str, Callable[..., Any]]:
     return dict(_REGISTRY.get(pattern, {}))
 
 
+def registered_patterns(impl_name: str | None = None) -> list[str]:
+    """Every pattern in the registry — optionally only those with an
+    ``impl_name`` backend (e.g. ``"pallas"``; conformance-suite
+    introspection)."""
+    return sorted(
+        p for p, impls in _REGISTRY.items()
+        if impl_name is None or impl_name in impls
+    )
+
+
 def registered_backends() -> set[str]:
     """Every impl name any pattern is registered under, plus the baselines."""
     names = set(BASELINE_IMPLS)

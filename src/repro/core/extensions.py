@@ -5,8 +5,10 @@ v1  + mac       (int8 MAC GEMM kernel — quantized multiply-accumulate)
     + conv_mac  (int8 implicit-GEMM conv — the conv form of mac+fusedmac)
 v2  + add2i     (fused residual-add + RMSNorm)
     + dw_mac    (per-channel int8 depthwise MAC — the mobile-CNN conv form)
+    + pool      (int8/fp32 windowed max/avg pool + global-avg, rescale fused)
 v3  + fusedmac  (GEMM + bias + activation epilogue fusion; also the fused
                  separable dw->pw block once both stages exist)
+    + acc_mac   (residual-add accumulate folded into the conv/GEMM epilogue)
 v4  + zol       (grid-pipelined streaming: flash attention / chunked scans)
 
 paper <-> repo mapping (v-level -> extension -> pattern -> pallas kernel);
@@ -21,8 +23,11 @@ in eager execution trace time and call time coincide, so every row is
   v1+    conv_mac   fused_conv              fused_conv.py (CNN only) trace
   v2+    add2i      residual_rmsnorm        residual_rmsnorm.py      trace
   v2+    dw_mac     depthwise_conv          depthwise_conv.py (CNN)  trace
+  v2+    pool       pool                    pooling.py (CNN only)    trace
   v3+    fusedmac   matmul_epilogue,        matmul_epilogue.py,      trace
                     sep_block               depthwise_conv.py (CNN)
+  v3+    acc_mac    (rides fused_conv /     fused_conv.py,           trace
+                    matmul_epilogue)        matmul_epilogue.py (CNN)
   v4     zol        flash_attention,        flash_attention.py,      trace
                     wkv_chunk, ssm_chunk    wkv_chunk.py
 
@@ -35,6 +40,16 @@ its depthwise form — a per-channel (KH, KW) MAC with no channel contraction
 for the mobile CNNs.  ``sep_block``, the fused depthwise->pointwise block
 whose intermediate never touches HBM, needs both stages' MACs plus the
 epilogue machinery, so it rides with ``fusedmac`` at v3+.
+
+``pool`` (v2+, cnn) is the windowed-reduce unit: int8/fp32 max/avg pooling
+with the ``1/k^2`` rescale fused in-register, plus the global-avg reduce —
+the op family the residual CNNs (ResNet50, DenseNet121) were still shipping
+to the XLA baseline.  ``acc_mac`` (v3+, cnn) maps no pattern of its own: it
+is the residual-add accumulate of the ``fused_conv``/``matmul_epilogue``
+epilogues (a skip connection added on the accumulator tile before the
+activation, so the conv/GEMM output never round-trips HBM just to be
+added); the profiler records its sites as ``acc_mac`` pseudo-sites and the
+cost model credits ``acc_bytes_saved`` from v3.
 
 Each extension names a dispatch *pattern* and the backends that implement it:
 ``ref`` (pure jnp, algorithmically fused — used on CPU and as oracle),
@@ -93,6 +108,20 @@ EXTENSIONS: dict[str, Extension] = {
             ("cnn",),
         ),
         Extension(
+            "pool",
+            ("pool",),
+            "int8/fp32 windowed max/avg pool + global-avg reduce, rescale "
+            "fused in-register",
+            ("cnn",),
+        ),
+        Extension(
+            "acc_mac",
+            (),  # rides the fused_conv / matmul_epilogue epilogues
+            "residual-add accumulate folded into the conv/GEMM epilogue "
+            "(skip connections without an HBM round-trip)",
+            ("cnn",),
+        ),
+        Extension(
             "fusedmac",
             ("matmul_epilogue", "sep_block"),
             "GEMM + bias + activation epilogue in one kernel; fused "
@@ -111,9 +140,11 @@ EXTENSIONS: dict[str, Extension] = {
 LEVEL_EXTENSIONS: dict[str, tuple[str, ...]] = {
     "v0": (),
     "v1": ("mac", "conv_mac"),
-    "v2": ("mac", "conv_mac", "add2i", "dw_mac"),
-    "v3": ("mac", "conv_mac", "add2i", "dw_mac", "fusedmac"),
-    "v4": ("mac", "conv_mac", "add2i", "dw_mac", "fusedmac", "zol"),
+    "v2": ("mac", "conv_mac", "add2i", "dw_mac", "pool"),
+    "v3": ("mac", "conv_mac", "add2i", "dw_mac", "pool", "fusedmac",
+           "acc_mac"),
+    "v4": ("mac", "conv_mac", "add2i", "dw_mac", "pool", "fusedmac",
+           "acc_mac", "zol"),
 }
 
 
@@ -195,9 +226,13 @@ def extensions_for_class(model_class: str, profile=None) -> list[str]:
         if model_class not in ext.applicable_classes:
             continue
         if profile is not None:
+            # a pattern-less extension (acc_mac) is hit via the pseudo-site
+            # the profiler records under the extension's own name
             hit = any(
                 profile.site_counts.get(p, 0) > 0 for p in ext.patterns
-            ) or (name == "mac" and profile.counts.get("mul(mac)", 0) > 0)
+            ) or profile.site_counts.get(name, 0) > 0 or (
+                name == "mac" and profile.counts.get("mul(mac)", 0) > 0
+            )
             if not hit:
                 continue
         out.append(name)

@@ -41,6 +41,27 @@ def _sink() -> list | None:
     return getattr(_tls, "sink", None)
 
 
+def _acc_mac_fusable(pattern, x, w, res, kwargs) -> bool:
+    """True iff this site's kernel would actually fuse the skip-add, so
+    fallback sites claim no acc_mac savings — delegating to the SAME
+    predicates the ops.py dispatch wrappers use (kernels/common.py), so the
+    credit mirror cannot drift from real dispatch."""
+    if not (hasattr(x, "shape") and hasattr(w, "shape")
+            and hasattr(res, "shape")):
+        return False
+    from repro.kernels.common import (
+        conv_residual_fusable, gemm_residual_fusable,
+    )
+
+    if pattern == "matmul_epilogue":
+        return gemm_residual_fusable(x, w, res)
+    return conv_residual_fusable(
+        x, w, res, stride=kwargs.get("stride", 1),
+        padding=kwargs.get("padding", "SAME"),
+        groups=kwargs.get("groups", 1), act=kwargs.get("act", "none"),
+    )
+
+
 @contextlib.contextmanager
 def _recording(sink: list):
     _tls.sink = sink
@@ -49,12 +70,33 @@ def _recording(sink: list):
     def recording_call(pattern, baseline, *args, **kwargs):
         s = _sink()
         if s is not None:
+            # the residual operand is an *accumulator* input (acc_mac), not
+            # epilogue payload — keep it out of the generic site bytes so
+            # the matmul epilogue_bytes heuristic stays comparable; its
+            # savings are recorded exactly below
+            kw_payload = {k: v for k, v in kwargs.items() if k != "residual"}
             nbytes = sum(
                 a.size * a.dtype.itemsize
-                for a in jax.tree_util.tree_leaves((args, kwargs))
+                for a in jax.tree_util.tree_leaves((args, kw_payload))
                 if hasattr(a, "size") and hasattr(a, "dtype")
             )
             s.append((pattern, int(nbytes)))
+            res = kwargs.get("residual")
+            if (pattern in ("fused_conv", "matmul_epilogue")
+                    and res is not None and hasattr(res, "size")
+                    and len(args) >= 2
+                    and _acc_mac_fusable(pattern, args[0], args[1], res,
+                                         kwargs)):
+                # acc_mac: the skip-add fused into the conv/GEMM epilogue.
+                # Unfused, the pre-add output round-trips HBM once (one f32
+                # write + one read) just to be added to the skip tensor; the
+                # fused epilogue adds it on the accumulator tile in-register.
+                # _acc_mac_fusable mirrors the ops.py wrapper guards, so a
+                # site that falls back to the jnp baseline claims no savings.
+                s.append(("acc_mac", int(2 * 4 * res.size)))
+                # the standalone add's issue slots (one add per element) the
+                # rv32 acc_mac writeback absorbs at v3+
+                s.append(("acc_flops", int(res.size)))
             if pattern == "fused_conv" and len(args) >= 2:
                 # what an UNFUSED (v0) conv epilogue round-trips through HBM:
                 # each post-op eqn (bias add, scale mul, shift add, act —
@@ -85,10 +127,11 @@ def _recording(sink: list):
                     if ho > 0 and wo > 0:  # degenerate VALID: empty output
                         s.append(("conv_epilogue",
                                   int(2 * 4 * n * ho * wo * cout * n_post)))
-            # acts the dw/sep kernel epilogues implement (depthwise_conv.
-            # _ACTS); sites outside this set fall back in ops.py and must
-            # not claim fusion savings
-            _dw_acts = ("none", "relu", "relu6")
+            # acts the dw/sep kernel epilogues implement; sites outside this
+            # set fall back in ops.py and must not claim fusion savings —
+            # referenced from the kernels' own registry so the mirror can't
+            # drift when a new epilogue act lands
+            from repro.kernels.common import EPILOGUE_ACTS as _dw_acts
             if pattern == "depthwise_conv" and len(args) >= 2:
                 # dw_mac sites: per-channel MAC flops (the mobile-CNN share
                 # of matmul_flops) + the epilogue round-trips the kernel
@@ -155,6 +198,43 @@ def _recording(sink: list):
                     if ho > 0 and wo > 0:
                         s.append(("sep_intermediate",
                                   int(2 * 4 * n * ho * wo * c)))
+            if pattern == "pool" and args and hasattr(args[0], "shape"):
+                # pool sites: windowed reduce flops (one compare/add per
+                # window element), the avg-rescale round-trip the kernel
+                # keeps in-register, and the f32 -> int8 traffic shrink of
+                # the int8 pooling unit — mirroring ops._pallas_pool's
+                # guards so fallback sites claim no savings
+                x = args[0]
+                op = kwargs.get("op")
+                k = kwargs.get("k", 2)
+                stride = kwargs.get("stride", 2)
+                if len(x.shape) == 4 and 0 not in x.shape:
+                    from repro.kernels import pooling as _pk
+                    from repro.kernels.common import conv_out_size
+
+                    n, h, w_in, c = x.shape
+                    if op == "global_avg":
+                        ho = wo = 1
+                        window = h * w_in
+                    else:
+                        ho = conv_out_size(h, k, stride, "VALID")
+                        wo = conv_out_size(w_in, k, stride, "VALID")
+                        window = k * k
+                    # the SAME predicate the dispatch wrapper uses — a
+                    # fallback site claims no pool savings
+                    supported = _pk.fast_path_supported(x, op=op, k=k,
+                                                        stride=stride)
+                    out_elems = n * ho * wo * c
+                    if ho > 0 and wo > 0 and supported:
+                        s.append(("pool_flops", int(out_elems * window)))
+                        if op in ("avg", "global_avg"):
+                            s.append(("pool_epilogue",
+                                      int(2 * 4 * out_elems)))
+                        if not jnp.issubdtype(x.dtype, jnp.integer):
+                            in_bytes = x.size * x.dtype.itemsize
+                            s.append(("pool_int8",
+                                      int(0.75 * (in_bytes
+                                                  + 4 * out_elems))))
             if pattern == "flash_attention" and len(args) >= 2:
                 # what a NON-streaming (v0) attention would spill to HBM:
                 # the Sq x Skv score matrix, written + read in f32
@@ -276,6 +356,17 @@ class PatternProfile:
             # the separable-block intermediate the fused sep kernel never
             # materializes in HBM (credited at v3+ with fusedmac)
             "sep_intermediate_bytes": float(self.site_bytes["sep_intermediate"]),
+            # acc_mac: the skip-add round-trip fused into conv/GEMM
+            # epilogues (credited at v3+), plus its standalone-add issue
+            # slots on the rv32 ladder
+            "acc_bytes_saved": float(self.site_bytes["acc_mac"]),
+            "acc_flops": float(self.site_bytes["acc_flops"]),
+            # pool: windowed-reduce work (one compare/add per window
+            # element — rv32 issue slots) and the bytes the int8 pooling
+            # unit keeps off HBM at v2+ (avg rescale + f32->int8 traffic)
+            "pool_flops": float(self.site_bytes["pool_flops"]),
+            "pool_saved_bytes": float(self.site_bytes["pool_epilogue"]
+                                      + self.site_bytes["pool_int8"]),
             "attn_score_bytes": float(self.site_bytes["attn_scores"]),
             "loop_iters": self.loop_iters,
         }

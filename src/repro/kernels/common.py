@@ -54,6 +54,57 @@ def conv_tile_plan(h: int, w_in: int, kh: int, kw: int, stride: int,
     return ho, wo, boh, ohb, top, left, hp_req, wp_req
 
 
+def conv_kernel_eligible(x, w, *, stride, padding, groups, act) -> bool:
+    """Would ops._pallas_fused_conv run the implicit-GEMM kernel on this
+    site (vs falling back to the jnp oracle)?  ONE predicate shared by the
+    dispatch wrapper and the profiler's credit mirrors, so they cannot
+    drift."""
+    if (groups != 1 or getattr(x, "ndim", len(getattr(x, "shape", ()))) != 4
+            or len(getattr(w, "shape", ())) != 4
+            or padding not in ("SAME", "VALID") or act not in EPILOGUE_ACTS):
+        return False
+    return (conv_out_size(x.shape[1], w.shape[0], stride, padding) > 0
+            and conv_out_size(x.shape[2], w.shape[1], stride, padding) > 0)
+
+
+def conv_residual_fusable(x, w, res, *, stride, padding, groups, act) -> bool:
+    """Is ``res`` an exactly-output-shaped skip tensor on a kernel-eligible
+    conv site (the acc_mac epilogue's contract)?"""
+    if not conv_kernel_eligible(x, w, stride=stride, padding=padding,
+                                groups=groups, act=act):
+        return False
+    return getattr(res, "shape", None) == (
+        x.shape[0],
+        conv_out_size(x.shape[1], w.shape[0], stride, padding),
+        conv_out_size(x.shape[2], w.shape[1], stride, padding),
+        w.shape[-1],
+    )
+
+
+def gemm_residual_fusable(x, w, res) -> bool:
+    """Is ``res`` an exactly-output-shaped skip tensor for the GEMM-epilogue
+    kernel (matmul_epilogue's acc_mac contract)?"""
+    return (len(getattr(w, "shape", ())) == 2
+            and getattr(res, "shape", None) == (*x.shape[:-1], w.shape[1]))
+
+
+def conv_tap(img, oh_block_id, kh, kw, *, stride, boh, wo):
+    """The (boh*wo, C) tile of tap (kh, kw) for one output-row block, carved
+    from a VMEM-resident padded (Hp, Wp, C) image — the shared implicit-
+    im2col slice of the depthwise and pooling kernels (fused_conv inlines
+    the same arithmetic with its channel-block contraction)."""
+    row0 = oh_block_id * (boh * stride) + kh
+    span_h = (boh - 1) * stride + 1
+    span_w = (wo - 1) * stride + 1
+    rows = jax.lax.dynamic_slice(
+        img, (row0, 0, 0), (span_h, img.shape[1], img.shape[2])
+    )[::stride]
+    patch = jax.lax.dynamic_slice(
+        rows, (0, kw, 0), (boh, span_w, img.shape[2])
+    )[:, ::stride]
+    return patch.reshape(boh * wo, img.shape[2])
+
+
 def pad_to(x: jax.Array, axis: int, multiple: int, value=0.0):
     size = x.shape[axis]
     pad = (-size) % multiple

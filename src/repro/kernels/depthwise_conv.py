@@ -37,27 +37,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import (
-    EPILOGUE_ACTS, conv_tile_plan, interpret_mode, pad_to,
+    EPILOGUE_ACTS, conv_tap, conv_tile_plan, interpret_mode, pad_to,
 )
 
 BM, BN, BC = 128, 128, 128
 
 _ACTS = EPILOGUE_ACTS
 
-
-def _dw_patch(img, oh_block_id, kh, kw, *, stride, boh, wo):
-    """The (boh*wo, BC) activation tile for tap (kh, kw) of this output-row
-    block, carved from the VMEM-resident padded image (implicit im2col)."""
-    row0 = oh_block_id * (boh * stride) + kh
-    span_h = (boh - 1) * stride + 1
-    span_w = (wo - 1) * stride + 1
-    rows = jax.lax.dynamic_slice(
-        img, (row0, 0, 0), (span_h, img.shape[1], img.shape[2])
-    )[::stride]
-    patch = jax.lax.dynamic_slice(
-        rows, (0, kw, 0), (boh, span_w, img.shape[2])
-    )[:, ::stride]
-    return patch.reshape(boh * wo, img.shape[2])
+# the shared implicit-im2col tap slice (also used by the pooling kernels)
+_dw_patch = conv_tap
 
 
 def _dw_kernel(x_ref, w_ref, es_ref, eb_ref, o_ref, acc_ref, *,

@@ -34,10 +34,14 @@ BM, BN, BK = 128, 128, 128
 _ACTS = EPILOGUE_ACTS
 
 
-def _kernel(x_ref, w_ref, es_ref, eb_ref, o_ref, acc_ref, *,
-            stride, boh, wo, act):
+def _kernel(x_ref, w_ref, es_ref, eb_ref, *refs,
+            stride, boh, wo, act, has_residual):
     # grid: (n, oh_block, cout_block, kh, kw, cin_block); contraction dims
     # (kh, kw, cin_block) are innermost so the accumulator carries across them
+    if has_residual:
+        r_ref, o_ref, acc_ref = refs
+    else:
+        (o_ref, acc_ref), r_ref = refs, None
     kh, kw, kc = pl.program_id(3), pl.program_id(4), pl.program_id(5)
 
     @pl.when((kh == 0) & (kw == 0) & (kc == 0))
@@ -66,18 +70,26 @@ def _kernel(x_ref, w_ref, es_ref, eb_ref, o_ref, acc_ref, *,
              & (kw == pl.num_programs(4) - 1)
              & (kc == pl.num_programs(5) - 1))
     def _epilogue():
-        # dequant + bias + folded-BN affine pre-folded into (es, eb)
+        # dequant + bias + folded-BN affine pre-folded into (es, eb); the
+        # acc_mac residual-add accumulates in-register before the activation
         y = acc_ref[...].astype(jnp.float32) * es_ref[...] + eb_ref[...]
+        if has_residual:
+            y = y + r_ref[0].reshape(y.shape).astype(jnp.float32)
         o_ref[0] = _ACTS[act](y).reshape(boh, wo, -1).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "act",
                                              "out_dtype"))
-def fused_conv_int8(x_int8, w_int8, eff_scale, eff_bias, *, stride=1,
-                    padding="SAME", act="none", out_dtype=jnp.float32):
+def fused_conv_int8(x_int8, w_int8, eff_scale, eff_bias, residual=None, *,
+                    stride=1, padding="SAME", act="none",
+                    out_dtype=jnp.float32):
     """x: (N, H, W, Cin) int8; w: (KH, KW, Cin, Cout) int8;
-    eff_scale/eff_bias: (Cout,) f32 -> act(acc*eff_scale + eff_bias),
-    returned as (N, Ho, Wo, Cout) ``out_dtype``."""
+    eff_scale/eff_bias: (Cout,) f32; residual: optional (N, Ho, Wo, Cout)
+    skip tensor -> act(acc*eff_scale + eff_bias [+ residual]), returned as
+    (N, Ho, Wo, Cout) ``out_dtype``.  The residual-add (the ``acc_mac``
+    extension) happens in-register on the accumulator tile, so the skip
+    connection costs one extra VMEM read instead of a full HBM round-trip
+    of the conv output."""
     n, h, w_in, _ = x_int8.shape
     kh, kw, _, cout = w_int8.shape
     ho, wo, boh, ohb, top, left, hp_req, wp_req = conv_tile_plan(
@@ -94,19 +106,32 @@ def fused_conv_int8(x_int8, w_int8, eff_scale, eff_bias, *, stride=1,
     eb, _ = pad_to(eff_bias.reshape(1, -1).astype(jnp.float32), 1, BN)
     _, hp, wp, cp = x_p.shape
     nb = w_p.shape[3] // BN
+    operands = [x_p, w_p, es, eb]
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, BK),
+                     lambda ni, oi, nbi, khi, kwi, kci: (ni, 0, 0, kci)),
+        pl.BlockSpec((1, 1, BK, BN),
+                     lambda ni, oi, nbi, khi, kwi, kci: (khi, kwi, kci, nbi)),
+        pl.BlockSpec((1, BN),
+                     lambda ni, oi, nbi, khi, kwi, kci: (0, nbi)),
+        pl.BlockSpec((1, BN),
+                     lambda ni, oi, nbi, khi, kwi, kci: (0, nbi)),
+    ]
+    if residual is not None:
+        # skip tensor tiled exactly like the output block
+        r_p = jnp.pad(residual.astype(jnp.float32),
+                      ((0, 0), (0, ohb * boh - ho), (0, 0), (0, 0)))
+        r_p, _ = pad_to(r_p, 3, BN)
+        operands.append(r_p)
+        in_specs.append(pl.BlockSpec(
+            (1, boh, wo, BN),
+            lambda ni, oi, nbi, khi, kwi, kci: (ni, oi, 0, nbi),
+        ))
     out = pl.pallas_call(
-        functools.partial(_kernel, stride=stride, boh=boh, wo=wo, act=act),
+        functools.partial(_kernel, stride=stride, boh=boh, wo=wo, act=act,
+                          has_residual=residual is not None),
         grid=(n, ohb, nb, kh, kw, cp // BK),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, BK),
-                         lambda ni, oi, nbi, khi, kwi, kci: (ni, 0, 0, kci)),
-            pl.BlockSpec((1, 1, BK, BN),
-                         lambda ni, oi, nbi, khi, kwi, kci: (khi, kwi, kci, nbi)),
-            pl.BlockSpec((1, BN),
-                         lambda ni, oi, nbi, khi, kwi, kci: (0, nbi)),
-            pl.BlockSpec((1, BN),
-                         lambda ni, oi, nbi, khi, kwi, kci: (0, nbi)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, boh, wo, BN),
             lambda ni, oi, nbi, khi, kwi, kci: (ni, oi, 0, nbi),
@@ -114,5 +139,5 @@ def fused_conv_int8(x_int8, w_int8, eff_scale, eff_bias, *, stride=1,
         out_shape=jax.ShapeDtypeStruct((n, ohb * boh, wo, nb * BN), out_dtype),
         scratch_shapes=[pltpu.VMEM((boh * wo, BN), jnp.int32)],
         interpret=interpret_mode(),
-    )(x_p, w_p, es, eb)
+    )(*operands)
     return out[:, :ho, :, :cout]

@@ -27,7 +27,12 @@ _ACTS = {
 }
 
 
-def _kernel(x_ref, w_ref, es_ref, eb_ref, o_ref, acc_ref, *, act):
+def _kernel(x_ref, w_ref, es_ref, eb_ref, *refs, act, has_residual):
+    if has_residual:
+        r_ref, o_ref, acc_ref = refs
+    else:
+        (o_ref, acc_ref), r_ref = refs, None
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -39,18 +44,24 @@ def _kernel(x_ref, w_ref, es_ref, eb_ref, o_ref, acc_ref, *, act):
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _epilogue():
-        # bias + folded-BN affine pre-folded into one (scale, bias) pair
+        # bias + folded-BN affine pre-folded into one (scale, bias) pair;
+        # the acc_mac residual-add accumulates in-register before the act
         y = acc_ref[...] * es_ref[...] + eb_ref[...]
+        if has_residual:
+            y = y + r_ref[...].astype(jnp.float32)
         o_ref[...] = _ACTS[act](y).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("act",))
-def matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None):
-    """x: (..., K); w: (K, N); b/scale/shift: (N,) or None ->
-    ``act((x@w + b)*scale + shift)``.  The whole epilogue folds into one
-    per-column (scale, bias) pair — ``act(acc*scale + (b*scale + shift))``
-    — applied in-register (vector math only, so a folded batchnorm costs no
-    extra HBM traffic)."""
+def matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None,
+                    residual=None):
+    """x: (..., K); w: (K, N); b/scale/shift: (N,) or None; residual:
+    optional (..., N) skip tensor ->
+    ``act((x@w + b)*scale + shift [+ residual])``.  The whole epilogue folds
+    into one per-column (scale, bias) pair — ``act(acc*scale + (b*scale +
+    shift))`` — applied in-register; the residual-add (the ``acc_mac``
+    extension) rides the same epilogue, so a skip connection costs one VMEM
+    read instead of an HBM round-trip of the GEMM output."""
     orig_shape = x.shape
     n_out = w.shape[1]
     x2 = x.reshape(-1, orig_shape[-1])
@@ -59,10 +70,13 @@ def matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None):
     if shift is not None:
         eb = eb + shift.astype(jnp.float32)
     es, eb = es.reshape(1, -1), eb.reshape(1, -1)
+    r2 = None if residual is None else residual.reshape(-1, n_out)
     if 0 in x2.shape or 0 in w.shape:
         # degenerate GEMM (e.g. a 1x1 conv over an empty spatial grid):
         # nothing to tile — the empty-safe jnp contraction is exact
         y = x2.astype(jnp.float32) @ w.astype(jnp.float32) * es + eb
+        if r2 is not None:
+            y = y + r2.astype(jnp.float32)
         return _ACTS[act](y).astype(x.dtype).reshape(*orig_shape[:-1], n_out)
     x2, M = pad_to(x2, 0, BM)
     x2, _ = pad_to(x2, 1, BK)
@@ -72,18 +86,25 @@ def matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None):
     eb, _ = pad_to(eb, 1, BN)
     Mp, Kp = x2.shape
     Np = w.shape[1]
+    operands = [x2, w, es, eb]
+    in_specs = [
+        pl.BlockSpec((BM, BK), lambda m, n, k: (m, k)),
+        pl.BlockSpec((BK, BN), lambda m, n, k: (k, n)),
+        pl.BlockSpec((1, BN), lambda m, n, k: (0, n)),
+        pl.BlockSpec((1, BN), lambda m, n, k: (0, n)),
+    ]
+    if r2 is not None:
+        r2, _ = pad_to(r2, 0, BM)
+        r2, _ = pad_to(r2, 1, BN)
+        operands.append(r2)
+        in_specs.append(pl.BlockSpec((BM, BN), lambda m, n, k: (m, n)))
     out = pl.pallas_call(
-        functools.partial(_kernel, act=act),
+        functools.partial(_kernel, act=act, has_residual=r2 is not None),
         grid=(Mp // BM, Np // BN, Kp // BK),
-        in_specs=[
-            pl.BlockSpec((BM, BK), lambda m, n, k: (m, k)),
-            pl.BlockSpec((BK, BN), lambda m, n, k: (k, n)),
-            pl.BlockSpec((1, BN), lambda m, n, k: (0, n)),
-            pl.BlockSpec((1, BN), lambda m, n, k: (0, n)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((BM, BN), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
         interpret=interpret_mode(),
-    )(x2, w, es, eb)
+    )(*operands)
     return out[:M, :N].reshape(*orig_shape[:-1], N)

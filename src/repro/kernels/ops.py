@@ -22,11 +22,15 @@ from repro.kernels import depthwise_conv as dw
 from repro.kernels import flash_attention as fa
 from repro.kernels import fused_conv as fc
 from repro.kernels import mac_matmul as mm
+from repro.kernels import pooling as pk
 from repro.kernels import ref
 from repro.kernels import matmul_epilogue as me
 from repro.kernels import residual_rmsnorm as rr
 from repro.kernels import wkv_chunk as wk
-from repro.kernels.common import conv_out_size, pad_to
+from repro.kernels.common import (
+    conv_kernel_eligible, conv_out_size, conv_residual_fusable,
+    gemm_residual_fusable, pad_to,
+)
 from repro.models.layers import _flash_attention_ref
 
 
@@ -45,23 +49,27 @@ def _pallas_mac_matmul_int8(x, quant):
 
 
 def _pallas_fused_conv(x, w, b=None, *, stride=1, padding="SAME", groups=1,
-                       act="none", scale=None, shift=None):
+                       act="none", scale=None, shift=None, residual=None):
     """conv_mac: quantize to int8 on the fly, run the implicit-GEMM kernel.
 
     Grouped/depthwise convs, exotic paddings, and acts the kernel epilogue
     doesn't implement fall back to the fused jnp oracle (still one dispatch
-    site; the cost model owns the perf delta).
+    site; the cost model owns the perf delta).  ``residual`` (the acc_mac
+    epilogue) must match the conv output shape or the site falls back too.
     """
-    degenerate = (
-        x.ndim == 4 and padding in ("SAME", "VALID")
-        and (conv_out_size(x.shape[1], w.shape[0], stride, padding) <= 0
-             or conv_out_size(x.shape[2], w.shape[1], stride, padding) <= 0)
-    )  # kernel larger than input: empty output, like the baseline
-    if (groups != 1 or x.ndim != 4 or padding not in ("SAME", "VALID")
-            or act not in fc._ACTS or degenerate):
+    # one shared predicate (kernels/common.py) decides kernel eligibility +
+    # residual fusability — the profiler's acc_mac credit mirrors the same
+    # functions, so dispatch and cost accounting cannot drift
+    eligible = conv_kernel_eligible(x, w, stride=stride, padding=padding,
+                                    groups=groups, act=act)
+    res_ok = residual is None or conv_residual_fusable(
+        x, w, residual, stride=stride, padding=padding, groups=groups,
+        act=act,
+    )
+    if not eligible or not res_ok:
         return ref.fused_conv_ref(
             x, w, b, stride=stride, padding=padding, groups=groups, act=act,
-            scale=scale, shift=shift,
+            scale=scale, shift=shift, residual=residual,
         )
     # dynamic per-tensor activation quant + per-output-channel weight quant
     # (paper: full int8 inference; dequant folds into the kernel epilogue)
@@ -73,9 +81,10 @@ def _pallas_fused_conv(x, w, b=None, *, stride=1, padding="SAME", groups=1,
     s = jnp.ones((cout,), jnp.float32) if scale is None else scale.astype(jnp.float32)
     t = jnp.zeros((cout,), jnp.float32) if shift is None else shift.astype(jnp.float32)
     # fold dequant + bias + BN affine into one in-register (scale, bias) pair:
-    #   act((acc*dq + bias)*s + t) = act(acc*(dq*s) + (bias*s + t))
+    #   act((acc*dq + bias)*s + t + res) = act(acc*(dq*s) + (bias*s + t) + res)
+    # (the residual rides unscaled — it is already in output units)
     out = fc.fused_conv_int8(
-        x_int8, w_int8, dq * s, bias * s + t,
+        x_int8, w_int8, dq * s, bias * s + t, residual,
         stride=stride, padding=padding, act=act,
     )
     return out.astype(x.dtype)
@@ -178,8 +187,31 @@ def _pallas_sep_block(x, w_dw, w_pw, *, stride=1, padding="SAME",
     return out.astype(x.dtype)
 
 
-def _pallas_matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None):
-    return me.matmul_epilogue(x, w, b, act=act, scale=scale, shift=shift)
+def _pallas_matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None,
+                            residual=None):
+    if residual is not None and not gemm_residual_fusable(x, w, residual):
+        # mis-shaped skip tensor: stay on the algorithmically-fused oracle
+        return ref.matmul_epilogue_ref(x, w, b, act=act, scale=scale,
+                                       shift=shift, residual=residual)
+    return me.matmul_epilogue(x, w, b, act=act, scale=scale, shift=shift,
+                              residual=residual)
+
+
+def _pallas_pool(x, *, op, k=2, stride=2):
+    """pool: windowed int8/fp32 max/avg pooling + the global-avg reduce.
+
+    The kernels cover the forms the paper CNNs emit (4-D NHWC, VALID,
+    window 2/3, stride 2, and global-avg over any spatial extent); exotic
+    windows/strides and degenerate shapes fall back to the jnp oracle
+    (still one dispatch site; the cost model owns the perf delta).
+    """
+    if not pk.fast_path_supported(x, op=op, k=k, stride=stride):
+        return ref.pool_ref(x, op=op, k=k, stride=stride)
+    if op == "global_avg":
+        return pk.global_avgpool(x)
+    if op == "max":
+        return pk.maxpool2d(x, k=k, stride=stride)
+    return pk.avgpool2d(x, k=k, stride=stride)
 
 
 def _pallas_residual_rmsnorm(res, x, scale, eps=1e-6):
@@ -237,6 +269,7 @@ def register():
                            platforms=tpu)
     dispatch.register_impl("matmul_epilogue", "pallas", _pallas_matmul_epilogue,
                            platforms=tpu)
+    dispatch.register_impl("pool", "pallas", _pallas_pool, platforms=tpu)
     dispatch.register_impl("residual_rmsnorm", "pallas",
                            _pallas_residual_rmsnorm, platforms=tpu)
     dispatch.register_impl("flash_attention", "pallas",

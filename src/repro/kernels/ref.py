@@ -23,7 +23,8 @@ def mac_matmul_int8_ref(x_int8, w_int8, scale, out_dtype=jnp.float32):
     return (acc.astype(jnp.float32) * scale.reshape(1, -1)).astype(out_dtype)
 
 
-def matmul_epilogue_ref(x, w, b=None, act="none", scale=None, shift=None):
+def matmul_epilogue_ref(x, w, b=None, act="none", scale=None, shift=None,
+                        residual=None):
     y = jnp.einsum(
         "...k,kn->...n", x.astype(jnp.float32), w.astype(jnp.float32)
     )
@@ -33,12 +34,15 @@ def matmul_epilogue_ref(x, w, b=None, act="none", scale=None, shift=None):
         y = y * scale.astype(jnp.float32)
     if shift is not None:
         y = y + shift.astype(jnp.float32)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
     return _ACTS[act](y).astype(x.dtype)
 
 
 def fused_conv_ref(x, w, b=None, *, stride=1, padding="SAME", groups=1,
-                   act="none", scale=None, shift=None):
-    """Fused-conv oracle: conv + bias + folded-BN affine + act in f32."""
+                   act="none", scale=None, shift=None, residual=None):
+    """Fused-conv oracle: conv + bias + folded-BN affine (+ residual-add
+    accumulate, the acc_mac epilogue) + act in f32."""
     dn = jax.lax.conv_dimension_numbers(
         x.shape, w.shape, ("NHWC", "HWIO", "NHWC")
     )
@@ -52,7 +56,33 @@ def fused_conv_ref(x, w, b=None, *, stride=1, padding="SAME", groups=1,
         y = y * scale.astype(jnp.float32)
     if shift is not None:
         y = y + shift.astype(jnp.float32)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
     return _ACTS[act](y).astype(x.dtype)
+
+
+def pool_ref(x, *, op, k=2, stride=2):
+    """Pooling oracle: windowed max/avg (VALID) or the global-avg reduction,
+    accumulated in f32.  Integer-typed avg pools return f32 (an integer mean
+    is not an integer); max pools keep the input dtype."""
+    xf = x.astype(jnp.float32)
+    avg_dtype = (jnp.float32 if jnp.issubdtype(x.dtype, jnp.integer)
+                 else x.dtype)
+    if op == "global_avg":
+        return jnp.mean(xf, axis=(1, 2)).astype(avg_dtype)
+    if op == "max":
+        y = jax.lax.reduce_window(
+            xf, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1),
+            "VALID",
+        )
+        return y.astype(x.dtype)
+    if op == "avg":
+        y = jax.lax.reduce_window(
+            xf, 0.0, jax.lax.add, (1, k, k, 1), (1, stride, stride, 1),
+            "VALID",
+        ) / float(k * k)
+        return y.astype(avg_dtype)
+    raise ValueError(f"unknown pool op {op!r}")
 
 
 def depthwise_conv_ref(x, w, b=None, *, stride=1, padding="SAME",

@@ -7,7 +7,10 @@ Convs and dense layers go through the dispatch patterns so the MARVEL flow
 (profile -> extensions -> rewrite) applies to them exactly as to the LMs.
 The mobile models emit their depthwise-separable blocks as single
 ``sep_block`` sites (fusable dw->pw at v3+, stage-wise dw_mac/conv_mac
-below), and 1x1 stride-1 convs dispatch as matmul_epilogue GEMMs.
+below), and 1x1 stride-1 convs dispatch as matmul_epilogue GEMMs.  All
+pooling (windowed max/avg + global-avg) goes through ``pool`` sites (pool
+extension, v2+), and ResNet50's bottleneck skip-adds ride the conv/GEMM
+epilogues as ``residual=`` operands (acc_mac, fused in-register at v3+).
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ from repro.models.layers import ACTS, dense_init
 
 
 def _conv_ref(x, w, b, *, stride, padding, groups, act, scale=None,
-              shift=None):
+              shift=None, residual=None):
     dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
     y = jax.lax.conv_general_dilated(
         x, w, (stride, stride), padding, dimension_numbers=dn,
@@ -38,10 +41,12 @@ def _conv_ref(x, w, b, *, stride, padding, groups, act, scale=None,
         y = y * scale
     if shift is not None:
         y = y + shift
+    if residual is not None:
+        y = y + residual
     return ACTS[act](y)
 
 
-def _conv1x1_as_matmul(x, w, b, *, act, scale, shift):
+def _conv1x1_as_matmul(x, w, b, *, act, scale, shift, residual=None):
     """A 1x1 stride-1 conv IS a GEMM over pixels — dispatch it as one.
 
     The (1, 1, Cin, Cout) kernel becomes a (Cin, Cout) matrix contracted
@@ -51,27 +56,33 @@ def _conv1x1_as_matmul(x, w, b, *, act, scale, shift):
     (fusedmac) instead of an im2col conv (DenseNet/ResNet bottlenecks,
     MobileNetV2 expansions)."""
     return dense(x, w.reshape(w.shape[2], w.shape[3]), b, act=act,
-                 scale=scale, shift=shift)
+                 scale=scale, shift=shift, residual=residual)
 
 
 def conv2d(x, w, b=None, *, stride=1, padding="SAME", groups=1, act="none",
-           scale=None, shift=None):
-    """Conv + bias + folded-BN affine + act: one conv_mac/fusedmac site.
+           scale=None, shift=None, residual=None):
+    """Conv + bias + folded-BN affine (+ residual-add) + act: one
+    conv_mac/fusedmac site.
 
     ``scale``/``shift`` carry the folded batchnorm so the whole post-conv
     epilogue sits *inside* the dispatch pattern and can fuse into the
-    fused_conv kernel (one HBM round-trip instead of four).  1x1 stride-1
-    convs are rerouted to the matmul_epilogue pattern at trace time (see
-    :func:`_conv1x1_as_matmul`) — they are GEMMs, not convolutions.
+    fused_conv kernel (one HBM round-trip instead of four).  ``residual``
+    carries a skip tensor of the conv's output shape: the add happens
+    before ``act`` inside the pattern, so at v3+ the acc_mac epilogue
+    accumulates it in-register instead of round-tripping the conv output
+    through HBM.  1x1 stride-1 convs are rerouted to the matmul_epilogue
+    pattern at trace time (see :func:`_conv1x1_as_matmul`) — they are
+    GEMMs, not convolutions.
     """
     if (groups == 1 and x.ndim == 4 and stride == 1
             and w.shape[0] == w.shape[1] == 1
             and padding in ("SAME", "VALID")):
-        return _conv1x1_as_matmul(x, w, b, act=act, scale=scale, shift=shift)
+        return _conv1x1_as_matmul(x, w, b, act=act, scale=scale, shift=shift,
+                                  residual=residual)
     return dispatch.call(
         "fused_conv", _conv_ref, x, w, b,
         stride=stride, padding=padding, groups=groups, act=act,
-        scale=scale, shift=shift,
+        scale=scale, shift=shift, residual=residual,
     )
 
 
@@ -125,7 +136,7 @@ def sep_block(x, w_dw, w_pw, *, stride=1, padding="SAME", dw_scale=None,
     )
 
 
-def _dense_ref(x, w, b, *, act, scale=None, shift=None):
+def _dense_ref(x, w, b, *, act, scale=None, shift=None, residual=None):
     y = x @ w
     if b is not None:
         y = y + b
@@ -133,30 +144,42 @@ def _dense_ref(x, w, b, *, act, scale=None, shift=None):
         y = y * scale
     if shift is not None:
         y = y + shift
+    if residual is not None:
+        y = y + residual
     return ACTS[act](y)
 
 
-def dense(x, w, b=None, *, act="none", scale=None, shift=None):
-    """GEMM + bias + optional folded-BN affine + act: one fusedmac site."""
+def dense(x, w, b=None, *, act="none", scale=None, shift=None, residual=None):
+    """GEMM + bias + optional folded-BN affine (+ residual-add) + act: one
+    fusedmac site (the residual rides the acc_mac epilogue at v3+)."""
     return dispatch.call("matmul_epilogue", _dense_ref, x, w, b, act=act,
-                         scale=scale, shift=shift)
+                         scale=scale, shift=shift, residual=residual)
+
+
+def _pool_ref(x, *, op, k=2, stride=2):
+    # ref.pool_ref is the one source of truth for pool semantics (f32
+    # accumulate; max keeps x.dtype, integer avg means return f32) — the
+    # dispatch baseline and the kernel oracle must be the same function, so
+    # v0/v1 can never drift from what the v2+ kernels are tested against.
+    # Lazy import: model code otherwise depends only on repro.core.dispatch.
+    from repro.kernels.ref import pool_ref
+
+    return pool_ref(x, op=op, k=k, stride=stride)
 
 
 def maxpool(x, k=2, stride=2):
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID"
-    )
+    """Windowed max pool (VALID): one pool site (pool extension, v2+)."""
+    return dispatch.call("pool", _pool_ref, x, op="max", k=k, stride=stride)
 
 
 def avgpool_global(x):
-    return jnp.mean(x, axis=(1, 2))
+    """Global average pool (N, H, W, C) -> (N, C): one pool site."""
+    return dispatch.call("pool", _pool_ref, x, op="global_avg")
 
 
 def avgpool2(x):
-    s = jax.lax.reduce_window(
-        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
-    )
-    return s / 4.0
+    """2x2 stride-2 average pool (VALID): one pool site."""
+    return dispatch.call("pool", _pool_ref, x, op="avg", k=2, stride=2)
 
 
 def _affine(x, s, b):  # folded batchnorm
@@ -336,13 +359,15 @@ def resnet50_apply(p, x):
                        shift=blk["c1"]["bn"]["b"], act="relu")
             y = conv2d(y, blk["c2"]["w"], stride=s, scale=blk["c2"]["bn"]["s"],
                        shift=blk["c2"]["bn"]["b"], act="relu")
-            y = conv2d(y, blk["c3"]["w"], scale=blk["c3"]["bn"]["s"],
-                       shift=blk["c3"]["bn"]["b"])
             if "proj" in blk:
                 res = conv2d(x, blk["proj"]["w"], stride=s,
                              scale=blk["proj"]["bn"]["s"],
                              shift=blk["proj"]["bn"]["b"])
-            x = ACTS["relu"](res + y)
+            # the skip-add + relu ride INSIDE the c3 site (acc_mac epilogue):
+            # at v3+ the add happens on the accumulator tile in-register —
+            # no standalone skip-add HBM round-trip anywhere in the graph
+            x = conv2d(y, blk["c3"]["w"], scale=blk["c3"]["bn"]["s"],
+                       shift=blk["c3"]["bn"]["b"], act="relu", residual=res)
     x = avgpool_global(x)
     return dense(x, p["head"]["w"], p["head"]["b"])
 

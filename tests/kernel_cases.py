@@ -1,0 +1,134 @@
+"""Shared kernel-conformance cases: builders, quant mirrors, tolerances.
+
+Single source of truth for the differential suite (test_conformance.py) and
+the per-kernel test files (test_fused_conv.py, test_depthwise.py), so nobody
+hand-rolls a slightly-different int8 quantization mirror or tolerance again.
+
+Tolerances are *derived from the accumulator dtype*: an int32 MAC
+accumulator makes the integer math exact, so the only error source is the
+f32 epilogue (dequant/bias/act) — a fixed small tolerance; an f32
+accumulator's error grows with the reduction length, so the tolerance
+scales with ``k_reduce * eps``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def tol_from_acc(acc_dtype, k_reduce: int = 128, slack: float = 1.0) -> dict:
+    """kwargs for ``np.testing.assert_allclose`` given the kernel's
+    accumulator (or lowest-precision operand) dtype and reduction length."""
+    if jnp.issubdtype(jnp.dtype(acc_dtype), jnp.integer):
+        # integer MAC is exact; error comes only from the f32 epilogue
+        return {"rtol": 1e-3 * slack, "atol": 1e-3 * slack}
+    # accumulation-order slack grows with the reduction length (in f32
+    # units); a low-precision operand dtype floors it at its own eps
+    eps32 = float(jnp.finfo(jnp.float32).eps)
+    eps = float(jnp.finfo(acc_dtype).eps)
+    t = max(max(32, k_reduce) * eps32 * 8, eps * 4, 1e-5) * slack
+    return {"rtol": t, "atol": t}
+
+
+def quantize(a, axes):
+    """Dequantized int8 mirror of the ops.py wrappers' symmetric
+    quantization (``axes=None``: per-tensor; a tuple: per-channel)."""
+    s = jnp.maximum(jnp.max(jnp.abs(a.astype(jnp.float32)), axis=axes),
+                    1e-8) / 127.0
+    return jnp.clip(jnp.round(a / s), -127, 127) * s
+
+
+# ---------------------------------------------------------------------------
+# case builders (one per kernel family)
+# ---------------------------------------------------------------------------
+
+
+def conv_case(seed, h, w_sp, cin, cout, k, batch=2):
+    """(x, w, b, scale, shift) for a fused_conv / conv-epilogue case."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (batch, h, w_sp, cin), jnp.float32)
+    w = jax.random.normal(ks[1], (k, k, cin, cout), jnp.float32)
+    w = w / np.sqrt(k * k * cin)
+    b = jax.random.normal(ks[2], (cout,)) * 0.1
+    s = 0.5 + jax.random.uniform(ks[3], (cout,))
+    t = jax.random.normal(ks[4], (cout,)) * 0.1
+    return x, w, b, s, t
+
+
+def dw_case(seed, h, w_sp, c, k=3, batch=2):
+    """(x, w, b, scale, shift) for a depthwise case; w is HWIO (k, k, 1, c)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (batch, h, w_sp, c), jnp.float32)
+    w = jax.random.normal(ks[1], (k, k, 1, c), jnp.float32) / float(k)
+    b = jax.random.normal(ks[2], (c,)) * 0.1
+    s = 0.5 + jax.random.uniform(ks[3], (c,))
+    t = jax.random.normal(ks[4], (c,)) * 0.1
+    return x, w, b, s, t
+
+
+def sep_case(seed, h, w_sp, c, cout, batch=2):
+    """(x, w_dw, w_pw, dw_scale, dw_shift, pw_scale, pw_shift)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    x = jax.random.normal(ks[0], (batch, h, w_sp, c), jnp.float32)
+    wd = jax.random.normal(ks[1], (3, 3, 1, c), jnp.float32) / 3.0
+    wp = jax.random.normal(ks[2], (1, 1, c, cout), jnp.float32) / np.sqrt(c)
+    ds = 0.5 + jax.random.uniform(ks[3], (c,))
+    dt = jax.random.normal(ks[4], (c,)) * 0.1
+    ps = 0.5 + jax.random.uniform(ks[5], (cout,))
+    pt = jax.random.normal(ks[6], (cout,)) * 0.1
+    return x, wd, wp, ds, dt, ps, pt
+
+
+def matmul_case(seed, m, k, n, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = (jax.random.normal(ks[0], (m, k)) * 0.5).astype(dtype)
+    w = (jax.random.normal(ks[1], (k, n)) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[2], (n,)) * 0.1).astype(dtype)
+    r = jax.random.normal(ks[3], (m, n)).astype(dtype)
+    return x, w, b, r
+
+
+def pool_case(seed, h, w_sp, c, dtype=jnp.float32, batch=2):
+    key = jax.random.PRNGKey(seed)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jax.random.randint(key, (batch, h, w_sp, c), -127, 128, dtype)
+    return jax.random.normal(key, (batch, h, w_sp, c), dtype)
+
+
+# ---------------------------------------------------------------------------
+# quantized oracles (bit-faithful to the wrappers' on-the-fly quantization)
+# ---------------------------------------------------------------------------
+
+
+def quant_conv_oracle(x, w, b, s, t, *, stride, padding, act, residual=None):
+    """Mirror ops._pallas_fused_conv's int8 quantization, then run the float
+    oracle on the dequantized operands — bit-faithful to the kernel up to
+    f32 conv accumulation order."""
+    return ref.fused_conv_ref(
+        quantize(x, None), quantize(w, (0, 1, 2)), b, stride=stride,
+        padding=padding, groups=1, act=act, scale=s, shift=t,
+        residual=residual,
+    )
+
+
+def quant_dw_oracle(x, w, b, s, t, *, stride, padding, act):
+    """Mirror ops._pallas_depthwise_conv's quantization through the float
+    depthwise oracle."""
+    return ref.depthwise_conv_ref(
+        quantize(x, None), quantize(w, (0, 1, 2)), b, stride=stride,
+        padding=padding, act=act, scale=s, shift=t,
+    )
+
+
+def quant_sep_oracle(x, wd, wp, ds, dt, ps, pt, *, stride, dw_act, pw_act,
+                     padding="SAME"):
+    """Mirror ops._pallas_sep_block's quantization through the two-stage
+    float oracle."""
+    return ref.sep_block_ref(
+        quantize(x, None), quantize(wd, (0, 1, 2)), quantize(wp, (0, 1, 2)),
+        stride=stride, padding=padding, dw_scale=ds, dw_shift=dt,
+        dw_act=dw_act, pw_scale=ps, pw_shift=pt, pw_act=pw_act,
+    )

@@ -26,27 +26,75 @@ def test_compare_flags_regressions_by_direction():
     base = {"fig11_cycles/m": {"tpu_speedup_v4": 2.0, "rv32_v4": 100.0}}
     # speedup down 20% AND cycles up 20%: both regress at tol=0.15
     cur = {"fig11_cycles/m": {"tpu_speedup_v4": 1.6, "rv32_v4": 120.0}}
-    deltas, missing = gate.compare(base, cur, tol=0.15)
-    assert not missing
+    deltas, missing, added = gate.compare(base, cur, tol=0.15)
+    assert not missing and not added
     assert sorted(d["metric"] for d in deltas if d["regressed"]) == [
         "rv32_v4", "tpu_speedup_v4"
     ]
     # within tolerance: no failures
     cur_ok = {"fig11_cycles/m": {"tpu_speedup_v4": 1.9, "rv32_v4": 110.0}}
-    deltas, _ = gate.compare(base, cur_ok, tol=0.15)
+    deltas, _, _ = gate.compare(base, cur_ok, tol=0.15)
     assert not any(d["regressed"] for d in deltas)
     # improvements never fail
     cur_up = {"fig11_cycles/m": {"tpu_speedup_v4": 3.0, "rv32_v4": 50.0}}
-    deltas, _ = gate.compare(base, cur_up, tol=0.15)
+    deltas, _, _ = gate.compare(base, cur_up, tol=0.15)
     assert not any(d["regressed"] for d in deltas)
 
 
 def test_compare_reports_missing_gated_rows():
     base = {"fig11_cycles/m": {"tpu_speedup_v4": 2.0},
             "kernel/k": {"us_per_call": 5.0}}
-    deltas, missing = gate.compare(base, {}, tol=0.15)
+    deltas, missing, added = gate.compare(base, {}, tol=0.15)
     assert missing == ["fig11_cycles/m"]  # wall-clock rows may vanish freely
-    assert deltas == []
+    assert deltas == [] and added == []
+
+
+def test_compare_reports_new_gated_rows_without_failing():
+    """A brand-new benchmark row has no trajectory yet: reported, not
+    gated — and an ungated (wall-clock) new row isn't even reported."""
+    base = {"fig11_cycles/m": {"tpu_speedup_v4": 2.0}}
+    cur = {"fig11_cycles/m": {"tpu_speedup_v4": 2.0},
+           "fig11_cycles/new_model": {"tpu_speedup_v4": 1.0},
+           "kernel/new_kernel": {"us_per_call": 9.9}}
+    deltas, missing, added = gate.compare(base, cur, tol=0.15)
+    assert added == ["fig11_cycles/new_model"]
+    assert not missing
+    assert not any(d["regressed"] for d in deltas)
+
+
+def test_new_and_missing_rows_pass_end_to_end(tmp_path, capsys):
+    """main() with disjoint baseline/current rows: warn + pass (rc 0), and
+    the structural changes are named in the summary."""
+    basedir, curdir = tmp_path / "base", tmp_path / "cur"
+    basedir.mkdir()
+    curdir.mkdir()
+    (basedir / "BENCH_cycles.json").write_text(json.dumps(
+        [{"name": "fig11_cycles/old", "us_per_call": 0.0,
+          "derived": "tpu_speedup_v4=2.00"}]))
+    (curdir / "BENCH_cycles.json").write_text(json.dumps(
+        [{"name": "fig11_cycles/new", "us_per_call": 0.0,
+          "derived": "tpu_speedup_v4=1.00"}]))
+    rc = gate.main(["--baseline", str(basedir), "--current", str(curdir)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "fig11_cycles/old" in out and "fig11_cycles/new" in out
+    # --strict still fails on the vanished row
+    rc = gate.main(["--baseline", str(basedir), "--current", str(curdir),
+                    "--strict"])
+    assert rc == 1
+
+
+def test_malformed_rows_warn_not_keyerror(tmp_path, capsys):
+    d = tmp_path / "base"
+    d.mkdir()
+    (d / "BENCH_x.json").write_text(json.dumps(
+        [{"derived": "tpu_speedup_v4=2.0"},  # no name: skipped with warning
+         "not-a-dict",
+         {"name": "fig11_cycles/ok", "us_per_call": 0.0,
+          "derived": "tpu_speedup_v4=2.0"}]))
+    rows = gate.load_rows(str(d))
+    assert list(rows) == ["fig11_cycles/ok"]
+    assert "malformed" in capsys.readouterr().err
 
 
 def test_main_end_to_end(tmp_path, monkeypatch, capsys):

@@ -1,0 +1,536 @@
+"""Differential kernel-conformance suite: every Pallas impl vs its oracle.
+
+Three layers, all driven off the shared case library in kernel_cases.py:
+
+1. **Completeness** — every pattern registered with a ``pallas`` impl in
+   repro.core.dispatch must have conformance cases here; a new kernel that
+   lands without them fails the suite by construction.
+2. **Deterministic grid** — a hand-picked shape/stride/padding/act/dtype
+   grid per kernel family (odd sizes, >128-lane channel counts, every
+   supported act), wrapper output vs the bit-faithful quantized oracle,
+   tolerances derived from the accumulator dtype.  Runs in every lane.
+3. **Hypothesis fuzzing** — randomized shapes/strides/acts over the same
+   runners (small budget in the fast lane, the full grid under ``-m slow``
+   in CI's tests-slow lane).  Skipped cleanly where hypothesis isn't
+   installed.
+
+Fallback-guard cases assert that inputs a kernel declines (grouped weights,
+exotic padding, degenerate outputs, mis-shaped residuals, unsupported pool
+windows) still *dispatch* — they take the jnp fallback and match the
+baseline, instead of crashing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import kernel_cases as kc
+from repro.core import dispatch
+from repro.kernels import ops, ref
+from repro.models import cnn
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: fuzz layer skips
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# conformance runners: one per registered pallas pattern
+# ---------------------------------------------------------------------------
+
+
+def run_mac_matmul(seed=0, m=64, k=96, n=32):
+    from repro.kernels.mac_matmul import mac_matmul_int8
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.randint(ks[0], (m, k), -127, 128, jnp.int8)
+    w = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+    s = jax.random.uniform(ks[2], (n,), jnp.float32) * 0.02
+    got = mac_matmul_int8(x, w, s)
+    want = ref.mac_matmul_int8_ref(x, w, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **kc.tol_from_acc(jnp.int32, k))
+
+
+def run_fused_conv(seed=0, h=13, w_sp=11, cin=5, cout=9, k=3, stride=1,
+                   padding="SAME", act="relu", residual=False):
+    x, w, b, s, t = kc.conv_case(seed, h, w_sp, cin, cout, k)
+    res = None
+    if residual:
+        want_shape = jax.eval_shape(
+            lambda a, b: ref.fused_conv_ref(a, b, None, stride=stride,
+                                            padding=padding), x, w,
+        ).shape
+        res = jax.random.normal(jax.random.PRNGKey(seed + 1), want_shape)
+    got = ops._pallas_fused_conv(x, w, b, stride=stride, padding=padding,
+                                 groups=1, act=act, scale=s, shift=t,
+                                 residual=res)
+    want = kc.quant_conv_oracle(x, w, b, s, t, stride=stride,
+                                padding=padding, act=act, residual=res)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **kc.tol_from_acc(jnp.int32, k * k * cin))
+
+
+def run_depthwise(seed=0, h=13, w_sp=11, c=5, stride=1, padding="SAME",
+                  act="relu"):
+    x, w, b, s, t = kc.dw_case(seed, h, w_sp, c)
+    got = ops._pallas_depthwise_conv(x, w, b, stride=stride, padding=padding,
+                                     act=act, scale=s, shift=t)
+    want = kc.quant_dw_oracle(x, w, b, s, t, stride=stride, padding=padding,
+                              act=act)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **kc.tol_from_acc(jnp.int32, 9))
+
+
+def run_sep_block(seed=0, h=13, w_sp=11, c=5, cout=9, stride=1,
+                  dw_act="relu", pw_act="none"):
+    x, wd, wp, ds, dt, ps, pt = kc.sep_case(seed, h, w_sp, c, cout)
+    got = ops._pallas_sep_block(x, wd, wp, stride=stride, dw_scale=ds,
+                                dw_shift=dt, dw_act=dw_act, pw_scale=ps,
+                                pw_shift=pt, pw_act=pw_act)
+    want = kc.quant_sep_oracle(x, wd, wp, ds, dt, ps, pt, stride=stride,
+                               dw_act=dw_act, pw_act=pw_act)
+    assert got.shape == want.shape
+    # dw stage: int32 acc; pw stage: f32 acc over C — 2x slack for the chain
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **kc.tol_from_acc(jnp.int32, c, slack=2.0))
+
+
+def run_matmul_epilogue(seed=0, m=37, k=64, n=48, act="relu",
+                        dtype=jnp.float32, residual=False, affine=True):
+    x, w, b, r = kc.matmul_case(seed, m, k, n, dtype)
+    s = 0.5 + jax.random.uniform(jax.random.PRNGKey(seed + 2), (n,))
+    got = ops._pallas_matmul_epilogue(
+        x, w, b, act=act, scale=s if affine else None, shift=None,
+        residual=r if residual else None,
+    )
+    want = ref.matmul_epilogue_ref(
+        x, w, b, act=act, scale=s if affine else None, shift=None,
+        residual=r if residual else None,
+    )
+    assert got.shape == want.shape
+    # f32 accumulator, but a low-precision operand dtype floors the tol
+    tol = kc.tol_from_acc(dtype, k)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def run_pool(seed=0, h=13, w_sp=11, c=5, op="max", k=2, stride=2,
+             dtype=jnp.float32):
+    x = kc.pool_case(seed, h, w_sp, c, dtype)
+    got = ops._pallas_pool(x, op=op, k=k, stride=stride)
+    want = ref.pool_ref(x, op=op, k=k, stride=stride)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    window = h * w_sp if op == "global_avg" else k * k
+    if op == "max":
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **kc.tol_from_acc(jnp.float32, window))
+
+
+def run_residual_rmsnorm(seed=0, rows=33, d=96):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    res = jax.random.normal(ks[0], (rows, d))
+    x = jax.random.normal(ks[1], (rows, d))
+    scale = jnp.ones((d,))
+    new_res, normed = ops._pallas_residual_rmsnorm(res, x, scale)
+    want_res, want_norm = ref.residual_rmsnorm_ref(res, x, scale)
+    tol = kc.tol_from_acc(jnp.float32, d)
+    np.testing.assert_allclose(np.asarray(new_res), np.asarray(want_res),
+                               **tol)
+    np.testing.assert_allclose(np.asarray(normed), np.asarray(want_norm),
+                               **tol)
+
+
+def run_flash_attention(seed=0, b=1, sq=64, kheads=2, g=2, dh=16):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, sq, kheads, g, dh))
+    k = jax.random.normal(ks[1], (b, sq, kheads, dh))
+    v = jax.random.normal(ks[2], (b, sq, kheads, dh))
+    from repro.models.layers import _flash_attention_ref
+
+    got = ops._pallas_flash_attention(q, k, v, causal=True)
+    want = _flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **kc.tol_from_acc(jnp.float32, sq, slack=4.0))
+
+
+def run_wkv_chunk(seed=0, b=1, s=32, heads=2, n=8, chunk=16):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r, k, v = (jax.random.normal(ks[i], (b, s, heads, n)) * 0.3
+               for i in range(3))
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, heads, n)) * 0.3)
+    u = jax.random.normal(ks[4], (heads, n)) * 0.3
+    s0 = jnp.zeros((b, heads, n, n))
+    got, got_state = ops._pallas_wkv_chunk(r, k, v, lw, u, s0, chunk)
+    want, want_state = ref.wkv_ref_sequential(r, k, v, lw, u, s0)
+    tol = kc.tol_from_acc(jnp.float32, s, slack=8.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+    np.testing.assert_allclose(np.asarray(got_state), np.asarray(want_state),
+                               **tol)
+
+
+# every registered pallas pattern -> its conformance runner
+RUNNERS = {
+    "mac_matmul_int8": run_mac_matmul,
+    "fused_conv": run_fused_conv,
+    "depthwise_conv": run_depthwise,
+    "sep_block": run_sep_block,
+    "matmul_epilogue": run_matmul_epilogue,
+    "pool": run_pool,
+    "residual_rmsnorm": run_residual_rmsnorm,
+    "flash_attention": run_flash_attention,
+    "wkv_chunk": run_wkv_chunk,
+}
+
+
+def test_every_registered_pallas_impl_has_conformance_cases():
+    """A kernel registered without conformance cases fails by construction."""
+    registered = set(dispatch.registered_patterns("pallas"))
+    assert registered, "pallas backend registered nothing?"
+    missing = registered - set(RUNNERS)
+    assert not missing, (
+        f"registered pallas impls without conformance cases: {sorted(missing)}"
+        " — add a runner to tests/test_conformance.py::RUNNERS"
+    )
+
+
+# ---------------------------------------------------------------------------
+# deterministic grid (runs in every lane)
+# ---------------------------------------------------------------------------
+
+GRID = [
+    ("mac_matmul_int8", dict(m=130, k=257, n=140)),
+    ("mac_matmul_int8", dict(m=64, k=96, n=32)),
+    # odd spatial/channel sizes, both paddings/strides, every epilogue act,
+    # the residual epilogue, and multi-tile Cin/Cout (> the 128 block)
+    ("fused_conv", dict(stride=1, padding="SAME", act="none")),
+    ("fused_conv", dict(stride=2, padding="VALID", act="relu")),
+    ("fused_conv", dict(stride=2, padding="SAME", act="relu6")),
+    ("fused_conv", dict(stride=1, padding="VALID", act="relu",
+                        residual=True)),
+    ("fused_conv", dict(stride=2, padding="SAME", act="relu",
+                        residual=True)),
+    ("fused_conv", dict(h=8, w_sp=9, cin=130, cout=140, stride=2,
+                        act="relu")),
+    ("depthwise_conv", dict(stride=1, padding="SAME", act="none")),
+    ("depthwise_conv", dict(stride=2, padding="VALID", act="relu")),
+    ("depthwise_conv", dict(h=10, w_sp=9, c=130, stride=2, act="relu6")),
+    ("sep_block", dict(stride=1, dw_act="relu", pw_act="relu")),
+    ("sep_block", dict(stride=2, dw_act="relu6", pw_act="none")),
+    ("sep_block", dict(h=8, w_sp=9, c=130, cout=140, stride=2)),
+    ("matmul_epilogue", dict(act="silu")),
+    ("matmul_epilogue", dict(act="gelu", dtype=jnp.bfloat16)),
+    ("matmul_epilogue", dict(m=130, k=257, n=140, act="relu",
+                             residual=True)),
+    ("matmul_epilogue", dict(act="none", residual=True, affine=False)),
+    ("pool", dict(op="max", k=2)),
+    ("pool", dict(op="max", k=3)),
+    ("pool", dict(op="avg", k=2)),
+    ("pool", dict(op="avg", k=3)),
+    ("pool", dict(op="max", k=3, dtype=jnp.int8)),
+    ("pool", dict(op="avg", k=2, dtype=jnp.int8)),
+    ("pool", dict(op="global_avg")),
+    ("pool", dict(op="global_avg", dtype=jnp.int8)),
+    ("pool", dict(h=16, w_sp=16, c=130, op="max", k=2)),
+    ("residual_rmsnorm", dict()),
+    ("flash_attention", dict()),
+    ("wkv_chunk", dict()),
+]
+
+
+@pytest.mark.parametrize(
+    "idx,impl,case",
+    [(i, impl, case) for i, (impl, case) in enumerate(GRID)],
+    ids=[f"{impl}-{'-'.join(f'{k}{v}' for k, v in case.items())}"
+         if case else impl for impl, case in GRID],
+)
+def test_conformance_grid(idx, impl, case):
+    RUNNERS[impl](seed=idx, **case)
+
+
+# ---------------------------------------------------------------------------
+# fallback guards: declined inputs dispatch to the baseline, never crash
+# ---------------------------------------------------------------------------
+
+
+def _assert_matches_baseline(got, want, exact=True):
+    tol = ({"rtol": 1e-5, "atol": 1e-6} if exact
+           else {"rtol": 5e-2, "atol": 5e-2})
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def guard_fused_conv_grouped():
+    x, w, b, s, t = kc.conv_case(0, 10, 10, 4, 8, 3)
+    w = w[:, :, :2, :]  # groups=2 weight shape
+    got = ops._pallas_fused_conv(x, w, b, stride=1, padding="SAME", groups=2,
+                                 act="relu", scale=s, shift=t)
+    want = ref.fused_conv_ref(x, w, b, stride=1, padding="SAME", groups=2,
+                              act="relu", scale=s, shift=t)
+    _assert_matches_baseline(got, want)
+
+
+def guard_fused_conv_exotic_padding():
+    x, w, b, _, _ = kc.conv_case(1, 9, 9, 4, 6, 3)
+    pad = ((2, 1), (0, 3))
+    got = ops._pallas_fused_conv(x, w, b, stride=1, padding=pad, groups=1,
+                                 act="none")
+    want = ref.fused_conv_ref(x, w, b, stride=1, padding=pad, groups=1,
+                              act="none")
+    _assert_matches_baseline(got, want)
+
+
+def guard_fused_conv_degenerate_empty():
+    x = jnp.ones((1, 4, 4, 2))
+    w = jnp.ones((6, 6, 2, 3))
+    got = ops._pallas_fused_conv(x, w, None, stride=2, padding="VALID",
+                                 groups=1, act="none")
+    assert got.shape == (1, 0, 0, 3)
+
+
+def guard_fused_conv_unsupported_act():
+    x, w, b, _, _ = kc.conv_case(2, 9, 9, 4, 6, 3)
+    got = ops._pallas_fused_conv(x, w, b, stride=1, padding="SAME", groups=1,
+                                 act="silu")
+    want = ref.fused_conv_ref(x, w, b, stride=1, padding="SAME", groups=1,
+                              act="silu")
+    _assert_matches_baseline(got, want)
+
+
+def guard_fused_conv_broadcast_residual_falls_back():
+    """A residual that is broadcast-compatible but not output-shaped can't
+    tile into the kernel epilogue — the site must fall back to the baseline
+    (which broadcasts it), not crash or mis-add."""
+    x, w, b, _, _ = kc.conv_case(3, 9, 9, 4, 6, 3)
+    res = jnp.full((x.shape[0], 1, 1, 6), 0.25)
+    got = ops._pallas_fused_conv(x, w, b, stride=1, padding="SAME", groups=1,
+                                 act="relu", residual=res)
+    want = ref.fused_conv_ref(x, w, b, stride=1, padding="SAME", groups=1,
+                              act="relu", residual=res)
+    _assert_matches_baseline(got, want)
+
+
+def guard_matmul_epilogue_broadcast_residual_falls_back():
+    x, w, b, _ = kc.matmul_case(4, 12, 16, 8)
+    res = jnp.full((1, 8), -0.5)
+    got = ops._pallas_matmul_epilogue(x, w, b, act="relu", residual=res)
+    want = ref.matmul_epilogue_ref(x, w, b, act="relu", residual=res)
+    _assert_matches_baseline(got, want)
+
+
+def guard_depthwise_grouped_not_depthwise():
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(ks[0], (1, 10, 10, 8), jnp.float32)
+    w = jax.random.normal(ks[1], (3, 3, 2, 8), jnp.float32)
+    got = ops._pallas_depthwise_conv(x, w, None, stride=1, padding="SAME",
+                                     act="relu")
+    want = ref.fused_conv_ref(x, w, None, stride=1, padding="SAME", groups=4,
+                              act="relu")
+    _assert_matches_baseline(got, want)
+
+
+def guard_depthwise_degenerate_empty():
+    got = ops._pallas_depthwise_conv(jnp.ones((1, 2, 2, 4)),
+                                     jnp.ones((3, 3, 1, 4)), None,
+                                     stride=1, padding="VALID", act="none")
+    assert got.shape == (1, 0, 0, 4)
+
+
+def guard_sep_block_decomposes_on_exotic_padding():
+    x, wd, wp, ds, dt, ps, pt = kc.sep_case(5, 9, 9, 6, 10)
+    pad = ((1, 1), (1, 1))
+    got = ops._pallas_sep_block(x, wd, wp, stride=1, padding=pad,
+                                dw_scale=ds, dw_shift=dt, dw_act="relu",
+                                pw_scale=ps, pw_shift=pt, pw_act="none")
+    want = ref.sep_block_ref(x, wd, wp, stride=1, padding=pad, dw_scale=ds,
+                             dw_shift=dt, dw_act="relu", pw_scale=ps,
+                             pw_shift=pt, pw_act="none")
+    _assert_matches_baseline(got, want, exact=False)
+
+
+def guard_pool_unsupported_window():
+    x = kc.pool_case(0, 12, 12, 6)
+    for op, k, stride in [("max", 4, 2), ("avg", 3, 1), ("max", 2, 3)]:
+        got = ops._pallas_pool(x, op=op, k=k, stride=stride)
+        want = ref.pool_ref(x, op=op, k=k, stride=stride)
+        _assert_matches_baseline(got, want)
+
+
+def guard_pool_vmem_slab_cap():
+    """A native-resolution f32 pool whose padded image slab exceeds the
+    VMEM budget must fall back to the baseline (the slab would fail to
+    compile on a real TPU), while the int8 form of the same extent — 4x
+    smaller — still fits."""
+    from repro.kernels import pooling as pk
+
+    big = jax.ShapeDtypeStruct((1, 224, 224, 64), jnp.float32)
+    assert not pk.fits_vmem(big, 2, 2, "max")
+    assert not pk.fits_vmem(big, op="global_avg")
+    assert pk.fits_vmem(jax.ShapeDtypeStruct((1, 224, 224, 64), jnp.int8),
+                        2, 2, "max")
+    assert pk.fits_vmem(jax.ShapeDtypeStruct((1, 64, 64, 64), jnp.float32),
+                        2, 2, "max")
+    # the oversized site dispatches through the fallback, bit-exact
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 224, 224, 8))
+    got = ops._pallas_pool(x, op="max", k=2, stride=2)
+    want = ref.pool_ref(x, op="max", k=2, stride=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def guard_pool_degenerate():
+    # window larger than the image: empty output, like the baseline
+    x = kc.pool_case(1, 2, 1, 3)
+    got = ops._pallas_pool(x, op="max", k=3, stride=2)
+    want = ref.pool_ref(x, op="max", k=3, stride=2)
+    assert got.shape == want.shape and 0 in got.shape
+    # empty batch dispatches too
+    got = ops._pallas_pool(jnp.zeros((0, 8, 8, 4)), op="global_avg")
+    assert got.shape == (0, 4)
+
+
+def guard_matmul_epilogue_empty_gemm():
+    x = jnp.zeros((0, 8))
+    w = jnp.ones((8, 4))
+    got = ops._pallas_matmul_epilogue(x, w, None, act="relu")
+    assert got.shape == (0, 4)
+
+
+GUARDS = [
+    guard_fused_conv_grouped,
+    guard_fused_conv_exotic_padding,
+    guard_fused_conv_degenerate_empty,
+    guard_fused_conv_unsupported_act,
+    guard_fused_conv_broadcast_residual_falls_back,
+    guard_matmul_epilogue_broadcast_residual_falls_back,
+    guard_depthwise_grouped_not_depthwise,
+    guard_depthwise_degenerate_empty,
+    guard_sep_block_decomposes_on_exotic_padding,
+    guard_pool_unsupported_window,
+    guard_pool_vmem_slab_cap,
+    guard_pool_degenerate,
+    guard_matmul_epilogue_empty_gemm,
+]
+
+
+@pytest.mark.parametrize("guard", GUARDS, ids=lambda g: g.__name__)
+def test_fallback_guards_dispatch_not_crash(guard):
+    guard()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzzing (fast budget here; full grid in the slow lane)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _conv_params = st.tuples(
+        st.integers(0, 10_000),                      # seed
+        st.integers(5, 18), st.integers(5, 18),      # h, w
+        st.integers(1, 12), st.integers(1, 12),      # cin, cout
+        st.sampled_from([1, 2, 3, 5]),               # k
+        st.sampled_from([1, 2]),                     # stride
+        st.sampled_from(["SAME", "VALID"]),
+        st.sampled_from(["none", "relu", "relu6"]),
+        st.booleans(),                               # residual
+    )
+    _dw_params = st.tuples(
+        st.integers(0, 10_000), st.integers(5, 16), st.integers(5, 16),
+        st.integers(1, 12), st.sampled_from([1, 2]),
+        st.sampled_from(["SAME", "VALID"]),
+        st.sampled_from(["none", "relu", "relu6"]),
+    )
+    _pool_params = st.tuples(
+        st.integers(0, 10_000), st.integers(2, 20), st.integers(2, 20),
+        st.integers(1, 12),
+        st.sampled_from(["max", "avg", "global_avg"]),
+        st.sampled_from([2, 3]), st.sampled_from([1, 2, 3]),
+        st.sampled_from([jnp.float32, jnp.int8]),
+    )
+    _mm_params = st.tuples(
+        st.integers(0, 10_000), st.integers(1, 40), st.integers(1, 70),
+        st.integers(1, 40), st.sampled_from(["none", "relu", "silu"]),
+        st.booleans(),
+    )
+
+    def _fuzz_conv(p):
+        seed, h, w, cin, cout, k, stride, padding, act, res = p
+        if k > min(h, w):  # degenerate handled by the guard tests
+            padding = "SAME"
+        run_fused_conv(seed, h, w, cin, cout, k, stride, padding, act, res)
+
+    def _fuzz_dw(p):
+        seed, h, w, c, stride, padding, act = p
+        run_depthwise(seed, h, w, c, stride, padding, act)
+
+    def _fuzz_pool(p):
+        seed, h, w, c, op, k, stride, dtype = p
+        run_pool(seed, h, w, c, op, k, stride, dtype)
+
+    def _fuzz_mm(p):
+        seed, m, k, n, act, res = p
+        run_matmul_epilogue(seed, m, k, n, act, residual=res)
+
+    _FUZZERS = [(_fuzz_conv, _conv_params), (_fuzz_dw, _dw_params),
+                (_fuzz_pool, _pool_params), (_fuzz_mm, _mm_params)]
+
+    def _make(fuzzer, params, max_examples):
+        @settings(max_examples=max_examples, deadline=None)
+        @given(params)
+        def t(p):
+            fuzzer(p)
+        return t
+
+    @pytest.mark.parametrize("i", range(len(_FUZZERS)),
+                             ids=[f.__name__ for f, _ in _FUZZERS])
+    def test_conformance_fuzz_fast(i):
+        fuzzer, params = _FUZZERS[i]
+        _make(fuzzer, params, 8)()
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("i", range(len(_FUZZERS)),
+                             ids=[f.__name__ for f, _ in _FUZZERS])
+    def test_conformance_fuzz_full(i):
+        fuzzer, params = _FUZZERS[i]
+        _make(fuzzer, params, 60)()
+else:  # keep the skip visible in every lane's report
+    @pytest.mark.skip(reason="hypothesis not installed; fuzz layer runs in CI")
+    def test_conformance_fuzz_fast():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# model-level sanity: every model-emitted pooling form has a kernel case
+# ---------------------------------------------------------------------------
+
+
+def test_model_pool_forms_covered_by_kernel_fast_path(monkeypatch):
+    """The pools the six CNNs actually emit (2/3-window stride-2 VALID +
+    global-avg) are exactly the kernel fast path — none silently rides the
+    fallback."""
+    forms = set()
+    orig = cnn._pool_ref
+
+    def spying(x, *, op, k=2, stride=2):
+        forms.add((op, k, stride))
+        return orig(x, op=op, k=k, stride=stride)
+
+    monkeypatch.setattr(cnn, "_pool_ref", spying)
+    for name in cnn.CNN_MODELS:
+        init, apply, in_shape = cnn.get_cnn(name)
+        p = init(jax.random.PRNGKey(0))
+        jax.eval_shape(lambda x: apply(p, x), jnp.zeros((1, *in_shape)))
+    from repro.kernels import pooling as pk
+
+    assert forms  # five of the six CNNs pool
+    for op, k, stride in forms:
+        if op == "global_avg":
+            continue
+        assert k in pk.SUPPORTED_WINDOWS and stride in pk.SUPPORTED_STRIDES, (
+            f"model emits pool form ({op}, k={k}, stride={stride}) outside "
+            "the kernel fast path"
+        )

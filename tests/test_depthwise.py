@@ -15,6 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from kernel_cases import dw_case as _dw_case
+from kernel_cases import quantize as _quant
+from kernel_cases import sep_case as _sep_case
 from repro.core import costmodel, profiler
 from repro.core.extensions import (
     EXTENSIONS, LEVEL_EXTENSIONS, extension_context, patterns_for_level,
@@ -23,22 +26,6 @@ from repro.kernels import depthwise_conv as dwk
 from repro.kernels import fused_conv as fc
 from repro.kernels import ops, ref
 from repro.models import cnn
-
-
-def _quant(a, axes):
-    s = jnp.maximum(jnp.max(jnp.abs(a.astype(jnp.float32)), axis=axes),
-                    1e-8) / 127.0
-    return jnp.clip(jnp.round(a / s), -127, 127) * s
-
-
-def _dw_case(seed, h, w_sp, c):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
-    x = jax.random.normal(ks[0], (2, h, w_sp, c), jnp.float32)
-    w = jax.random.normal(ks[1], (3, 3, 1, c), jnp.float32) / 3.0
-    b = jax.random.normal(ks[2], (c,)) * 0.1
-    s = 0.5 + jax.random.uniform(ks[3], (c,))
-    t = jax.random.normal(ks[4], (c,)) * 0.1
-    return x, w, b, s, t
 
 
 # ---------------------------------------------------------------------------
@@ -74,18 +61,6 @@ def test_depthwise_conv_channel_tiling(c):
     )
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-3, atol=1e-3)
-
-
-def _sep_case(seed, h, w_sp, c, cout):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
-    x = jax.random.normal(ks[0], (2, h, w_sp, c), jnp.float32)
-    wd = jax.random.normal(ks[1], (3, 3, 1, c), jnp.float32) / 3.0
-    wp = jax.random.normal(ks[2], (1, 1, c, cout), jnp.float32) / np.sqrt(c)
-    ds = 0.5 + jax.random.uniform(ks[3], (c,))
-    dt = jax.random.normal(ks[4], (c,)) * 0.1
-    ps = 0.5 + jax.random.uniform(ks[5], (cout,))
-    pt = jax.random.normal(ks[6], (cout,)) * 0.1
-    return x, wd, wp, ds, dt, ps, pt
 
 
 @pytest.mark.parametrize("stride", [1, 2])

@@ -12,38 +12,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from kernel_cases import conv_case as _rand_case
+from kernel_cases import quant_conv_oracle as _quant_oracle
 from repro.core import costmodel, profiler
 from repro.core.extensions import (
     EXTENSIONS, extension_context, patterns_for_level,
 )
 from repro.kernels import fused_conv as fc
-from repro.kernels import ops, ref
+from repro.kernels import ops  # noqa: F401  (registers pallas impls)
 from repro.models import cnn
-
-
-def _rand_case(seed, h, w_sp, cin, cout, k):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
-    x = jax.random.normal(ks[0], (2, h, w_sp, cin), jnp.float32)
-    w = jax.random.normal(ks[1], (k, k, cin, cout), jnp.float32)
-    w = w / np.sqrt(k * k * cin)
-    b = jax.random.normal(ks[2], (cout,)) * 0.1
-    s = 0.5 + jax.random.uniform(ks[3], (cout,))
-    t = jax.random.normal(ks[4], (cout,)) * 0.1
-    return x, w, b, s, t
-
-
-def _quant_oracle(x, w, b, s, t, *, stride, padding, act):
-    """Mirror the wrapper's int8 quantization, then run the float oracle on
-    the dequantized operands — bit-faithful to the kernel up to f32 conv
-    accumulation order."""
-    xf = x.astype(jnp.float32)
-    xs = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-8) / 127.0
-    xq = jnp.clip(jnp.round(xf / xs), -127, 127) * xs
-    wf = w.astype(jnp.float32)
-    ws = jnp.maximum(jnp.max(jnp.abs(wf), axis=(0, 1, 2)), 1e-8) / 127.0
-    wq = jnp.clip(jnp.round(wf / ws), -127, 127) * ws
-    return ref.fused_conv_ref(xq, wq, b, stride=stride, padding=padding,
-                              groups=1, act=act, scale=s, shift=t)
 
 
 @pytest.mark.parametrize("stride", [1, 2])
