@@ -6,6 +6,12 @@ and emits the rows the CI bench-gate consumes: requests/s, p50/p99 latency,
 batch occupancy, and the recompiles-after-warmup counter (must be 0: the
 whole point of the bucketed AOT cache).  The synchronous engine is measured
 alongside as the no-coalescing comparison point.
+
+The fault rows (informational, lenet5 only) measure the control plane from
+this PR's robustness tier: throughput under injected flaky compute (degraded
+vs healthy req/s), the shed rate of an undersized admission queue, and the
+supervisor's recovery latency after an abrupt worker kill (warmup replay is
+an AOT cache hit, so recovery must not recompile).
 """
 from __future__ import annotations
 
@@ -93,6 +99,89 @@ def run() -> None:
             f"handoffs_per_batch={handoffs:.2f};"
             f"async_req_s={REQUESTS / dt:.1f};sync_req_s={REQUESTS / sdt:.1f}",
         )
+
+        if name == "lenet5":
+            fault_rows(prog, in_shape, imgs, dt)
+
+
+def fault_rows(prog, in_shape, imgs, healthy_dt: float) -> None:
+    """Informational rows for the fault-tolerant control plane."""
+    from repro.runtime.batching import AdmissionError, RetryPolicy
+    from repro.runtime.faults import FaultInjector
+    from repro.runtime.supervisor import Supervisor
+
+    # throughput under injected flaky compute: every 10th-ish attempt fails
+    # and is retried with (fast) backoff; degradation vs the healthy run
+    inj = FaultInjector(flaky_rate=0.1, seed=7)
+    engine = prog.serve(mode="async", max_batch=MAX_BATCH, max_delay_ms=2.0,
+                        faults=inj,
+                        retry=RetryPolicy(max_retries=3,
+                                          backoff_base_ms=0.1, jitter=0.0))
+
+    async def flaky_session():
+        async with engine:
+            engine.warmup(in_shape)
+            return await _drive(engine, imgs)
+
+    fdt = asyncio.run(flaky_session())
+    m = engine.metrics()
+    emit(
+        "serving/lenet5_faulty_throughput", fdt / REQUESTS * 1e6,
+        f"req_s={REQUESTS / fdt:.1f};healthy_req_s={REQUESTS / healthy_dt:.1f};"
+        f"degradation={fdt / healthy_dt:.2f}x;"
+        f"injected={inj.injected['flaky']};retries={m['retries']};"
+        f"errors={m['errors']}",
+    )
+
+    # shed rate of an undersized admission queue: the overflow is rejected
+    # with a retry-after hint instead of queueing without bound
+    small = prog.serve(mode="async", max_batch=MAX_BATCH, max_delay_ms=2.0,
+                       max_pending=8)
+
+    async def shed_session():
+        async with small:
+            small.warmup(in_shape)
+            futs = []
+            for im in imgs:
+                try:
+                    futs.append(small.submit_nowait(im))
+                except AdmissionError:
+                    pass
+            if futs:
+                await asyncio.gather(*futs)
+
+    asyncio.run(shed_session())
+    sm = small.metrics()
+    emit(
+        "serving/lenet5_shed_rate", 0.0,
+        f"shed={sm['shed']};submitted={sm['submitted']};"
+        f"shed_rate={sm['shed'] / max(sm['shed'] + sm['submitted'], 1):.2f};"
+        f"completed={sm['completed']}",
+    )
+
+    # supervisor recovery latency: kill a worker, time until the health
+    # loop swaps in a warmed replacement (no recompiles: AOT cache hit)
+    sup = Supervisor(heartbeat_interval_ms=5.0)
+
+    async def recovery_session():
+        sup.register("lenet5", prog, workers=2, warmup=in_shape,
+                     max_batch=MAX_BATCH, max_delay_ms=2.0)
+        async with sup:
+            misses0 = prog.cache_misses
+            t0 = time.perf_counter()
+            sup.workers["lenet5/0"].engine.kill("bench: injected kill")
+            while len(sup.healthy_workers()) < 2:
+                await asyncio.sleep(0.001)
+            dt = time.perf_counter() - t0
+            return dt, prog.cache_misses - misses0
+
+    rdt, recompiles = asyncio.run(recovery_session())
+    agg = sup.metrics()["aggregate"]
+    emit(
+        "serving/lenet5_recovery_latency", rdt * 1e3,
+        f"recovery_ms={rdt * 1e3:.1f};restarts={agg['restarts']};"
+        f"recompiles_during_recovery={recompiles}",
+    )
 
 
 if __name__ == "__main__":

@@ -11,7 +11,14 @@ request::
         result = await engine.submit(image)        # one request
         results = await engine.submit_wave(images)  # a concurrent wave
 
+With ``--supervised``, the same traffic runs under the fault-tolerant
+control plane (:class:`repro.runtime.supervisor.Supervisor`, two workers)
+and a *draining restart* of worker 0 is issued mid-wave: admission closes,
+in-flight requests flush, a warmed replacement swaps in — zero accepted
+requests dropped.  Ops semantics are documented in docs/serving_ops.md.
+
     PYTHONPATH=src python examples/serve_cnn.py [--model lenet5] [--n 64]
+    PYTHONPATH=src python examples/serve_cnn.py --supervised
 """
 import argparse
 import asyncio
@@ -25,12 +32,48 @@ from repro.launch.serve import random_images
 from repro.models.cnn import get_cnn
 
 
+def serve_supervised(args, prog, in_shape):
+    """Two supervised workers; worker 0 is hot-swapped (draining restart)
+    while the wave is in flight.  Every accepted request still resolves."""
+    from repro.runtime.supervisor import Supervisor
+
+    async def serve() -> dict:
+        sup = Supervisor()
+        sup.register(args.model, prog, workers=2, warmup=in_shape,
+                     max_batch=args.max_batch,
+                     max_delay_ms=args.max_delay_ms)
+        async with sup:
+            t0 = time.perf_counter()
+            wave = asyncio.gather(
+                *(sup.submit(im)
+                  for im in random_images(in_shape, args.n))
+            )
+            # hot-swap worker 0 while the wave is in flight: admission
+            # closes, accepted requests flush, a warmed replacement swaps in
+            await sup.restart_worker(f"{args.model}/0", drain=True)
+            results = await wave
+            dt = time.perf_counter() - t0
+            agg = sup.metrics()["aggregate"]
+            print(f"served {len(results)} requests through a mid-traffic "
+                  f"draining restart in {dt * 1e3:.1f} ms "
+                  f"(restarts={agg['restarts']}, dropped=0)")
+            return agg
+
+    agg = asyncio.run(serve())
+    print(f"aggregate: completed={agg['completed']} "
+          f"errors={agg['errors']} shed={agg['shed']} "
+          f"healthy={agg['healthy_workers']}/{agg['workers_total']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="lenet5")
     ap.add_argument("--n", type=int, default=64, help="requests to serve")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--supervised", action="store_true",
+                    help="serve under the supervisor and demonstrate a "
+                         "mid-traffic draining restart")
     args = ap.parse_args()
 
     init, apply, in_shape = get_cnn(args.model)
@@ -40,6 +83,9 @@ def main():
     prog = marvel.compile(apply, x, params=params, level="v4",
                           precompile=False)
     prog.shard()  # 1-D DP mesh over every local device
+    if args.supervised:
+        serve_supervised(args, prog, in_shape)
+        return
     engine = prog.serve(mode="async", max_batch=args.max_batch,
                         max_delay_ms=args.max_delay_ms)
 

@@ -7,6 +7,10 @@ LM decode (continuous batching over decode slots)::
 CNN async tier (marvel.compile -> shard over local devices -> async engine)::
 
     python -m repro.launch.serve --cnn lenet5 --requests 64 --max-batch 8
+
+Supervised CNN tier (fault-tolerant control plane; see docs/serving_ops.md)::
+
+    python -m repro.launch.serve --cnn lenet5 --supervised --workers 2
 """
 from __future__ import annotations
 
@@ -59,6 +63,33 @@ def random_images(in_shape, n: int, seed: int = 0) -> list[np.ndarray]:
             for _ in range(n)]
 
 
+def serve_cnn_supervised(args, prog, in_shape) -> None:
+    """The fault-tolerant path: a Supervisor routing over N workers, with
+    the aggregated Prometheus snapshot printed on exit
+    (see docs/serving_ops.md for the ops runbook)."""
+    from repro.runtime.supervisor import Supervisor
+
+    async def main() -> str:
+        sup = Supervisor()
+        sup.register(args.cnn, prog, workers=args.workers,
+                     warmup=in_shape, max_batch=args.max_batch,
+                     max_delay_ms=args.max_delay_ms)
+        async with sup:
+            t0 = time.perf_counter()
+            results = await sup.submit_wave(
+                random_images(in_shape, args.requests)
+            )
+            dt = time.perf_counter() - t0
+            agg = sup.metrics()["aggregate"]
+            print(f"served {len(results)} requests across "
+                  f"{agg['healthy_workers']} supervised worker(s) in "
+                  f"{dt * 1e3:.1f} ms "
+                  f"({dt / args.requests * 1e6:.0f} us/request)")
+            return sup.prometheus()
+
+    print(asyncio.run(main()), end="")
+
+
 def serve_cnn(args) -> None:
     from repro import marvel
     from repro.models.cnn import get_cnn
@@ -68,6 +99,9 @@ def serve_cnn(args) -> None:
     x = np.zeros((1, *in_shape), np.float32)
     prog = marvel.compile(apply, x, params=params, level="v4",
                           precompile=False).shard()  # all local devices (DP)
+    if args.supervised:
+        serve_cnn_supervised(args, prog, in_shape)
+        return
     engine = prog.serve(mode="async", max_batch=args.max_batch,
                         max_delay_ms=args.max_delay_ms)
 
@@ -98,7 +132,14 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--supervised", action="store_true",
+                    help="run the CNN tier under the fault-tolerant "
+                         "supervisor (prints Prometheus metrics on exit)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="supervised engine workers (with --supervised)")
     args = ap.parse_args(argv)
+    if args.supervised and not args.cnn:
+        ap.error("--supervised requires --cnn")
     if (args.cnn is None) == (args.arch is None):
         ap.error("pass exactly one of --arch (LM) or --cnn (CNN tier)")
     if args.cnn:

@@ -234,6 +234,15 @@ class MarvelProgram:
         executable per batch bucket — and both respect :meth:`shard`:
         buckets round up to ``dp_shards`` and batches dispatch SPMD across
         the mesh.
+
+        Both engines accept ``retry=`` (a
+        :class:`~repro.runtime.batching.RetryPolicy`: backoff + poison-pill
+        bisection) and ``faults=`` (a
+        :class:`~repro.runtime.faults.FaultInjector` for drills).  For
+        fault-tolerant deployments, wrap programs in a
+        :class:`~repro.runtime.supervisor.Supervisor` — supervised workers,
+        health checks, auto-recovery, draining restarts — rather than
+        serving a bare engine; semantics in ``docs/serving_ops.md``.
         """
         if self.model_class != "cnn":
             raise NotImplementedError(

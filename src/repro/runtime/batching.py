@@ -11,6 +11,7 @@ engines own only their dispatch loops.
 """
 from __future__ import annotations
 
+import random
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -18,16 +19,73 @@ import numpy as np
 
 
 class AdmissionError(RuntimeError):
-    """Raised when a request is rejected because the queue is at capacity."""
+    """Raised when a request is rejected because the queue is at capacity.
+
+    ``retry_after_ms`` is the load-shedding hint: the engine's estimate of
+    when capacity will free up (drain time of the current backlog), so a
+    well-behaved client backs off instead of hammering a saturated plane.
+    ``None`` means the engine had no estimate.
+    """
+
+    def __init__(self, message: str, *, retry_after_ms: float | None = None):
+        super().__init__(message)
+        self.retry_after_ms = retry_after_ms
 
 
-def admit_or_raise(pending: int, capacity: int | None) -> None:
+class DeadlineExceeded(RuntimeError):
+    """A request's ``deadline_ms`` expired before dispatch; it is fast-failed
+    without burning compute on an answer nobody is waiting for."""
+
+
+class WorkerUnavailable(RuntimeError):
+    """The worker serving a request died (or was evicted) before resolving
+    it.  Unlike a compute error this says nothing about the request itself —
+    a supervisor re-routes it to a healthy worker."""
+
+
+def admit_or_raise(pending: int, capacity: int | None,
+                   retry_after_ms: float | None = None) -> None:
     """The one admission check both serving planes share: reject (raise)
     when the queue is at capacity; ``capacity=None`` admits everything."""
     if capacity is not None and pending >= capacity:
         raise AdmissionError(
-            f"queue at capacity ({capacity}); request rejected"
+            f"queue at capacity ({capacity}); request rejected",
+            retry_after_ms=retry_after_ms,
         )
+
+
+# ---------------------------------------------------------------------------
+# retry / bisection policy
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RetryPolicy:
+    """How the compute plane survives a failed batch.
+
+    A failing batch is retried ``max_retries`` times with exponential
+    backoff (``backoff_base_ms * backoff_multiplier**attempt``) plus
+    deterministic seeded jitter.  If retries exhaust and the batch holds
+    more than one request, it is *bisected* — each half solved recursively —
+    to isolate a poison-pill request so innocent co-batched requests still
+    succeed.  ``max_splits`` bounds the bisection depth per path (``None`` =
+    split down to singletons); when the budget runs out the remaining
+    sub-batch fails per-request.
+    """
+
+    max_retries: int = 2
+    backoff_base_ms: float = 1.0
+    backoff_multiplier: float = 2.0
+    jitter: float = 0.5  # fraction of the backoff added as seeded jitter
+    max_splits: int | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+
+    def backoff_ms(self, attempt: int) -> float:
+        base = self.backoff_base_ms * self.backoff_multiplier ** attempt
+        return base * (1.0 + self.jitter * self._rng.random())
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +199,15 @@ class EngineMetrics:
     lanes_total: int = 0
     deadline_flushes: int = 0
     full_flushes: int = 0
+    # failure surface: requests that resolved with an error, retry attempts
+    # made on their behalf, requests shed at admission with a retry-after
+    # hint, requests fast-failed on an expired deadline, and worker restarts
+    # (bumped by the supervisor; always 0 on a bare engine)
+    errors: int = 0
+    retries: int = 0
+    shed: int = 0
+    deadline_failures: int = 0
+    restarts: int = 0
     # cross-thread compute->loop handoffs; the async engine resolves futures
     # in batch, so this stays == batches (one handoff per flush), never
     # == completed (one per request) — asserted by tests and bench_serving
@@ -179,6 +246,11 @@ class EngineMetrics:
             "deadline_flushes": self.deadline_flushes,
             "full_flushes": self.full_flushes,
             "loop_handoffs": self.loop_handoffs,
+            "errors": self.errors,
+            "retries": self.retries,
+            "shed": self.shed,
+            "deadline_failures": self.deadline_failures,
+            "restarts": self.restarts,
             "p50_latency_ms": self.latency_ms(50),
             "p99_latency_ms": self.latency_ms(99),
         }

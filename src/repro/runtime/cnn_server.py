@@ -19,6 +19,23 @@ Batches are padded to power-of-two buckets (rounded up to the program's DP
 shard count when sharded), so a drained queue of thousands of requests
 compiles at most ``len(buckets)`` times and :meth:`warmup` can pre-build
 every bucket from ShapeDtypeStructs before the first request arrives.
+
+Self-healing request plane
+--------------------------
+A compute exception no longer fails every co-batched request.  Both engines
+run batches through the shared resilient path (:func:`_classify_resilient`):
+transient failures retry with exponential backoff + seeded jitter
+(:class:`~repro.runtime.batching.RetryPolicy`); a batch that keeps failing
+is *bisected* to isolate the poison-pill request, so innocent requests still
+resolve and exactly the bad one fails.  The async plane additionally
+fast-fails requests whose ``deadline_ms`` expired before dispatch
+(:class:`~repro.runtime.batching.DeadlineExceeded` — no compute burned) and
+sheds load at admission with a ``retry_after_ms`` hint on
+:class:`AdmissionError`.  Every failure mode is a counter on ``metrics()``:
+``errors`` / ``retries`` / ``shed`` / ``deadline_failures``.  A
+:class:`~repro.runtime.faults.FaultInjector` passed as ``faults=`` drives
+all of these paths deterministically (see ``docs/serving_ops.md``); the
+supervisor tier above this module is :mod:`repro.runtime.supervisor`.
 """
 from __future__ import annotations
 
@@ -30,8 +47,10 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
-from repro.runtime import batching
-from repro.runtime.batching import AdmissionError  # re-export  # noqa: F401
+from repro.runtime import batching, faults
+from repro.runtime.batching import (  # re-exports  # noqa: F401
+    AdmissionError, DeadlineExceeded, RetryPolicy, WorkerUnavailable,
+)
 
 
 @dataclass
@@ -40,8 +59,9 @@ class CnnRequest:
     image: np.ndarray  # (H, W, C), model input layout
     label: int | None = None
     probs: np.ndarray | None = None
-    done: bool = False
+    done: bool = False  # resolved successfully (failed requests set .error)
     latency_ms: float = 0.0
+    error: Exception | None = None
 
 
 class _BucketedCompute:
@@ -50,13 +70,18 @@ class _BucketedCompute:
     sharded program always sees batch dims its mesh divides."""
 
     def __init__(self, program, max_batch: int = 8,
-                 buckets: tuple[int, ...] = ()):
+                 buckets: tuple[int, ...] = (),
+                 faults_injector: faults.FaultInjector | None = None):
         self.program = program
         if not buckets:
             buckets = batching.pow2_buckets(max_batch)
         dp = int(getattr(program, "dp_shards", 1) or 1)
         self.buckets = batching.round_up_buckets(buckets, dp)
         self.max_batch = self.buckets[-1]
+        self.faults = faults_injector
+        # every warmed (shape, dtype) spec, recorded so a supervisor can
+        # replay the warmup on a replacement worker before routing traffic
+        self.warmed: list[tuple[tuple[int, ...], str]] = []
 
     def warmup(self, in_shape: tuple[int, ...], dtype="float32") -> None:
         """Pre-compile AND prime every batch bucket: build the AOT
@@ -68,11 +93,16 @@ class _BucketedCompute:
             exe = self.program.executable_for(spec)
             jax.block_until_ready(exe(np.zeros((b, *in_shape),
                                                np.dtype(dtype))))
+        spec = (tuple(in_shape), str(np.dtype(dtype)))
+        if spec not in self.warmed:
+            self.warmed.append(spec)
 
-    def classify(self, images: list[np.ndarray]
+    def classify(self, images: list[np.ndarray], uids: tuple[int, ...] = ()
                  ) -> tuple[np.ndarray, np.ndarray]:
         """One padded bucket through the program -> (labels, probs) for the
         real lanes (padding lanes are computed and discarded)."""
+        if self.faults is not None:
+            self.faults.before_compute(uids)
         n = len(images)
         bucket = batching.bucket_for(self.buckets, n)
         x = batching.pad_batch(np.stack(images), bucket)
@@ -82,14 +112,60 @@ class _BucketedCompute:
         return np.argmax(logits, axis=-1), probs
 
 
+def _classify_resilient(compute: _BucketedCompute, reqs: list[CnnRequest],
+                        retry: batching.RetryPolicy
+                        ) -> tuple[list[tuple], int]:
+    """The resilient compute path (runs on the compute thread).
+
+    Returns ``(outcomes, retries)`` where ``outcomes[i]`` is
+    ``("ok", label, probs)`` or ``("err", exception)`` for ``reqs[i]``.
+    Failed attempts retry with backoff; a still-failing multi-request batch
+    bisects (within ``retry.max_splits``) to isolate the poison pill; a
+    singleton — or a sub-batch whose split budget ran out — fails
+    per-request.  :class:`~repro.runtime.faults.WorkerDeath` is NOT handled
+    here: the worker is dying, not the batch, so it propagates to the
+    engine's fatal path.
+    """
+    retries = 0
+
+    def solve(sub: list[CnnRequest], splits_left: int | None) -> list[tuple]:
+        nonlocal retries
+        err: Exception | None = None
+        for attempt in range(retry.max_retries + 1):
+            try:
+                labels, probs = compute.classify(
+                    [r.image for r in sub], uids=tuple(r.uid for r in sub)
+                )
+                return [("ok", int(labels[i]), probs[i])
+                        for i in range(len(sub))]
+            except faults.WorkerDeath:
+                raise
+            except Exception as e:
+                err = e
+                if attempt < retry.max_retries:
+                    retries += 1
+                    time.sleep(retry.backoff_ms(attempt) / 1e3)
+        if len(sub) > 1 and (splits_left is None or splits_left > 0):
+            nxt = None if splits_left is None else splits_left - 1
+            mid = len(sub) // 2
+            return solve(sub[:mid], nxt) + solve(sub[mid:], nxt)
+        return [("err", err)] * len(sub)
+
+    return solve(reqs, retry.max_splits), retries
+
+
 class CnnBatchEngine:
     """Queue -> bucketed batches -> MarvelProgram -> per-request results
     (synchronous plane; the caller drives ``step()``)."""
 
     def __init__(self, program, max_batch: int = 8,
                  buckets: tuple[int, ...] = (),
-                 max_pending: int | None = None):
-        self.compute = _BucketedCompute(program, max_batch, buckets)
+                 max_pending: int | None = None,
+                 faults: faults.FaultInjector | None = None,
+                 retry: batching.RetryPolicy | None = None):
+        self.compute = _BucketedCompute(program, max_batch, buckets,
+                                        faults_injector=faults)
+        self.retry = retry or batching.RetryPolicy()
         self.queue = batching.BoundedQueue(capacity=max_pending)
         self.results: dict[int, CnnRequest] = {}
         self._metrics = batching.EngineMetrics()
@@ -121,23 +197,36 @@ class CnnBatchEngine:
 
     def step(self) -> list[CnnRequest]:
         """Serve one batch: up to ``max_batch`` queued requests, padded to
-        the smallest bucket so the AOT cache hits."""
+        the smallest bucket so the AOT cache hits.
+
+        Compute exceptions are contained: the failing request(s) resolve
+        with ``.error`` set (after retry/bisection), everything else in the
+        batch succeeds, and the engine stays serviceable — ``step()`` only
+        raises for :class:`~repro.runtime.faults.WorkerDeath` (the worker
+        itself is gone, which a caller of ``run_until_drained`` must see).
+        """
         if not self.queue:
             return []
         t0 = time.perf_counter()
         reqs = self.queue.pop_up_to(self.max_batch)
-        labels, probs = self.compute.classify([r.image for r in reqs])
+        outcomes, retries = _classify_resilient(self.compute, reqs,
+                                                self.retry)
+        self._metrics.retries += retries
         bucket = batching.bucket_for(self.buckets, len(reqs))
         self._metrics.observe_batch(len(reqs), bucket)
         ms = (time.perf_counter() - t0) * 1e3
-        for i, req in enumerate(reqs):
-            req.label = int(labels[i])
-            req.probs = probs[i]
-            req.done = True
+        for req, out in zip(reqs, outcomes):
             req.latency_ms = ms
+            if out[0] == "err":
+                req.error = out[1]
+                self._metrics.errors += 1
+            else:
+                req.label = out[1]
+                req.probs = out[2]
+                req.done = True
+                self._metrics.completed += 1
+                self._metrics.observe_latency(ms)
             self.results[req.uid] = req
-            self._metrics.completed += 1
-            self._metrics.observe_latency(ms)
         return reqs
 
     @property
@@ -163,23 +252,36 @@ class AsyncCnnEngine:
     """The async serving tier: request plane decoupled from compute plane.
 
     ``submit()`` applies admission control (bounded over queued + in-flight
-    requests -> fast :class:`AdmissionError`, never unbounded memory), a
-    background batcher coalesces requests into pow-2 buckets — flushing on a
-    full bucket or on the coalesce deadline, whichever first — and one
-    compute thread runs the blocking jax dispatch so the event loop never
-    stalls.  The batcher never awaits compute: it hands each batch to the
-    compute thread and keeps coalescing, so coalescing and jax dispatch
-    pipeline.  The compute thread hands a *finished batch* back to the event
-    loop with ONE ``call_soon_threadsafe`` per flush, where every future in
-    the batch resolves, in submission order, to its :class:`CnnRequest` —
+    requests -> fast :class:`AdmissionError` carrying a ``retry_after_ms``
+    load-shedding hint, never unbounded memory), a background batcher
+    coalesces requests into pow-2 buckets — flushing on a full bucket or on
+    the coalesce deadline, whichever first — and one compute thread runs the
+    blocking jax dispatch so the event loop never stalls.  The batcher never
+    awaits compute: it hands each batch to the compute thread and keeps
+    coalescing, so coalescing and jax dispatch pipeline.  The compute thread
+    hands a *finished batch* back to the event loop with ONE
+    ``call_soon_threadsafe`` per flush, where every future in the batch
+    resolves, in submission order, to its :class:`CnnRequest` —
     batch-granular resolution, not per-request loop round-trips.
+
+    Failure semantics: requests whose ``deadline_ms`` expired before
+    dispatch fast-fail with :class:`DeadlineExceeded`; compute failures go
+    through retry/backoff + poison-pill bisection so only genuinely bad
+    requests fail; :class:`~repro.runtime.faults.WorkerDeath` (or
+    :meth:`kill`) fails every unresolved future with
+    :class:`WorkerUnavailable` so a supervisor can re-route with zero lost
+    requests.
     """
 
     def __init__(self, program, max_batch: int = 8,
                  buckets: tuple[int, ...] = (),
                  max_pending: int = 1024,
-                 max_delay_ms: float = 2.0):
-        self.compute = _BucketedCompute(program, max_batch, buckets)
+                 max_delay_ms: float = 2.0,
+                 faults: faults.FaultInjector | None = None,
+                 retry: batching.RetryPolicy | None = None):
+        self.compute = _BucketedCompute(program, max_batch, buckets,
+                                        faults_injector=faults)
+        self.retry = retry or batching.RetryPolicy()
         self.max_pending = max_pending
         self.max_delay_ms = max_delay_ms
         self._metrics = batching.EngineMetrics()
@@ -190,20 +292,24 @@ class AsyncCnnEngine:
         # admitted requests whose future has not resolved yet — queued,
         # held in the batcher's coalescing batch, or in the compute thread
         self._live_reqs = 0
+        self._unresolved: set = set()  # their asyncio futures (for kill())
+        self._killed: str | None = None
         self._uid = 0
 
     # -- lifecycle ----------------------------------------------------------
 
     async def start(self) -> "AsyncCnnEngine":
-        if self._batcher is None:
+        if self._batcher is None and self._killed is None:
             self._queue = asyncio.Queue()
             # one compute thread = the compute plane; jax dispatch serializes
             # there while the event loop keeps admitting requests
             self._pool = concurrent.futures.ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="cnn-compute"
             )
+            # bind the queue at creation: stop() nulls self._queue before
+            # the task's first step ever runs, so the task must not read it
             self._batcher = asyncio.get_running_loop().create_task(
-                self._run_batcher()
+                self._run_batcher(self._queue)
             )
         return self
 
@@ -219,6 +325,33 @@ class AsyncCnnEngine:
             self._pool.shutdown(wait=True)
             self._pool = None
 
+    def kill(self, reason: str = "killed") -> None:
+        """Abrupt worker death (the supervisor's eviction path and the fault
+        layer's death hook): cancel the batcher, drop the compute pool, and
+        fail every unresolved future with :class:`WorkerUnavailable` — a
+        supervisor re-routes them, so nothing accepted is silently lost."""
+        if self._killed is not None:
+            return
+        self._killed = reason
+        self._queue = None  # close the request plane
+        if self._batcher is not None:
+            self._batcher.cancel()
+            self._batcher = None
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+        err = WorkerUnavailable(f"worker killed: {reason}")
+        for fut in list(self._unresolved):
+            if not fut.done():
+                fut.set_exception(err)
+        self._unresolved.clear()
+        self._live_reqs = 0
+
+    @property
+    def is_alive(self) -> bool:
+        """True while the batcher task is running (not stopped or killed)."""
+        return self._batcher is not None and not self._batcher.done()
+
     async def __aenter__(self) -> "AsyncCnnEngine":
         return await self.start()
 
@@ -230,6 +363,13 @@ class AsyncCnnEngine:
     @property
     def pending(self) -> int:
         return self._queue.qsize() if self._queue is not None else 0
+
+    def _retry_after_hint_ms(self) -> float:
+        """Load-shedding hint: estimated drain time of the current backlog
+        (batches ahead x observed per-batch latency)."""
+        per_batch = self._metrics.latency_ms(50) or self.max_delay_ms
+        backlog = -(-max(self._live_reqs, 1) // self.compute.max_batch)
+        return per_batch * backlog
 
     def submit_nowait(self, image, *, uid: int | None = None,
                       deadline_ms: float | None = None) -> asyncio.Future:
@@ -245,9 +385,11 @@ class AsyncCnnEngine:
             # coalescing, or in the compute thread — so the bound holds end
             # to end even though the batcher pipelines batches instead of
             # awaiting each one
-            batching.admit_or_raise(self._live_reqs, self.max_pending)
+            batching.admit_or_raise(self._live_reqs, self.max_pending,
+                                    retry_after_ms=self._retry_after_hint_ms())
         except AdmissionError:
             self._metrics.rejected += 1
+            self._metrics.shed += 1
             raise
         loop = asyncio.get_running_loop()
         if uid is None:
@@ -259,6 +401,8 @@ class AsyncCnnEngine:
         deadline = None if deadline_ms is None else t0 + deadline_ms / 1e3
         self._queue.put_nowait((req, fut, t0, deadline))
         self._live_reqs += 1
+        self._unresolved.add(fut)
+        fut.add_done_callback(self._unresolved.discard)
         self._metrics.submitted += 1
         return fut
 
@@ -277,14 +421,32 @@ class AsyncCnnEngine:
 
     # -- batcher (coalescing) + compute plane -------------------------------
 
-    async def _run_batcher(self) -> None:
+    def _expired(self, item, loop) -> bool:
+        return item[3] is not None and item[3] <= loop.time()
+
+    def _fail_deadline(self, item) -> None:
+        """Fast-fail a request whose deadline expired before dispatch: no
+        compute is burned on an answer nobody is waiting for."""
+        req, fut, _, _ = item
+        self._live_reqs -= 1
+        self._metrics.deadline_failures += 1
+        err = DeadlineExceeded(
+            f"request uid={req.uid} missed its deadline before dispatch"
+        )
+        req.error = err
+        if not fut.done():
+            fut.set_exception(err)
+
+    async def _run_batcher(self, queue: asyncio.Queue) -> None:
         loop = asyncio.get_running_loop()
-        queue = self._queue  # stop() nulls self._queue before the sentinel
         closing = False
         while not closing:
             item = await queue.get()
             if item is None:
                 break
+            if self._expired(item, loop):
+                self._fail_deadline(item)
+                continue
             batch = [item]
             flush_at = loop.time() + self.max_delay_ms / 1e3
             if item[3] is not None:  # per-request deadline caps the window
@@ -307,6 +469,9 @@ class AsyncCnnEngine:
                     closing = True
                     deadline_flush = False  # shutdown, not a window expiry
                     break
+                if self._expired(nxt, loop):
+                    self._fail_deadline(nxt)
+                    continue
                 batch.append(nxt)
                 if nxt[3] is not None:
                     flush_at = min(flush_at, nxt[3])
@@ -321,46 +486,73 @@ class AsyncCnnEngine:
     def _dispatch(self, loop, batch, deadline_flush: bool) -> None:
         """Hand one coalesced batch to the compute thread and return
         immediately (the batcher keeps coalescing while compute runs)."""
-        images = [b[0].image for b in batch]
+        reqs = [b[0] for b in batch]
 
         def compute_then_resolve():
-            # compute thread: the blocking jax dispatch, then ONE
-            # call_soon_threadsafe hands the finished batch to the loop
+            # compute thread: the resilient blocking jax dispatch
+            # (retry/backoff + bisection), then ONE call_soon_threadsafe
+            # hands the finished batch to the loop
+            retries = 0
             try:
-                result, err = self.compute.classify(images), None
-            except Exception as e:
-                result, err = None, e
-            loop.call_soon_threadsafe(
-                self._resolve_batch, loop, batch, result, err, deadline_flush
-            )
+                outcomes, retries = _classify_resilient(
+                    self.compute, reqs, self.retry
+                )
+                err = None
+            except Exception as e:  # WorkerDeath or a catastrophic failure
+                outcomes, err = None, e
+            try:
+                loop.call_soon_threadsafe(
+                    self._resolve_batch, loop, batch, outcomes, retries, err,
+                    deadline_flush,
+                )
+            except RuntimeError:
+                pass  # loop closed during worker death; futures already dead
 
         fut = loop.run_in_executor(self._pool, compute_then_resolve)
         self._inflight.add(fut)
         fut.add_done_callback(self._inflight.discard)
 
-    def _resolve_batch(self, loop, batch, result, err,
+    def _resolve_batch(self, loop, batch, outcomes, retries, err,
                        deadline_flush: bool) -> None:
         """Event-loop callback: resolve a whole batch's futures (submission
         order within the batch) and record its metrics."""
+        if self._killed is not None:
+            return  # kill() already failed the futures; don't double-count
         self._live_reqs -= len(batch)
-        if err is not None:
-            for _, fut, _, _ in batch:
-                if not fut.done():
-                    fut.set_exception(err)
-            return
-        labels, probs = result
-        # counted with observe_batch (not on the error path) so the
-        # structural invariant loop_handoffs == batches stays exact
+        # EVERY dispatched batch is accounted here — success or failure —
+        # so the structural invariant loop_handoffs == batches stays exact
+        # across the error path and latency/occupancy never silently
+        # exclude failed batches
         self._metrics.loop_handoffs += 1
         bucket = batching.bucket_for(self.compute.buckets, len(batch))
         self._metrics.observe_batch(len(batch), bucket,
                                     deadline=deadline_flush)
+        self._metrics.retries += retries
+        if err is not None:
+            if isinstance(err, faults.WorkerDeath):
+                # the worker is gone, not the batch: kill() fails this
+                # batch's futures (and all other unresolved ones) with
+                # WorkerUnavailable so a supervisor re-routes them
+                self.kill(str(err))
+                return
+            for req, fut, _, _ in batch:
+                req.error = err
+                self._metrics.errors += 1
+                if not fut.done():
+                    fut.set_exception(err)
+            return
         now = loop.time()
-        for i, (req, fut, t0, _) in enumerate(batch):
-            req.label = int(labels[i])
-            req.probs = probs[i]
-            req.done = True
+        for (req, fut, t0, _), out in zip(batch, outcomes):
             req.latency_ms = (now - t0) * 1e3
+            if out[0] == "err":
+                req.error = out[1]
+                self._metrics.errors += 1
+                if not fut.done():
+                    fut.set_exception(out[1])
+                continue
+            req.label = out[1]
+            req.probs = out[2]
+            req.done = True
             self._metrics.completed += 1
             self._metrics.observe_latency(req.latency_ms)
             if not fut.done():
@@ -370,6 +562,19 @@ class AsyncCnnEngine:
 
     def warmup(self, in_shape: tuple[int, ...], dtype="float32") -> None:
         self.compute.warmup(in_shape, dtype)
+
+    def ping(self) -> concurrent.futures.Future:
+        """A no-op through the compute thread, returned as a concurrent
+        future.  The supervisor times this round-trip as the worker
+        heartbeat: it queues behind whatever the compute thread is doing,
+        so a hung or straggling worker shows up as a slow (or timed-out)
+        heartbeat."""
+        if self._pool is None:
+            raise WorkerUnavailable(
+                f"no compute pool (engine "
+                f"{'killed: ' + self._killed if self._killed else 'not started'})"
+            )
+        return self._pool.submit(lambda: None)
 
     @property
     def batches_run(self) -> int:

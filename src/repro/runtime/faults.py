@@ -1,0 +1,110 @@
+"""Deterministic fault injection for the serving tier.
+
+The control plane's failure handling — retry/backoff, poison-pill bisection,
+worker auto-recovery — is only trustworthy if it can be *driven* through its
+failure paths on demand.  A :class:`FaultInjector` sits on the compute plane
+(:class:`repro.runtime.cnn_server._BucketedCompute` calls
+:meth:`FaultInjector.before_compute` with the batch's request uids before
+every compute attempt) and raises according to a declarative
+:class:`FaultPlan`:
+
+* **one-shot** — fail the next N compute attempts with a transient
+  :class:`InjectedFault` (exercises retry/backoff: the retry succeeds);
+* **poison pill** — any attempt whose batch contains a poisoned uid fails,
+  every time (exercises bisection: the batch splits until the poisoned
+  request is isolated and fails alone);
+* **flaky rate** — each attempt fails with probability ``flaky_rate`` from a
+  seeded RNG, so chaos runs are reproducible;
+* **straggler** — the next N attempts sleep ``straggle_ms`` before
+  computing (exercises the supervisor's heartbeat/hang detection);
+* **worker death** — after ``die_after_attempts`` compute attempts, the
+  next attempt raises :class:`WorkerDeath`, which the async engine treats as
+  fatal: it kills itself, failing unresolved futures with
+  :class:`~repro.runtime.batching.WorkerUnavailable` so a supervisor can
+  re-route them (exercises auto-recovery with zero lost requests).
+
+Everything is deterministic given the plan and seed; ``injected`` counts
+what actually fired so tests can assert counters against the plan.
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Collection
+
+
+class InjectedFault(RuntimeError):
+    """A compute failure injected by a :class:`FaultPlan` (transient-looking:
+    indistinguishable from a real compute exception to the retry logic)."""
+
+
+class WorkerDeath(RuntimeError):
+    """Injected abrupt worker death.  The engine does NOT retry this — it is
+    not a property of the batch but of the worker, which kills itself."""
+
+
+@dataclass
+class FaultPlan:
+    """Declarative description of what to inject (all fields combinable)."""
+
+    fail_next: int = 0              # transient: fail the next N attempts
+    poison_uids: Collection[int] = ()  # any batch containing one fails
+    flaky_rate: float = 0.0         # P(fail) per attempt, seeded RNG
+    straggle_next: int = 0          # next N attempts sleep before computing
+    straggle_ms: float = 0.0
+    die_after_attempts: int | None = None  # attempts N+1... raise WorkerDeath
+    seed: int = 0
+
+
+class FaultInjector:
+    """Applies a :class:`FaultPlan` at the compute boundary.
+
+    One injector per worker (engines never share one): ``attempts`` counts
+    every compute attempt — including retries and bisection sub-batches —
+    which is exactly the unit the plan's ``fail_next`` / ``straggle_next`` /
+    ``die_after_attempts`` budgets are denominated in.
+    """
+
+    def __init__(self, plan: FaultPlan | None = None, **plan_kwargs):
+        self.plan = plan or FaultPlan(**plan_kwargs)
+        self.attempts = 0
+        self.injected: dict[str, int] = {
+            "one_shot": 0, "poison": 0, "flaky": 0, "straggle": 0, "death": 0,
+        }
+        self._rng = random.Random(self.plan.seed)
+        self._fail_budget = self.plan.fail_next
+        self._straggle_budget = self.plan.straggle_next
+        self._poison = frozenset(self.plan.poison_uids)
+
+    def before_compute(self, uids: Collection[int]) -> None:
+        """Called by the compute plane before every attempt; raises or sleeps
+        per the plan.  Order: death > straggle > one-shot > poison > flaky."""
+        self.attempts += 1
+        plan = self.plan
+        if (plan.die_after_attempts is not None
+                and self.attempts > plan.die_after_attempts):
+            self.injected["death"] += 1
+            raise WorkerDeath(
+                f"injected worker death after {plan.die_after_attempts} "
+                f"compute attempts"
+            )
+        if self._straggle_budget > 0:
+            self._straggle_budget -= 1
+            self.injected["straggle"] += 1
+            time.sleep(plan.straggle_ms / 1e3)
+        if self._fail_budget > 0:
+            self._fail_budget -= 1
+            self.injected["one_shot"] += 1
+            raise InjectedFault(
+                f"injected one-shot failure (attempt {self.attempts})"
+            )
+        hit = self._poison.intersection(uids)
+        if hit:
+            self.injected["poison"] += 1
+            raise InjectedFault(f"injected poison pill: uid(s) {sorted(hit)}")
+        if plan.flaky_rate > 0 and self._rng.random() < plan.flaky_rate:
+            self.injected["flaky"] += 1
+            raise InjectedFault(
+                f"injected flaky failure (attempt {self.attempts})"
+            )

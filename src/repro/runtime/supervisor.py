@@ -1,0 +1,432 @@
+"""Supervised serving: a fault-tolerant control plane over engine workers.
+
+One :class:`Supervisor` owns a model registry (``register()`` a
+MarvelProgram under a name, with N workers each) and keeps the fleet
+serving through worker failure:
+
+* **routing** — ``submit()`` round-robins over the model's healthy workers;
+  a request whose worker dies mid-flight comes back as
+  :class:`~repro.runtime.batching.WorkerUnavailable` and is transparently
+  re-routed (bounded by ``max_failovers``), so an *accepted* request is
+  never lost; a worker at admission capacity fails over to a sibling before
+  shedding surfaces to the client.
+* **health checks** — a heartbeat loop pings every worker's compute thread
+  (:meth:`AsyncCnnEngine.ping`) and feeds the round-trip into a per-worker
+  :class:`~repro.runtime.watchdog.StragglerWatchdog`; ``should_evict``
+  (consecutive straggling heartbeats), a timed-out heartbeat, or a dead
+  batcher task all trigger auto-recovery.
+* **auto-recovery** — a dead/hung worker is killed (failing its unresolved
+  futures into the re-route path above) and replaced by a fresh engine,
+  with the warmup replayed from the recorded ShapeDtypeStruct specs before
+  it takes traffic — the program's shared AOT cache makes the replay a
+  cache-hit, so restarts do not recompile.
+* **draining restarts** — ``restart_worker(name, drain=True)`` closes the
+  worker's admission, flushes every in-flight request, then swaps in the
+  replacement: a program hot-swap with zero dropped accepted requests.
+* **metrics export** — ``metrics()`` aggregates per-worker snapshots;
+  ``prometheus()`` renders the whole surface in Prometheus text format.
+
+The lifecycle mirrors the xinference ``WorkerActor`` shape (launch /
+terminate / recover-sub-pool); see ``docs/serving_ops.md`` for the ops
+runbook.  Fault paths are driven deterministically by
+:mod:`repro.runtime.faults` — pass ``faults=`` at ``register()`` (an
+injector shared by the model's workers, or a ``factory(worker_index)`` for
+per-worker plans).
+"""
+from __future__ import annotations
+
+import asyncio
+from dataclasses import dataclass, field
+
+from repro.runtime import batching
+from repro.runtime.batching import AdmissionError, WorkerUnavailable
+from repro.runtime.cnn_server import AsyncCnnEngine, CnnRequest
+from repro.runtime.watchdog import StragglerWatchdog
+
+
+@dataclass
+class WorkerHandle:
+    """One supervised engine: the unit of health tracking and restart."""
+
+    name: str
+    model: str
+    index: int
+    engine: AsyncCnnEngine
+    watchdog: StragglerWatchdog
+    state: str = "starting"  # starting|healthy|draining|restarting|stopped
+    restarts: int = 0
+    heartbeats: int = 0
+
+
+@dataclass
+class _ModelEntry:
+    """Registry row: everything needed to (re)spawn this model's workers."""
+
+    name: str
+    program: object
+    workers: int
+    engine_kwargs: dict
+    faults: object = None  # FaultInjector | factory(index) -> injector | None
+    warmup_specs: list[tuple[tuple[int, ...], str]] = field(
+        default_factory=list)
+
+
+class Supervisor:
+    """The serving control plane: registry + health loop + request router."""
+
+    def __init__(self, *,
+                 heartbeat_interval_ms: float = 20.0,
+                 hang_timeout_ms: float = 2_000.0,
+                 heartbeat_floor_ms: float = 25.0,
+                 straggler_threshold: float = 4.0,
+                 evict_after: int = 3,
+                 max_failovers: int = 8,
+                 pick_timeout_ms: float = 10_000.0):
+        self.heartbeat_interval_ms = heartbeat_interval_ms
+        self.hang_timeout_ms = hang_timeout_ms
+        # heartbeats are floored before the EWMA so an idle worker's ~0 ms
+        # round-trips don't make every normally-busy beat look straggling
+        self.heartbeat_floor_ms = heartbeat_floor_ms
+        self.straggler_threshold = straggler_threshold
+        self.evict_after = evict_after
+        self.max_failovers = max_failovers
+        self.pick_timeout_ms = pick_timeout_ms
+        self.workers: dict[str, WorkerHandle] = {}
+        self._models: dict[str, _ModelEntry] = {}
+        self._metrics = batching.EngineMetrics()  # control-plane counters
+        # counters folded in from engines retired by restarts, so the
+        # aggregate stays monotone across worker swaps
+        self._retired: dict[str, float] = {}
+        self.failovers = 0
+        self._health_task: asyncio.Task | None = None
+        self._rr: dict[str, int] = {}
+        self._uid = 0
+
+    # -- registry / lifecycle ----------------------------------------------
+
+    def register(self, name: str, program, *, workers: int = 1,
+                 warmup: tuple[int, ...] | None = None,
+                 warmup_dtype: str = "float32",
+                 faults=None, **engine_kwargs) -> None:
+        """Add ``program`` to the registry as model ``name`` with
+        ``workers`` engine workers.  ``warmup`` (the per-request input
+        shape) is recorded so every worker — including replacements spawned
+        by auto-recovery — is warmed before taking traffic."""
+        if name in self._models:
+            raise ValueError(f"model {name!r} already registered")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        entry = _ModelEntry(name=name, program=program, workers=workers,
+                            engine_kwargs=dict(engine_kwargs), faults=faults)
+        if warmup is not None:
+            entry.warmup_specs.append((tuple(warmup), warmup_dtype))
+        self._models[name] = entry
+
+    def _spawn_engine(self, entry: _ModelEntry, index: int) -> AsyncCnnEngine:
+        injector = entry.faults
+        if injector is not None and not hasattr(injector, "before_compute"):
+            injector = injector(index)  # per-worker factory
+        return entry.program.serve(mode="async", faults=injector,
+                                   **entry.engine_kwargs)
+
+    async def _bring_up(self, wh: WorkerHandle) -> None:
+        """Start + warm a (possibly replacement) engine, then open it for
+        routing."""
+        entry = self._models[wh.model]
+        await wh.engine.start()
+        for shape, dtype in entry.warmup_specs:
+            wh.engine.warmup(shape, dtype)
+        wh.watchdog = StragglerWatchdog(threshold=self.straggler_threshold,
+                                        evict_after=self.evict_after)
+        wh.heartbeats = 0
+        wh.state = "healthy"
+
+    async def start(self) -> "Supervisor":
+        if self._health_task is not None:
+            return self
+        if not self._models:
+            raise RuntimeError("no models registered")
+        for entry in self._models.values():
+            for i in range(entry.workers):
+                name = f"{entry.name}/{i}"
+                wh = WorkerHandle(
+                    name=name, model=entry.name, index=i,
+                    engine=self._spawn_engine(entry, i),
+                    watchdog=StragglerWatchdog(
+                        threshold=self.straggler_threshold,
+                        evict_after=self.evict_after),
+                )
+                self.workers[name] = wh
+                await self._bring_up(wh)
+        self._health_task = asyncio.get_running_loop().create_task(
+            self._health_loop()
+        )
+        return self
+
+    async def stop(self) -> None:
+        task, self._health_task = self._health_task, None
+        if task is not None:
+            # cancel until it sticks: 3.10's wait_for can swallow a cancel
+            # that lands on the same loop step a ping completes
+            # (bpo-37658), and the heartbeat pings constantly — one cancel
+            # is not guaranteed to terminate the loop
+            while not task.done():
+                task.cancel()
+                await asyncio.wait({task}, timeout=0.1)
+            if not task.cancelled():
+                task.exception()  # consume, so it never logs as unretrieved
+        for wh in self.workers.values():
+            if wh.engine.is_alive:
+                await wh.engine.stop()  # draining stop: flush everything
+            wh.state = "stopped"
+
+    async def __aenter__(self) -> "Supervisor":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- routing ------------------------------------------------------------
+
+    def _resolve_model(self, model: str | None) -> str:
+        if model is not None:
+            if model not in self._models:
+                raise KeyError(
+                    f"unknown model {model!r}; registered: "
+                    f"{sorted(self._models)}"
+                )
+            return model
+        if len(self._models) != 1:
+            raise ValueError(
+                f"pass model= explicitly; registered: {sorted(self._models)}"
+            )
+        return next(iter(self._models))
+
+    def healthy_workers(self, model: str | None = None) -> list[WorkerHandle]:
+        return [wh for wh in self.workers.values()
+                if (model is None or wh.model == model)
+                and wh.state == "healthy" and wh.engine.is_alive]
+
+    async def _pick(self, model: str) -> WorkerHandle:
+        """Round-robin over the model's healthy workers; when none is
+        healthy (mid-recovery), poll until one comes back or the pick
+        timeout expires."""
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + self.pick_timeout_ms / 1e3
+        while True:
+            healthy = self.healthy_workers(model)
+            if healthy:
+                i = self._rr[model] = self._rr.get(model, -1) + 1
+                return healthy[i % len(healthy)]
+            if loop.time() >= deadline:
+                raise WorkerUnavailable(
+                    f"no healthy worker for model {model!r} within "
+                    f"{self.pick_timeout_ms:.0f} ms"
+                )
+            await asyncio.sleep(self.heartbeat_interval_ms / 1e3)
+
+    async def submit(self, image, *, model: str | None = None,
+                     deadline_ms: float | None = None) -> CnnRequest:
+        """Route one request to a healthy worker and await its result.
+
+        A worker dying mid-flight (:class:`WorkerUnavailable`) re-routes the
+        request — the accepted request survives the crash; a worker at
+        admission capacity fails over to a sibling when one exists.  Genuine
+        request failures (compute errors after bisection, missed deadlines)
+        propagate to the caller: retrying those elsewhere would just fail
+        again."""
+        model = self._resolve_model(model)
+        uid, self._uid = self._uid, self._uid + 1
+        last_err: Exception | None = None
+        for _ in range(self.max_failovers + 1):
+            wh = await self._pick(model)
+            try:
+                return await wh.engine.submit(image, uid=uid,
+                                              deadline_ms=deadline_ms)
+            except WorkerUnavailable as e:
+                last_err = e
+                self.failovers += 1
+            except AdmissionError:
+                if len(self.healthy_workers(model)) <= 1:
+                    raise
+                self.failovers += 1
+        raise WorkerUnavailable(
+            f"request uid={uid} still unrouted after "
+            f"{self.max_failovers} failovers"
+        ) from last_err
+
+    async def submit_wave(self, images, *, model: str | None = None,
+                          return_exceptions: bool = False) -> list:
+        return await asyncio.gather(
+            *(self.submit(im, model=model) for im in images),
+            return_exceptions=return_exceptions,
+        )
+
+    # -- health + recovery --------------------------------------------------
+
+    async def _ping(self, engine: AsyncCnnEngine) -> float | None:
+        """Heartbeat round-trip through the worker's compute thread, in ms
+        (``None`` = timed out or pool gone: the worker is hung/dead).
+
+        Deliberately built on ``asyncio.wait`` rather than ``wait_for``:
+        3.10's ``wait_for`` can swallow the health task's cancellation when
+        it races a completing ping (bpo-37658), which would leave ``stop()``
+        awaiting a task that never exits."""
+        loop = asyncio.get_running_loop()
+        t0 = loop.time()
+        try:
+            fut = asyncio.wrap_future(engine.ping())
+        except (WorkerUnavailable, RuntimeError):
+            return None
+        try:
+            done, _ = await asyncio.wait(
+                {fut}, timeout=self.hang_timeout_ms / 1e3
+            )
+        except asyncio.CancelledError:
+            # the health task itself is being cancelled (stop()): propagate
+            fut.cancel()
+            raise
+        if not done:
+            fut.cancel()
+            return None  # hang timeout
+        try:
+            fut.result()
+        except (asyncio.CancelledError, WorkerUnavailable, RuntimeError):
+            # a concurrent kill() shut the pool and cancelled the ping
+            return None
+        return (loop.time() - t0) * 1e3
+
+    async def _health_loop(self) -> None:
+        while True:
+            await asyncio.sleep(self.heartbeat_interval_ms / 1e3)
+            for wh in list(self.workers.values()):
+                if wh.state != "healthy":
+                    continue  # draining/restarting workers are off-plane
+                if not wh.engine.is_alive:
+                    await self._recover(wh, "worker died")
+                    continue
+                dt_ms = await self._ping(wh.engine)
+                if dt_ms is None:
+                    await self._recover(wh, "heartbeat timed out (hung)")
+                    continue
+                wh.heartbeats += 1
+                wh.watchdog.observe(
+                    wh.heartbeats,
+                    max(dt_ms, self.heartbeat_floor_ms) / 1e3,
+                )
+                if wh.watchdog.should_evict:
+                    await self._recover(
+                        wh, f"{wh.watchdog.consecutive} consecutive "
+                            f"straggling heartbeats"
+                    )
+
+    async def _recover(self, wh: WorkerHandle, reason: str) -> None:
+        """Auto-recovery: kill the worker (its unresolved futures fail with
+        WorkerUnavailable and re-route via submit()), spawn + warm a
+        replacement, reopen routing."""
+        wh.state = "restarting"
+        wh.engine.kill(reason)
+        self._retire_counters(wh)
+        self._replay_specs(wh)
+        wh.engine = self._spawn_engine(self._models[wh.model], wh.index)
+        wh.restarts += 1
+        self._metrics.restarts += 1
+        await self._bring_up(wh)
+
+    def _replay_specs(self, wh: WorkerHandle) -> None:
+        """Fold the dead engine's actually-warmed specs into the registry so
+        the replacement replays them even if the caller warmed ad hoc."""
+        entry = self._models[wh.model]
+        for spec in wh.engine.compute.warmed:
+            if spec not in entry.warmup_specs:
+                entry.warmup_specs.append(spec)
+
+    def _retire_counters(self, wh: WorkerHandle) -> None:
+        """Keep the retiring engine's counters: a restart must never make
+        the aggregate go backwards."""
+        snap = wh.engine.metrics()
+        for k in self._SUMMED:
+            if k == "queue_depth":
+                continue  # gauge, not a counter; dies with the engine
+            self._retired[k] = self._retired.get(k, 0) + snap.get(k, 0)
+
+    async def restart_worker(self, name: str, *, drain: bool = True) -> None:
+        """Hot-swap one worker.  ``drain=True`` (the default) is the
+        zero-drop path: close admission, flush every accepted in-flight
+        request, then swap — nothing accepted is dropped or re-routed.
+        ``drain=False`` is an immediate kill: in-flight requests fail over
+        through ``submit()`` instead."""
+        wh = self.workers[name]
+        if drain:
+            wh.state = "draining"  # routing skips it; accepted work finishes
+            await wh.engine.stop()
+            self._retire_counters(wh)
+            self._replay_specs(wh)
+            wh.engine = self._spawn_engine(self._models[wh.model], wh.index)
+            wh.restarts += 1
+            self._metrics.restarts += 1
+            wh.state = "restarting"
+            await self._bring_up(wh)
+        else:
+            await self._recover(wh, "restart requested")
+
+    # -- observability ------------------------------------------------------
+
+    _SUMMED = ("submitted", "completed", "rejected", "batches",
+               "deadline_flushes", "full_flushes", "loop_handoffs", "errors",
+               "retries", "shed", "deadline_failures", "queue_depth")
+
+    def metrics(self) -> dict:
+        """Per-worker snapshots + the aggregate the fleet dashboards read.
+
+        Counters sum across workers; latency percentiles take the worst
+        worker (an upper bound — reservoirs don't merge exactly); the
+        supervisor adds its own ``restarts`` / ``failovers`` and the
+        healthy-worker gauge."""
+        per_worker = {}
+        for wh in self.workers.values():
+            snap = wh.engine.metrics()
+            snap["restarts"] = wh.restarts
+            snap["state"] = wh.state
+            per_worker[wh.name] = snap
+        agg: dict = {k: self._retired.get(k, 0) for k in self._SUMMED}
+        for snap in per_worker.values():
+            for k in self._SUMMED:
+                agg[k] += snap.get(k, 0)
+        agg["p50_latency_ms"] = max(
+            (s["p50_latency_ms"] for s in per_worker.values()), default=0.0)
+        agg["p99_latency_ms"] = max(
+            (s["p99_latency_ms"] for s in per_worker.values()), default=0.0)
+        agg["restarts"] = self._metrics.restarts
+        agg["failovers"] = self.failovers
+        agg["healthy_workers"] = len(self.healthy_workers())
+        agg["workers_total"] = len(self.workers)
+        return {"aggregate": agg, "workers": per_worker}
+
+    def prometheus(self) -> str:
+        """The whole metrics surface in Prometheus text exposition format:
+        aggregate samples unlabelled, per-worker samples labelled
+        ``{model=...,worker=...}``, plus a per-worker health gauge."""
+        m = self.metrics()
+        keys = list(m["aggregate"])
+        lines: list[str] = []
+        for key in keys:
+            lines.append(f"# TYPE marvel_serving_{key} gauge")
+            lines.append(f"marvel_serving_{key} {m['aggregate'][key]}")
+            for wname, snap in m["workers"].items():
+                if key not in snap:
+                    continue
+                model = self.workers[wname].model
+                lines.append(
+                    f'marvel_serving_{key}{{model="{model}",'
+                    f'worker="{wname}"}} {snap[key]}'
+                )
+        lines.append("# TYPE marvel_serving_worker_healthy gauge")
+        for wname, snap in m["workers"].items():
+            model = self.workers[wname].model
+            healthy = 1 if snap["state"] == "healthy" else 0
+            lines.append(
+                f'marvel_serving_worker_healthy{{model="{model}",'
+                f'worker="{wname}"}} {healthy}'
+            )
+        return "\n".join(lines) + "\n"
