@@ -63,3 +63,36 @@ print(f"\nmobilenetv1: class={prog_m.model_class}, extensions="
       f"{prog_m.report.recommended_extensions}")
 print(f"modeled v0->v4 speedup: rv32 {prog_m.report.rv32_speedup_v4:.2f}x, "
       f"tpu {prog_m.report.tpu_speedup_v4:.2f}x (separable path fused)")
+
+# LM classes serve through the continuous-batching tier: a slot-based
+# bucketed KV cache (optionally int8-quantized), per-step join/leave, and
+# one decode executable per length bucket (zero recompiles after warmup).
+# The transformer MLP's residual rides the matmul_epilogue acc_mac path,
+# so the dense_lm class profile recommends acc_mac alongside fusedmac/zol.
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.configs.registry import get_arch, smoke_variant
+from repro.models import transformer as T
+
+cfg = smoke_variant(get_arch("qwen3-8b")).replace(param_dtype="float32")
+run = RunConfig(seq_len=32, global_batch=4, mode="decode", attn_chunk=16)
+lm_params = T.init_params(jax.random.PRNGKey(2), cfg)
+prog_lm = marvel.compile(
+    lambda p, t: T.forward_lm(p, t, cfg, run)[0],
+    np.ones((1, 8), np.int32), params=lm_params, precompile=False)
+print(f"\nqwen3 (smoke): class={prog_lm.model_class}, extensions="
+      f"{prog_lm.report.recommended_extensions}")
+
+engine = prog_lm.serve(mode="lm_sync", cfg=cfg, run=run, slots=4,
+                       max_len=64, kv_quant="int8")
+engine.warmup()
+for uid in range(6):
+    engine.submit([(uid * 7 + i) % (cfg.vocab - 1) + 1 for i in range(5)],
+                  uid=uid, max_new_tokens=8)
+done = engine.run_until_drained()
+m = engine.metrics()
+print(f"LM tier: {len(done)} sequences, {m['tokens_total']} tokens, "
+      f"{m['tokens_per_s']:.0f} tok/s, "
+      f"{m['compile_misses']} compiles (0 after warmup), "
+      f"kv_cache={m['kv_cache_bytes']} bytes ({m['kv_quant']})")

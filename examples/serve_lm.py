@@ -1,19 +1,30 @@
-"""Batched serving driver (deliverable b): continuous batching over decode
-slots, greedy sampling, stateful KV/recurrent caches.
+"""LM serving tier: continuous batching over a slot-based bucketed KV
+cache, through the deployable artifact (``marvel.compile`` ->
+``prog.serve(mode="lm")``).
 
-    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-8b --requests 12
-Works for every arch family (try --arch rwkv6-1.6b for the attention-free
-state-based decode, or --arch whisper-tiny for enc-dec with cross-attention).
+    PYTHONPATH=src python examples/serve_lm.py --requests 12
+    PYTHONPATH=src python examples/serve_lm.py --kv-quant int8
+    PYTHONPATH=src python examples/serve_lm.py --supervised --workers 2
+
+Sequences join and leave the running batch per decode step (no wave
+barriers); finished slots are reclaimed immediately; every
+``(bucket_len, slots)`` executable is compiled once at warmup and shared —
+including across supervised replacement workers — so the engine serves any
+arrival pattern with zero recompiles.  The legacy caller-driven wave loop
+lives on in ``repro.runtime.server.ServeEngine`` (see
+``python -m repro.launch.serve --arch ... `` without ``--lm``).
 """
 import argparse
+import asyncio
 import time
 
 import jax
+import numpy as np
 
-from repro.configs import get_arch, smoke_variant
+from repro import marvel
 from repro.configs.base import RunConfig
+from repro.configs.registry import get_arch, smoke_variant
 from repro.models import transformer as T
-from repro.runtime.server import Request, ServeEngine
 
 
 def main():
@@ -22,35 +33,67 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--kv-quant", choices=["int8"], default=None)
+    ap.add_argument("--supervised", action="store_true")
+    ap.add_argument("--workers", type=int, default=2)
     args = ap.parse_args()
 
-    cfg = smoke_variant(get_arch(args.arch))
-    run = RunConfig(seq_len=128, global_batch=args.slots, mode="decode",
-                    attn_chunk=32, ssm_chunk=32, wkv_chunk=16)
+    cfg = smoke_variant(get_arch(args.arch)).replace(param_dtype="float32")
+    run = RunConfig(seq_len=32, global_batch=args.slots, mode="decode",
+                    attn_chunk=16)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    frames = None
-    if cfg.family == "enc_dec":
-        frames = jax.random.normal(
-            jax.random.PRNGKey(1), (args.slots, cfg.n_frames, cfg.d_model)
-        ).astype("bfloat16")
-    engine = ServeEngine(params, cfg, run, batch_slots=args.slots,
-                         max_len=128, frames=frames)
-    reqs = []
-    for uid in range(args.requests):
-        r = Request(uid=uid,
-                    prompt=[(uid * 7 + i) % (cfg.vocab - 1) + 1
-                            for i in range(4)],
-                    max_new_tokens=args.max_new)
-        reqs.append(r)
-        engine.submit(r)
-    t0 = time.time()
-    engine.run_until_drained()
-    dt = time.time() - t0
-    done = sum(r.done for r in reqs)
-    toks = sum(len(r.generated) for r in reqs)
-    print(f"{done}/{args.requests} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s on 1 CPU core, {args.slots} slots)")
-    print("sample generation:", reqs[0].generated)
+    prog = marvel.compile(
+        lambda p, t: T.forward_lm(p, t, cfg, run)[0],
+        np.ones((1, 8), np.int32), params=params, precompile=False)
+    print(f"class={prog.model_class}, "
+          f"extensions={prog.report.recommended_extensions}")
+
+    prompts = [[(uid * 7 + i) % (cfg.vocab - 1) + 1 for i in range(5)]
+               for uid in range(args.requests)]
+    lm_kwargs = dict(cfg=cfg, run=run, slots=args.slots,
+                     max_len=args.max_len, kv_quant=args.kv_quant)
+
+    if args.supervised:
+        from repro.runtime.supervisor import Supervisor
+
+        async def fleet():
+            sup = Supervisor()
+            sup.register(args.arch, prog, workers=args.workers, mode="lm",
+                         warmup=(), **lm_kwargs)
+            async with sup:
+                t0 = time.perf_counter()
+                out = await sup.submit_wave(
+                    prompts, max_new_tokens=args.max_new)
+                dt = time.perf_counter() - t0
+                agg = sup.metrics()["aggregate"]
+                print(f"{len(out)} sequences on {agg['healthy_workers']} "
+                      f"workers in {dt:.2f}s; fleet "
+                      f"{agg['tokens_per_s']:.0f} tok/s, ttft p99 "
+                      f"{agg['ttft_p99_ms']:.1f} ms, compile_misses "
+                      f"{agg['compile_misses']} (shared exec cache)")
+                print("sample generation:", out[0].generated)
+
+        asyncio.run(fleet())
+        return
+
+    engine = prog.serve(mode="lm_sync", **lm_kwargs)
+    engine.warmup()
+    for uid, p in enumerate(prompts):
+        engine.submit(p, uid=uid, max_new_tokens=args.max_new)
+    t0 = time.perf_counter()
+    done = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    m = engine.metrics()
+    toks = m["tokens_total"]
+    print(f"{len(done)}/{args.requests} sequences, {toks} tokens in "
+          f"{dt:.2f}s ({toks / dt:.0f} tok/s, {args.slots} slots/bucket, "
+          f"kv_quant={m['kv_quant']}, slot_reuses={m['kv_slot_reuses']}, "
+          f"{m['compile_misses']} compiles — 0 after warmup)")
+    print(f"ttft p50/p99: {m['ttft_p50_ms']:.1f}/{m['ttft_p99_ms']:.1f} ms; "
+          f"inter-token p50/p99: {m['intertoken_p50_ms']:.2f}/"
+          f"{m['intertoken_p99_ms']:.2f} ms")
+    print("sample generation:", done[0].generated)
 
 
 if __name__ == "__main__":

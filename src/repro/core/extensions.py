@@ -27,7 +27,7 @@ in eager execution trace time and call time coincide, so every row is
   v3+    fusedmac   matmul_epilogue,        matmul_epilogue.py,      trace
                     sep_block               depthwise_conv.py (CNN)
   v3+    acc_mac    (rides fused_conv /     fused_conv.py,           trace
-                    matmul_epilogue)        matmul_epilogue.py (CNN)
+                    matmul_epilogue)        matmul_epilogue.py
   v4     zol        flash_attention,        flash_attention.py,      trace
                     wkv_chunk, ssm_chunk    wkv_chunk.py
 
@@ -44,12 +44,16 @@ epilogue machinery, so it rides with ``fusedmac`` at v3+.
 ``pool`` (v2+, cnn) is the windowed-reduce unit: int8/fp32 max/avg pooling
 with the ``1/k^2`` rescale fused in-register, plus the global-avg reduce —
 the op family the residual CNNs (ResNet50, DenseNet121) were still shipping
-to the XLA baseline.  ``acc_mac`` (v3+, cnn) maps no pattern of its own: it
-is the residual-add accumulate of the ``fused_conv``/``matmul_epilogue``
-epilogues (a skip connection added on the accumulator tile before the
-activation, so the conv/GEMM output never round-trips HBM just to be
-added); the profiler records its sites as ``acc_mac`` pseudo-sites and the
-cost model credits ``acc_bytes_saved`` from v3.
+to the XLA baseline.  ``acc_mac`` (v3+, cnn and the LM classes) maps no
+pattern of its own: it is the residual-add accumulate of the
+``fused_conv``/``matmul_epilogue`` epilogues (a skip connection added on
+the accumulator tile before the activation, so the conv/GEMM output never
+round-trips HBM just to be added).  CNNs hit it through ``fused_conv``;
+transformers route the block skip-connection through the MLP
+out-projection's ``matmul_epilogue``, so every decoder layer's residual
+add rides the GEMM epilogue too.  The profiler records its sites as
+``acc_mac`` pseudo-sites and the cost model credits ``acc_bytes_saved``
+from v3.
 
 Each extension names a dispatch *pattern* and the backends that implement it:
 ``ref`` (pure jnp, algorithmically fused — used on CPU and as oracle),
@@ -119,7 +123,8 @@ EXTENSIONS: dict[str, Extension] = {
             (),  # rides the fused_conv / matmul_epilogue epilogues
             "residual-add accumulate folded into the conv/GEMM epilogue "
             "(skip connections without an HBM round-trip)",
-            ("cnn",),
+            ("cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm",
+             "enc_dec_lm"),
         ),
         Extension(
             "fusedmac",

@@ -220,7 +220,7 @@ def _pallas_residual_rmsnorm(res, x, scale, eps=1e-6):
 
 def _pallas_flash_attention(q, k, v, *, causal=True, q_offset=0,
                             impl="chunked", chunk=512, window=None,
-                            kv_len=None):
+                            kv_len=None, k_scale=None, v_scale=None):
     B, Sq, K, G, dh = q.shape
     dv = v.shape[-1]
     # kernel covers the self-attention fast path; everything else -> ref
@@ -230,10 +230,12 @@ def _pallas_flash_attention(q, k, v, *, causal=True, q_offset=0,
     # non-causal with ragged KV would let zero-padded keys contribute
     pad_unsafe = (not causal) and (Skv % bk != 0)
     if (window is not None or kv_len is not None or Sq == 1 or dh != dv
-            or pad_unsafe):
+            or pad_unsafe or k_scale is not None):
+        # int8 KV (k_scale set) rides the ref path: decode is Sq==1 anyway
         return _flash_attention_ref(
             q, k, v, causal=causal, q_offset=q_offset, impl=impl,
             chunk=chunk, window=window, kv_len=kv_len,
+            k_scale=k_scale, v_scale=v_scale,
         )
     # flatten (B, K, G) -> BH; repeat kv per group
     qf = q.transpose(0, 2, 3, 1, 4).reshape(B * K * G, Sq, dh)

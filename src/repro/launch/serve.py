@@ -1,6 +1,17 @@
 """Serving launcher: LM continuous batching, or the CNN async serving tier.
 
-LM decode (continuous batching over decode slots)::
+LM continuous-batching tier (marvel.compile -> slot-based KV manager ->
+per-step join/leave engine; ``--kv-quant int8`` for the quantized cache)::
+
+    python -m repro.launch.serve --arch qwen3-8b --smoke --lm --requests 8
+
+Supervised LM tier (fault-tolerant control plane, N workers, Prometheus
+snapshot on exit; see docs/serving_ops.md)::
+
+    python -m repro.launch.serve --arch qwen3-8b --smoke --lm \
+        --supervised --workers 2
+
+Legacy LM wave loop (caller-driven ServeEngine, any arch family)::
 
     python -m repro.launch.serve --arch qwen3-8b --smoke --requests 8
 
@@ -8,7 +19,7 @@ CNN async tier (marvel.compile -> shard over local devices -> async engine)::
 
     python -m repro.launch.serve --cnn lenet5 --requests 64 --max-batch 8
 
-Supervised CNN tier (fault-tolerant control plane; see docs/serving_ops.md)::
+Supervised CNN tier::
 
     python -m repro.launch.serve --cnn lenet5 --supervised --workers 2
 """
@@ -54,6 +65,73 @@ def serve_lm(args) -> None:
     print(f"served {args.requests} requests ({args.max_new} tokens each) "
           f"in {dt:.1f}s with {args.slots} slots")
     print(json.dumps(engine.metrics(), indent=1))
+
+
+def lm_prompts(vocab: int, n: int) -> list[list[int]]:
+    """The launcher's deterministic prompt wave."""
+    return [[(uid * 7 + i) % (vocab - 1) + 1 for i in range(5)]
+            for uid in range(n)]
+
+
+def serve_lm_continuous(args) -> None:
+    """The LM serving tier: continuous batching over a bucketed KV-slot
+    pool, optionally supervised (``--supervised --workers N``)."""
+    from repro import marvel
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    run = RunConfig(seq_len=32, global_batch=args.slots, mode="decode",
+                    attn_chunk=16)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    x = np.ones((1, 8), np.int32)
+    prog = marvel.compile(lambda p, t: T.forward_lm(p, t, cfg, run)[0], x,
+                          params=params, precompile=False)
+    lm_kwargs = dict(cfg=cfg, run=run, slots=args.slots,
+                     max_len=args.max_len, kv_quant=args.kv_quant)
+    prompts = lm_prompts(cfg.vocab, args.requests)
+
+    if args.supervised:
+        from repro.runtime.supervisor import Supervisor
+
+        async def main() -> str:
+            sup = Supervisor()
+            sup.register(args.arch, prog, workers=args.workers, mode="lm",
+                         warmup=(), **lm_kwargs)
+            async with sup:
+                t0 = time.perf_counter()
+                results = await sup.submit_wave(
+                    prompts, max_new_tokens=args.max_new)
+                dt = time.perf_counter() - t0
+                toks = sum(len(r.generated) for r in results)
+                agg = sup.metrics()["aggregate"]
+                print(f"served {len(results)} sequences ({toks} tokens) "
+                      f"across {agg['healthy_workers']} supervised LM "
+                      f"worker(s) in {dt:.2f}s")
+                return sup.prometheus()
+
+        print(asyncio.run(main()), end="")
+        return
+
+    engine = prog.serve(mode="lm", **lm_kwargs)
+
+    async def main() -> dict:
+        async with engine:
+            engine.warmup()
+            t0 = time.perf_counter()
+            results = await engine.submit_wave(
+                prompts, max_new_tokens=args.max_new)
+            dt = time.perf_counter() - t0
+            toks = sum(len(r.generated) for r in results)
+            m = engine.metrics()
+            print(f"served {len(results)} sequences ({toks} tokens) in "
+                  f"{dt:.2f}s — {m['tokens_per_s']:.1f} tok/s busy, "
+                  f"{m['compile_misses']} compiles "
+                  f"(0 after warmup), kv_quant={m['kv_quant']}")
+            print("sample generation:", results[0].generated)
+            return m
+
+    print(json.dumps(asyncio.run(main()), indent=1, default=str))
 
 
 def random_images(in_shape, n: int, seed: int = 0) -> list[np.ndarray]:
@@ -132,18 +210,30 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--lm", action="store_true",
+                    help="serve --arch through the continuous-batching LM "
+                         "tier (slot-based KV manager) instead of the "
+                         "legacy wave loop")
+    ap.add_argument("--max-len", type=int, default=64,
+                    help="largest KV length bucket (with --lm)")
+    ap.add_argument("--kv-quant", choices=["int8"], default=None,
+                    help="quantize the KV cache (with --lm)")
     ap.add_argument("--supervised", action="store_true",
-                    help="run the CNN tier under the fault-tolerant "
-                         "supervisor (prints Prometheus metrics on exit)")
+                    help="run the tier under the fault-tolerant supervisor "
+                         "(prints Prometheus metrics on exit)")
     ap.add_argument("--workers", type=int, default=2,
                     help="supervised engine workers (with --supervised)")
     args = ap.parse_args(argv)
-    if args.supervised and not args.cnn:
-        ap.error("--supervised requires --cnn")
+    if args.supervised and not (args.cnn or args.lm):
+        ap.error("--supervised requires --cnn or --lm")
+    if args.lm and not args.arch:
+        ap.error("--lm requires --arch")
     if (args.cnn is None) == (args.arch is None):
         ap.error("pass exactly one of --arch (LM) or --cnn (CNN tier)")
     if args.cnn:
         serve_cnn(args)
+    elif args.lm:
+        serve_lm_continuous(args)
     else:
         serve_lm(args)
 

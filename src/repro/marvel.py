@@ -98,8 +98,14 @@ class MarvelProgram:
     cache_hits: int = 0
     cache_misses: int = 0
     mesh: Any = None  # set by shard(); executables compile against it
+    # the bound (possibly fake-quantized) parameter pytree, kept so
+    # serve(mode="lm") can build decode engines without re-threading params
+    bound_params: Any = field(default=None, repr=False)
     _input_rule: Callable | None = field(default=None, repr=False)
     _cache: dict = field(default_factory=dict, repr=False)
+    # (bucket_len, slots, kv_quant) -> jitted decode step, shared by every
+    # LM engine of this program so replacement workers warm from cache hits
+    _lm_exec_cache: dict = field(default_factory=dict, repr=False)
 
     @property
     def model_class(self) -> str:
@@ -224,9 +230,9 @@ class MarvelProgram:
         return len(self._cache)
 
     def serve(self, mode: str = "sync", **engine_kwargs):
-        """A batch-inference engine over this artifact (CNN classifiers).
+        """A serving engine over this artifact.
 
-        ``mode="sync"`` returns the caller-driven
+        CNN classifiers: ``mode="sync"`` returns the caller-driven
         :class:`~repro.runtime.cnn_server.CnnBatchEngine`; ``mode="async"``
         returns the :class:`~repro.runtime.cnn_server.AsyncCnnEngine`
         serving tier (``await engine.submit(x)``).  Both drive ``__call__``
@@ -235,19 +241,54 @@ class MarvelProgram:
         buckets round up to ``dp_shards`` and batches dispatch SPMD across
         the mesh.
 
-        Both engines accept ``retry=`` (a
+        LM classes (``*_lm``): ``mode="lm"`` returns the continuous-batching
+        :class:`~repro.runtime.lm_server.AsyncLmEngine` (``await
+        engine.submit(prompt)``); ``mode="lm_sync"`` the caller-driven
+        :class:`~repro.runtime.lm_server.ContinuousBatchEngine`.  Both need
+        ``cfg=``/``run=`` (the model's Arch/RunConfig) and take the bucketed
+        KV-cache knobs (``slots``, ``max_len`` or ``bucket_lens``,
+        ``kv_quant="int8"``); the program's resolved extension table is
+        baked into the decode executables, and engines share the program's
+        LM exec cache so replacement workers never recompile.
+
+        All engines accept ``retry=`` (a
         :class:`~repro.runtime.batching.RetryPolicy`: backoff + poison-pill
-        bisection) and ``faults=`` (a
+        bisection / eviction-replay) and ``faults=`` (a
         :class:`~repro.runtime.faults.FaultInjector` for drills).  For
         fault-tolerant deployments, wrap programs in a
         :class:`~repro.runtime.supervisor.Supervisor` — supervised workers,
         health checks, auto-recovery, draining restarts — rather than
         serving a bare engine; semantics in ``docs/serving_ops.md``.
         """
+        if mode in ("lm", "lm_sync"):
+            if not (self.model_class.endswith("_lm")
+                    or self.model_class == "unknown"):
+                raise NotImplementedError(
+                    f"serve(mode={mode!r}) is the LM tier; this program is "
+                    f"{self.model_class!r}"
+                )
+            from repro.runtime.lm_server import (
+                AsyncLmEngine, ContinuousBatchEngine,
+            )
+
+            params = engine_kwargs.pop("params", None)
+            if params is None:
+                params = self.bound_params
+            if params is None:
+                raise ValueError(
+                    "serve(mode='lm') needs the parameter pytree: pass "
+                    "params= to marvel.compile() or to serve()"
+                )
+            cls = AsyncLmEngine if mode == "lm" else ContinuousBatchEngine
+            return cls(params, engine_kwargs.pop("cfg"),
+                       engine_kwargs.pop("run"), table=self.table,
+                       exec_cache=self._lm_exec_cache, program=self,
+                       **engine_kwargs)
         if self.model_class != "cnn":
             raise NotImplementedError(
-                f"serve() currently covers the cnn model class; this program "
-                f"is {self.model_class!r} (use repro.runtime.server for LMs)"
+                f"serve() covers the cnn class (mode='sync'/'async') and LM "
+                f"classes (mode='lm'/'lm_sync'); this program is "
+                f"{self.model_class!r}"
             )
         from repro.runtime.cnn_server import AsyncCnnEngine, CnnBatchEngine
 
@@ -360,6 +401,7 @@ def compile(fn: Callable, *example_args, level: str = "v4",
         quantized=bool(quantize),
         quant_stats=quant_stats,
         rewrite_baked=do_rewrite and rewrite_ok,
+        bound_params=bound_params if params is not None else None,
     )
 
     # 6) AOT-lower the example bucket now (deploy-time compile counts as the

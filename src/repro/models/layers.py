@@ -106,15 +106,25 @@ ACTS = {
 }
 
 
-def _matmul_epilogue_ref(x, w, b, act):
+def _matmul_epilogue_ref(x, w, b, act, residual=None):
     y = jnp.einsum("...d,df->...f", x, w)
     if b is not None:
         y = y + b
+    if residual is not None:
+        y = y + residual
     return ACTS[act](y)
 
 
-def matmul_epilogue(x, w, b=None, act="none"):
-    """fusedmac analogue: GEMM + bias + activation as one pattern."""
+def matmul_epilogue(x, w, b=None, act="none", residual=None):
+    """fusedmac analogue: GEMM + bias + activation as one pattern.
+
+    ``residual`` rides the acc_mac path: the skip tensor is added on the
+    accumulator tile inside the GEMM epilogue (must be passed by keyword so
+    the profiler credits the fused skip-add).
+    """
+    if residual is not None:
+        return dispatch.call("matmul_epilogue", _matmul_epilogue_ref, x, w, b,
+                             act, residual=residual)
     return dispatch.call("matmul_epilogue", _matmul_epilogue_ref, x, w, b, act)
 
 
@@ -366,8 +376,28 @@ def _local_attention(q, k, v, *, window, q_offset=0):
     return out[:, :Sq]
 
 
+def quantize_kv_int8(x):
+    """Per-head symmetric int8 for KV-cache storage.
+
+    x: (..., dh) -> (int8 codes same shape, f32 scales (...,)). One scale per
+    (position, head) row — amax over d_head / 127 — so dequant is a rank-1
+    broadcast inside the attention kernel.
+    """
+    a = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(a, 1e-8) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8), scale
+
+
 def _flash_attention_ref(q, k, v, *, causal, q_offset=0, impl="chunked",
-                         chunk=512, window=None, kv_len=None):
+                         chunk=512, window=None, kv_len=None,
+                         k_scale=None, v_scale=None):
+    if k_scale is not None:
+        # int8 KV cache: k/v arrive as int8 codes with per-(position, head)
+        # f32 scales. Dequantize here — inside the dispatched attention
+        # pattern — so the cache stays int8 in HBM up to the kernel boundary.
+        k = (k.astype(jnp.float32) * k_scale[..., None]).astype(q.dtype)
+        v = (v.astype(jnp.float32) * v_scale[..., None]).astype(q.dtype)
     if window is not None:
         return _local_attention(q, k, v, window=window, q_offset=q_offset)
     if impl == "naive":
@@ -467,7 +497,12 @@ def attention_decode(p, x, cache, cache_index, cfg, *, window=None):
     """Single-token decode. x: (B,1,d); cache: {"k","v"} (B,Smax,K,dh).
 
     Returns (out, new_cache). With ``window`` the cache is a rolling buffer of
-    size window (hymba SWA); otherwise a full-length buffer.
+    size window (hymba SWA); otherwise a full-length buffer. ``cache_index``
+    is per-lane, so slot-indexed lanes at different sequence positions decode
+    together in one batch (continuous batching) — stale data past a lane's
+    ``kv_len`` never contributes. If the cache carries ``k_scale``/``v_scale``
+    entries the k/v pools are int8: new k/v are quantized per (position, head)
+    on write and dequantized inside the attention kernel path.
     """
     B = x.shape[0]
     H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
@@ -475,19 +510,30 @@ def attention_decode(p, x, cache, cache_index, cfg, *, window=None):
     q, k, v = _project_qkv(p, x, cfg, positions)
     Smax = cache["k"].shape[1]
     slot = cache_index % Smax if window is not None else cache_index
-    k_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
-        cache["k"], k, slot
-    )
-    v_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
-        cache["v"], v, slot
-    )
+    quantized = "k_scale" in cache
+    if quantized:
+        k_w, k_s = quantize_kv_int8(k)  # (B,1,K) scales
+        v_w, v_s = quantize_kv_int8(v)
+    else:
+        k_w, v_w = k, v
+    upd3 = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))
+    k_cache = upd3(cache["k"], k_w, slot)
+    v_cache = upd3(cache["v"], v_w, slot)
+    new_cache = {"k": k_cache, "v": v_cache}
+    attn_kw = {}
+    if quantized:
+        upd2 = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0)))
+        new_cache["k_scale"] = upd2(cache["k_scale"], k_s, slot)
+        new_cache["v_scale"] = upd2(cache["v_scale"], v_s, slot)
+        attn_kw = {"k_scale": new_cache["k_scale"],
+                   "v_scale": new_cache["v_scale"]}
     kv_len = jnp.minimum(cache_index + 1, Smax)
     qg = q.reshape(B, 1, K, H // K, dh)
     out = attention_core(qg, k_cache, v_cache, causal=False, impl="naive",
-                         kv_len=kv_len)
+                         kv_len=kv_len, **attn_kw)
     out = out.reshape(B, 1, H * dh)
     out = matmul_epilogue(out, p["wo"], p.get("bo"))
-    return out, {"k": k_cache, "v": v_cache}
+    return out, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -514,12 +560,20 @@ def mlp_init(key, cfg, dtype, d_ff=None):
     return p
 
 
-def mlp(p, x, cfg):
+def mlp(p, x, cfg, residual=None):
+    """MLP block. ``residual`` (the pre-block stream) fuses the skip-add into
+    the out-projection's GEMM epilogue (acc_mac) instead of a standalone
+    elementwise add — callers then use the return value directly as the new
+    residual stream."""
     if cfg.mlp_gated:
         g = matmul_epilogue(x, p["wg"], None, cfg.act)  # fusedmac pattern
         u = mac_matmul(x, p["wu"])
         h = shd(g * u, "batch", "seq", "mlp")
+        if residual is not None:
+            return shd(matmul_epilogue(h, p["wd"], residual=residual),
+                       "batch", "seq", None)
         return shd(mac_matmul(h, p["wd"]), "batch", "seq", None)
     h = matmul_epilogue(x, p["wu"], p.get("bu"), cfg.act)
     h = shd(h, "batch", "seq", "mlp")
-    return shd(matmul_epilogue(h, p["wd"], p.get("bd")), "batch", "seq", None)
+    return shd(matmul_epilogue(h, p["wd"], p.get("bd"), residual=residual),
+               "batch", "seq", None)

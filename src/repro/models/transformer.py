@@ -170,7 +170,7 @@ def _block_dense(p, x, cfg, run, positions, causal=True):
         attn_impl=run.attn_impl, chunk=run.attn_chunk,
     )
     x, h2 = L.residual_rmsnorm(x, a, p["ln2"], cfg.norm_eps)
-    x = x + L.mlp(p["mlp"], h2, cfg)
+    x = L.mlp(p["mlp"], h2, cfg, residual=x)  # acc_mac skip-add
     return x, jnp.zeros((), jnp.float32)
 
 
@@ -198,7 +198,7 @@ def _block_mla_dense(p, x, cfg, run, positions):
         attn_impl=run.attn_impl, chunk=run.attn_chunk,
     )
     x, h2 = L.residual_rmsnorm(x, a, p["ln2"], cfg.norm_eps)
-    x = x + L.mlp(p["mlp"], h2, cfg)
+    x = L.mlp(p["mlp"], h2, cfg, residual=x)  # acc_mac skip-add
     return x, jnp.zeros((), jnp.float32)
 
 
@@ -215,7 +215,7 @@ def _block_hybrid(p, x, cfg, run, positions):
         + L.rms_norm(s, p["ssm_out_norm"], cfg.norm_eps)
     )
     x, h2 = L.residual_rmsnorm(x, mix, p["ln2"], cfg.norm_eps)
-    x = x + L.mlp(p["mlp"], h2, cfg)
+    x = L.mlp(p["mlp"], h2, cfg, residual=x)  # acc_mac skip-add
     return x, jnp.zeros((), jnp.float32)
 
 
@@ -231,7 +231,7 @@ def _block_encdec_dec(p, x, enc_out, cfg, run, positions):
     c = L.cross_attention(p["xattn"], h, enc_kv, cfg,
                           attn_impl=run.attn_impl, chunk=run.attn_chunk)
     x, h2 = L.residual_rmsnorm(x, c, p["ln2"], cfg.norm_eps)
-    x = x + L.mlp(p["mlp"], h2, cfg)
+    x = L.mlp(p["mlp"], h2, cfg, residual=x)  # acc_mac skip-add
     return x, jnp.zeros((), jnp.float32)
 
 
@@ -387,9 +387,36 @@ def loss_fn(params, batch, cfg: ArchConfig, run: RunConfig):
 # ---------------------------------------------------------------------------
 
 
+def _quantize_kv_layout(cache):
+    """Rebuild a {"k","v",...} cache dict with int8 k/v pools plus f32
+    per-(position, head) scale planes (``k_scale``/``v_scale``).
+
+    ``attention_decode`` quantizes on write and dequantizes inside the
+    attention kernel path; extra non-KV entries (hybrid's ssm state) pass
+    through untouched.
+    """
+    if not ("k" in cache and "v" in cache):
+        raise ValueError(
+            "kv_quant='int8' needs a {'k','v'} cache layout; this family "
+            f"caches {sorted(cache)} (MLA/paired-MoE/RWKV are unsupported)"
+        )
+    nL, B, Smax, K, _dh = cache["k"].shape
+    out = dict(cache)
+    out["k"] = jnp.zeros(cache["k"].shape, jnp.int8)
+    out["v"] = jnp.zeros(cache["v"].shape, jnp.int8)
+    out["k_scale"] = jnp.zeros((nL, B, Smax, K), jnp.float32)
+    out["v_scale"] = jnp.zeros((nL, B, Smax, K), jnp.float32)
+    return out
+
+
 def init_decode_state(params, cfg: ArchConfig, run: RunConfig, batch: int,
-                      max_len: int, frames=None):
-    """Build the per-layer cache pytree (leading L dim) + position index."""
+                      max_len: int, frames=None, kv_quant=None):
+    """Build the per-layer cache pytree (leading L dim) + position index.
+
+    ``kv_quant="int8"`` stores the attention KV pools as int8 with per-head
+    scale planes (4x smaller cache; logits drift is bounded by the per-head
+    amax quantizer — see tests/test_lm_serving.py).
+    """
     dtype = jnp.dtype(cfg.param_dtype)
     Lx = params["layers"]
     n_layers = jax.tree_util.tree_leaves(Lx)[0].shape[0]
@@ -457,6 +484,10 @@ def init_decode_state(params, cfg: ArchConfig, run: RunConfig, batch: int,
             "tm_prev": jnp.zeros((n_layers, batch, cfg.d_model), dtype),
             "cm_prev": jnp.zeros((n_layers, batch, cfg.d_model), dtype),
         }
+    if kv_quant is not None:
+        if kv_quant != "int8":
+            raise ValueError(f"unknown kv_quant {kv_quant!r} (want 'int8')")
+        state["cache"] = _quantize_kv_layout(state["cache"])
     return state
 
 
@@ -482,7 +513,7 @@ def decode_step(params, state, tokens, cfg: ArchConfig, run: RunConfig):
             h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
             a, c2 = L.attention_decode(p["attn"], h, c, idx, cfg, window=window)
             x, h2 = L.residual_rmsnorm(x, a, p["ln2"], cfg.norm_eps)
-            x = x + L.mlp(p["mlp"], h2, cfg)
+            x = L.mlp(p["mlp"], h2, cfg, residual=x)  # acc_mac skip-add
             return x, c2
 
         x, cache = jax.lax.scan(body, x, (params["layers"], state["cache"]))
@@ -498,7 +529,7 @@ def decode_step(params, state, tokens, cfg: ArchConfig, run: RunConfig):
             catt = L.cross_attention(p["xattn"], h, (xk, xv), cfg,
                                      attn_impl="naive")
             x, h2 = L.residual_rmsnorm(x, catt, p["ln2"], cfg.norm_eps)
-            x = x + L.mlp(p["mlp"], h2, cfg)
+            x = L.mlp(p["mlp"], h2, cfg, residual=x)  # acc_mac skip-add
             return x, c2
 
         x, cache = jax.lax.scan(
@@ -511,7 +542,7 @@ def decode_step(params, state, tokens, cfg: ArchConfig, run: RunConfig):
                 h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
                 a, c2 = MLA.mla_decode(p["attn"], h, c, idx, cfg)
                 x, h2 = L.residual_rmsnorm(x, a, p["ln2"], cfg.norm_eps)
-                x = x + L.mlp(p["mlp"], h2, cfg)
+                x = L.mlp(p["mlp"], h2, cfg, residual=x)  # acc_mac skip-add
                 return x, c2
 
             x, dcache = jax.lax.scan(
@@ -528,7 +559,7 @@ def decode_step(params, state, tokens, cfg: ArchConfig, run: RunConfig):
                     {"k": c["k_dense"], "v": c["v_dense"]}, idx, cfg)
                 x, h2 = L.residual_rmsnorm(x, a, p["dense"]["ln2"],
                                            cfg.norm_eps)
-                x = x + L.mlp(p["dense"]["mlp"], h2, cfg)
+                x = L.mlp(p["dense"]["mlp"], h2, cfg, residual=x)  # acc_mac
                 h = L.rms_norm(x, p["moe_l"]["ln1"], cfg.norm_eps)
                 a, cm = L.attention_decode(
                     p["moe_l"]["attn"], h,
@@ -555,7 +586,8 @@ def decode_step(params, state, tokens, cfg: ArchConfig, run: RunConfig):
     elif fam == "hybrid":
         def body(x, xs):
             p, c = xs
-            attn_c = {"k": c["k"], "v": c["v"]}
+            attn_c = {kk: c[kk] for kk in ("k", "v", "k_scale", "v_scale")
+                      if kk in c}
             ssm_c = {"h": c["h"], "conv": c["conv"]}
             h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
             a, ac2 = L.attention_decode(p["attn"], h, attn_c, idx, cfg,
@@ -566,7 +598,7 @@ def decode_step(params, state, tokens, cfg: ArchConfig, run: RunConfig):
                 + L.rms_norm(s, p["ssm_out_norm"], cfg.norm_eps)
             )
             x, h2 = L.residual_rmsnorm(x, mix, p["ln2"], cfg.norm_eps)
-            x = x + L.mlp(p["mlp"], h2, cfg)
+            x = L.mlp(p["mlp"], h2, cfg, residual=x)  # acc_mac skip-add
             return x, {**ac2, **sc2}
 
         x, cache = jax.lax.scan(body, x, (params["layers"], state["cache"]))

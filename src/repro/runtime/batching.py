@@ -154,6 +154,15 @@ class BoundedQueue:
     def popleft(self):
         return self._q.popleft()
 
+    def push_front(self, item) -> None:
+        """Return an already-admitted item to the head of the queue (slot
+        contention / eviction-replay) — no admission check, it was paid on
+        the original ``push``."""
+        self._q.appendleft(item)
+
+    def peek(self):
+        return self._q[0]
+
     def pop_up_to(self, n: int) -> list:
         return [self._q.popleft() for _ in range(min(n, len(self._q)))]
 
@@ -180,6 +189,28 @@ def refill_slots(slots: list, queue, on_fill) -> list[int]:
 # ---------------------------------------------------------------------------
 # metrics
 # ---------------------------------------------------------------------------
+
+
+class Reservoir:
+    """A bounded sample reservoir with percentile readout — the one latency
+    surface shared by request latency, TTFT, and inter-token gaps (the LM
+    engine keeps one per signal)."""
+
+    def __init__(self, maxlen: int = 4096):
+        self._xs: deque = deque(maxlen=maxlen)
+
+    def observe(self, x: float) -> None:
+        self._xs.append(float(x))
+
+    def __len__(self) -> int:
+        return len(self._xs)
+
+    def percentile(self, pct: float) -> float:
+        if not self._xs:
+            return 0.0
+        xs = sorted(self._xs)
+        i = min(len(xs) - 1, int(round(pct / 100.0 * (len(xs) - 1))))
+        return xs[i]
 
 
 @dataclass
@@ -212,10 +243,10 @@ class EngineMetrics:
     # in batch, so this stays == batches (one handoff per flush), never
     # == completed (one per request) — asserted by tests and bench_serving
     loop_handoffs: int = 0
-    _latencies_ms: deque = field(default_factory=lambda: deque(maxlen=4096))
+    _latencies_ms: Reservoir = field(default_factory=Reservoir)
 
     def observe_latency(self, ms: float) -> None:
-        self._latencies_ms.append(float(ms))
+        self._latencies_ms.observe(ms)
 
     def observe_batch(self, used: int, total: int, *,
                       deadline: bool = False) -> None:
@@ -228,11 +259,7 @@ class EngineMetrics:
             self.full_flushes += 1
 
     def latency_ms(self, pct: float) -> float:
-        if not self._latencies_ms:
-            return 0.0
-        xs = sorted(self._latencies_ms)
-        i = min(len(xs) - 1, int(round(pct / 100.0 * (len(xs) - 1))))
-        return xs[i]
+        return self._latencies_ms.percentile(pct)
 
     def snapshot(self, *, queue_depth: int = 0, **extra) -> dict:
         occ = self.lanes_used / self.lanes_total if self.lanes_total else 0.0

@@ -66,6 +66,7 @@ class _ModelEntry:
     program: object
     workers: int
     engine_kwargs: dict
+    mode: str = "async"  # "async" (CNN) | "lm" (continuous-batching decode)
     faults: object = None  # FaultInjector | factory(index) -> injector | None
     warmup_specs: list[tuple[tuple[int, ...], str]] = field(
         default_factory=list)
@@ -105,19 +106,24 @@ class Supervisor:
     # -- registry / lifecycle ----------------------------------------------
 
     def register(self, name: str, program, *, workers: int = 1,
+                 mode: str = "async",
                  warmup: tuple[int, ...] | None = None,
                  warmup_dtype: str = "float32",
                  faults=None, **engine_kwargs) -> None:
         """Add ``program`` to the registry as model ``name`` with
-        ``workers`` engine workers.  ``warmup`` (the per-request input
-        shape) is recorded so every worker — including replacements spawned
-        by auto-recovery — is warmed before taking traffic."""
+        ``workers`` engine workers.  ``mode`` picks the serving plane
+        (``"async"`` CNN batcher, ``"lm"`` continuous-batching decode).
+        ``warmup`` (the per-request input shape) is recorded so every
+        worker — including replacements spawned by auto-recovery — is
+        warmed before taking traffic (LM engines ignore the shape and warm
+        their whole bucket ladder)."""
         if name in self._models:
             raise ValueError(f"model {name!r} already registered")
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         entry = _ModelEntry(name=name, program=program, workers=workers,
-                            engine_kwargs=dict(engine_kwargs), faults=faults)
+                            engine_kwargs=dict(engine_kwargs), mode=mode,
+                            faults=faults)
         if warmup is not None:
             entry.warmup_specs.append((tuple(warmup), warmup_dtype))
         self._models[name] = entry
@@ -126,7 +132,7 @@ class Supervisor:
         injector = entry.faults
         if injector is not None and not hasattr(injector, "before_compute"):
             injector = injector(index)  # per-worker factory
-        return entry.program.serve(mode="async", faults=injector,
+        return entry.program.serve(mode=entry.mode, faults=injector,
                                    **entry.engine_kwargs)
 
     async def _bring_up(self, wh: WorkerHandle) -> None:
@@ -225,14 +231,21 @@ class Supervisor:
                 )
             await asyncio.sleep(self.heartbeat_interval_ms / 1e3)
 
-    async def submit(self, image, *, model: str | None = None,
-                     deadline_ms: float | None = None) -> CnnRequest:
+    async def submit(self, payload, *, model: str | None = None,
+                     deadline_ms: float | None = None,
+                     **req_kwargs) -> CnnRequest:
         """Route one request to a healthy worker and await its result.
 
+        ``payload`` is whatever the model's plane consumes — an image array
+        for ``mode="async"``, a token-id prompt for ``mode="lm"`` (with
+        ``max_new_tokens`` / ``eos_id`` forwarded via ``req_kwargs``).
+
         A worker dying mid-flight (:class:`WorkerUnavailable`) re-routes the
-        request — the accepted request survives the crash; a worker at
-        admission capacity fails over to a sibling when one exists.  Genuine
-        request failures (compute errors after bisection, missed deadlines)
+        request — the accepted request survives the crash; LM workers replay
+        the full prompt on the replacement, so the re-routed stream is the
+        stream the dead worker would have produced.  A worker at admission
+        capacity fails over to a sibling when one exists.  Genuine request
+        failures (compute errors after bisection/eviction, missed deadlines)
         propagate to the caller: retrying those elsewhere would just fail
         again."""
         model = self._resolve_model(model)
@@ -241,8 +254,9 @@ class Supervisor:
         for _ in range(self.max_failovers + 1):
             wh = await self._pick(model)
             try:
-                return await wh.engine.submit(image, uid=uid,
-                                              deadline_ms=deadline_ms)
+                return await wh.engine.submit(payload, uid=uid,
+                                              deadline_ms=deadline_ms,
+                                              **req_kwargs)
             except WorkerUnavailable as e:
                 last_err = e
                 self.failovers += 1
@@ -255,10 +269,11 @@ class Supervisor:
             f"{self.max_failovers} failovers"
         ) from last_err
 
-    async def submit_wave(self, images, *, model: str | None = None,
-                          return_exceptions: bool = False) -> list:
+    async def submit_wave(self, payloads, *, model: str | None = None,
+                          return_exceptions: bool = False,
+                          **req_kwargs) -> list:
         return await asyncio.gather(
-            *(self.submit(im, model=model) for im in images),
+            *(self.submit(p, model=model, **req_kwargs) for p in payloads),
             return_exceptions=return_exceptions,
         )
 
@@ -346,8 +361,8 @@ class Supervisor:
         the aggregate go backwards."""
         snap = wh.engine.metrics()
         for k in self._SUMMED:
-            if k == "queue_depth":
-                continue  # gauge, not a counter; dies with the engine
+            if k in self._GAUGES:
+                continue  # gauges, not counters; they die with the engine
             self._retired[k] = self._retired.get(k, 0) + snap.get(k, 0)
 
     async def restart_worker(self, name: str, *, drain: bool = True) -> None:
@@ -372,17 +387,34 @@ class Supervisor:
 
     # -- observability ------------------------------------------------------
 
+    # counters: summed across workers, folded into _retired on restart so
+    # the aggregate stays monotone (includes the LM plane's token/replay/
+    # compile-cache counters; CNN snapshots simply lack those keys -> 0)
     _SUMMED = ("submitted", "completed", "rejected", "batches",
                "deadline_flushes", "full_flushes", "loop_handoffs", "errors",
-               "retries", "shed", "deadline_failures", "queue_depth")
+               "retries", "shed", "deadline_failures",
+               "tokens_total", "prefill_tokens", "decode_steps", "replays",
+               "compile_hits", "compile_misses", "kv_slot_reuses",
+               "queue_depth", "running_sequences", "kv_slots_used",
+               "kv_slots_total", "kv_cache_bytes", "tokens_per_s")
+    # gauges within _SUMMED: summed across *live* workers for the fleet
+    # view but never retired — a dead engine's queue/slots/throughput are
+    # gone, not conserved
+    _GAUGES = frozenset({"queue_depth", "running_sequences",
+                         "kv_slots_used", "kv_slots_total",
+                         "kv_cache_bytes", "tokens_per_s"})
+    # percentiles: reservoirs don't merge exactly, so the aggregate takes
+    # the worst worker (an upper bound)
+    _MAXED = ("p50_latency_ms", "p99_latency_ms", "ttft_p50_ms",
+              "ttft_p99_ms", "intertoken_p50_ms", "intertoken_p99_ms")
 
     def metrics(self) -> dict:
         """Per-worker snapshots + the aggregate the fleet dashboards read.
 
-        Counters sum across workers; latency percentiles take the worst
-        worker (an upper bound — reservoirs don't merge exactly); the
-        supervisor adds its own ``restarts`` / ``failovers`` and the
-        healthy-worker gauge."""
+        Counters sum across workers; latency/TTFT/inter-token percentiles
+        take the worst worker; the supervisor adds its own ``restarts`` /
+        ``failovers``, the healthy-worker gauge, and the derived fleet
+        ``kv_slot_occupancy``."""
         per_worker = {}
         for wh in self.workers.values():
             snap = wh.engine.metrics()
@@ -393,10 +425,12 @@ class Supervisor:
         for snap in per_worker.values():
             for k in self._SUMMED:
                 agg[k] += snap.get(k, 0)
-        agg["p50_latency_ms"] = max(
-            (s["p50_latency_ms"] for s in per_worker.values()), default=0.0)
-        agg["p99_latency_ms"] = max(
-            (s["p99_latency_ms"] for s in per_worker.values()), default=0.0)
+        for k in self._MAXED:
+            agg[k] = max(
+                (s[k] for s in per_worker.values() if k in s), default=0.0)
+        agg["kv_slot_occupancy"] = (
+            agg["kv_slots_used"] / agg["kv_slots_total"]
+            if agg["kv_slots_total"] else 0.0)
         agg["restarts"] = self._metrics.restarts
         agg["failovers"] = self.failovers
         agg["healthy_workers"] = len(self.healthy_workers())

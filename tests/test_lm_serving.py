@@ -1,0 +1,371 @@
+"""The LM serving tier: continuous-batching decode over the bucketed
+KV-slot manager (``runtime/lm_server.py`` + ``runtime/kvcache.py``).
+
+Correctness spine: a sequence decoded through a *slot* of the continuous
+engine — joining mid-flight, co-batched with strangers, possibly landing in
+a reused slot — must produce exactly the token stream of a static
+padded-batch decode of the same prompt (greedy decode is deterministic, so
+stream equality is the equivalence proof).  The padding-invariance half
+(batched static decode == single-lane decode, on logits) is asserted
+separately, so the chain engine == static-batch == single-lane closes.
+
+Serving semantics on top: slot reuse across sequence lifetimes, zero
+recompiles after warmup (compile-cache counters), admission control +
+deadline fast-fail, poison-lane isolation by eviction-with-replay, and
+supervisor failover of a killed LM worker with full prompt replay.
+"""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import marvel
+from repro.configs.base import RunConfig
+from repro.configs.registry import get_arch, smoke_variant
+from repro.models import transformer as T
+from repro.runtime.batching import (
+    AdmissionError, DeadlineExceeded, RetryPolicy, WorkerUnavailable,
+)
+from repro.runtime.faults import FaultInjector, FaultPlan, InjectedFault
+from repro.runtime.kvcache import (
+    KVCacheManager, SequenceTooLong, length_buckets,
+)
+from repro.runtime.supervisor import Supervisor
+
+FAST_RETRY = dict(backoff_base_ms=0.1, jitter=0.0)
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = smoke_variant(get_arch("qwen3-8b")).replace(param_dtype="float32")
+    run = RunConfig(seq_len=32, global_batch=4, mode="decode", attn_chunk=16)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    x = np.ones((1, 8), np.int32)
+    prog = marvel.compile(lambda p, t: T.forward_lm(p, t, cfg, run)[0], x,
+                          params=params, precompile=False)
+    return prog, params, cfg, run
+
+
+def _prompts(cfg, n, seed=0, lo=3, hi=8):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab, size=int(rng.integers(lo, hi + 1))
+                         ).tolist() for _ in range(n)]
+
+
+def static_decode(params, cfg, run, prompts, max_new, *, max_len=64,
+                  kv_quant=None):
+    """The static padded-batch reference: every prompt starts at step 0 in
+    its own lane of one fixed-shape batch, teacher-forced through its
+    prompt, then greedy-decoded.  Returns (token streams, per-step logits
+    for each lane's generated positions)."""
+    n = len(prompts)
+    state = T.init_decode_state(params, cfg, run, batch=n, max_len=max_len,
+                                kv_quant=kv_quant)
+    fn = jax.jit(lambda p, s, t: T.decode_step(p, s, t, cfg, run))
+    toks = np.zeros((n, 1), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, 0] = p[0]
+    pos = [0] * n
+    gen = [[] for _ in range(n)]
+    logits_out = [[] for _ in range(n)]
+    while any(len(gen[i]) < max_new for i in range(n)):
+        logits, state = fn(params, state, jnp.asarray(toks))
+        sampled = np.asarray(
+            jnp.argmax(logits[:, 0, : cfg.vocab], axis=-1), np.int32)
+        for i in range(n):
+            if len(gen[i]) >= max_new:
+                continue  # done lane idles (its writes are past kv_len)
+            pos[i] += 1
+            if pos[i] < len(prompts[i]):
+                toks[i, 0] = prompts[i][pos[i]]
+                continue
+            gen[i].append(int(sampled[i]))
+            logits_out[i].append(np.asarray(logits[i, 0, : cfg.vocab]))
+            toks[i, 0] = sampled[i]
+    return gen, logits_out
+
+
+# ---------------------------------------------------------------------------
+# decode equivalence: continuous slot-indexed == static padded-batch
+# ---------------------------------------------------------------------------
+
+
+def test_static_batch_matches_single_lane_logits(lm_setup):
+    """Padding invariance: a prompt decoded in a shared padded batch emits
+    the same logits as decoded alone — co-batched lanes cannot leak."""
+    _, params, cfg, run = lm_setup
+    prompts = _prompts(cfg, 3, seed=1)
+    batched, batched_logits = static_decode(params, cfg, run, prompts, 6)
+    for i, p in enumerate(prompts):
+        solo, solo_logits = static_decode(params, cfg, run, [p], 6)
+        assert solo[0] == batched[i]
+        for a, b in zip(solo_logits[0], batched_logits[i]):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("kv_quant", [None, "int8"],
+                         ids=["fp32", "int8_kv"])
+def test_continuous_staggered_matches_static(lm_setup, kv_quant):
+    """Staggered arrivals + mid-flight evictions through the continuous
+    engine reproduce the static padded-batch streams exactly (fp32 and the
+    int8-quantized KV cache — quantize-on-write is slot-independent)."""
+    prog, params, cfg, run = lm_setup
+    prompts = _prompts(cfg, 6, seed=2)
+    # varied budgets force evictions (finished lanes leave mid-flight) and
+    # slot reuse (6 sequences through 4 slots per bucket)
+    budgets = [3, 7, 4, 6, 2, 5]
+    ref, _ = static_decode(params, cfg, run, prompts, max(budgets),
+                           kv_quant=kv_quant)
+    engine = prog.serve(mode="lm_sync", cfg=cfg, run=run, slots=4,
+                        bucket_lens=(64,), kv_quant=kv_quant)
+    engine.warmup()
+    reqs = []
+    for i, (p, b) in enumerate(zip(prompts, budgets)):
+        reqs.append(engine.submit(p, uid=i, max_new_tokens=b))
+        engine.step()  # staggered: one decode step between arrivals
+    engine.run_until_drained()
+    for i, req in enumerate(reqs):
+        assert req.done and req.error is None
+        assert req.generated == ref[i][: budgets[i]], f"uid {i} diverged"
+    assert engine.manager.slot_reuses() > 0  # freed slots were re-occupied
+
+
+def test_eos_evicts_slot_mid_flight(lm_setup):
+    """A sequence hitting its eos token leaves its slot immediately; the
+    slot is reclaimed for the queue without disturbing co-batched lanes."""
+    prog, params, cfg, run = lm_setup
+    prompts = _prompts(cfg, 3, seed=3)
+    ref, _ = static_decode(params, cfg, run, prompts, 8)
+    eos = ref[0][2]  # a token lane 0 will greedily emit
+    stop = ref[0].index(eos) + 1  # decode stops at its FIRST occurrence
+    engine = prog.serve(mode="lm_sync", cfg=cfg, run=run, slots=2,
+                        bucket_lens=(64,))
+    engine.warmup()
+    r0 = engine.submit(prompts[0], uid=0, max_new_tokens=8, eos_id=eos)
+    r1 = engine.submit(prompts[1], uid=1, max_new_tokens=8)
+    r2 = engine.submit(prompts[2], uid=2, max_new_tokens=8)  # queued: 2 slots
+    engine.run_until_drained()
+    assert r0.done and r0.generated == ref[0][:stop]  # stopped at eos
+    assert r1.done and r1.generated == ref[1]
+    assert r2.done and r2.generated == ref[2]  # decoded in r0's freed slot
+    assert engine.manager.slot_reuses() >= 1
+
+
+def test_zero_recompiles_after_warmup(lm_setup):
+    """warmup() compiles one executable per length bucket; arbitrary
+    arrival patterns after it are all compile-cache hits — and a second
+    engine over the same program inherits the cache entirely."""
+    prog, params, cfg, run = lm_setup
+    engine = prog.serve(mode="lm_sync", cfg=cfg, run=run, slots=4,
+                        max_len=64)
+    engine.warmup()
+    warm = engine.compile_misses
+    # one executable per bucket; buckets already in the program's shared
+    # exec cache (earlier engines over the same program) are warm hits
+    n_buckets = len(engine.manager.bucket_lens)
+    assert engine.compile_misses + engine.compile_hits == n_buckets
+    for i, p in enumerate(_prompts(cfg, 8, seed=4, lo=3, hi=20)):
+        engine.submit(p, uid=i, max_new_tokens=5)
+        engine.step()
+    engine.run_until_drained()
+    assert engine.compile_misses == warm  # zero recompiles after warmup
+    assert engine.compile_hits > 0
+    sibling = prog.serve(mode="lm_sync", cfg=cfg, run=run, slots=4,
+                         max_len=64)
+    sibling.warmup()
+    assert sibling.compile_misses == 0  # replacement workers never compile
+    assert sibling.compile_hits == n_buckets
+
+
+# ---------------------------------------------------------------------------
+# kv-cache manager bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_kvcache_manager_buckets_and_slots():
+    mgr = KVCacheManager(
+        lambda batch, L: {"index": jnp.zeros((batch,), jnp.int32)},
+        bucket_lens=length_buckets(128), slots=2)
+    assert mgr.bucket_lens == (32, 64, 128)
+    assert mgr.bucket_for(10) == 32 and mgr.bucket_for(65) == 128
+    with pytest.raises(SequenceTooLong):
+        mgr.bucket_for(129)
+    # tight bucket fills, then spills to the next one up
+    assert mgr.alloc(0, 20) == (32, 0)
+    assert mgr.alloc(1, 20) == (32, 1)
+    assert mgr.alloc(2, 20) == (64, 0)
+    assert mgr.slots_used == 3 and mgr.slots_total == 6
+    mgr.release(32, 0)
+    assert mgr.alloc(3, 20) == (32, 0)  # deterministic lowest-slot reuse
+    assert mgr.slot_reuses() == 1
+    assert 0 < mgr.occupancy() <= 1
+
+
+def test_admission_deadline_and_too_long(lm_setup):
+    prog, params, cfg, run = lm_setup
+    engine = prog.serve(mode="lm_sync", cfg=cfg, run=run, slots=1,
+                        bucket_lens=(32,), max_pending=2)
+    engine.warmup()
+    with pytest.raises(SequenceTooLong):
+        engine.submit(list(range(1, 40)), uid=99, max_new_tokens=8)
+    engine.submit([1, 2, 3], uid=0, max_new_tokens=4)
+    engine.submit([4, 5, 6], uid=1, max_new_tokens=4)
+    with pytest.raises(AdmissionError):
+        engine.submit([7, 8, 9], uid=2, max_new_tokens=4)
+    # a queued request whose deadline expires fast-fails before joining
+    engine.step()  # uid 0 takes the only slot; uid 1 stays queued
+    late = engine.queue.peek()
+    late._deadline = 0.0  # already expired
+    out = engine.run_until_drained()
+    by_uid = {r.uid: r for r in out}
+    assert by_uid[0].done and by_uid[0].error is None
+    assert isinstance(by_uid[1].error, DeadlineExceeded)
+    assert engine.metrics()["deadline_failures"] == 1
+
+
+# ---------------------------------------------------------------------------
+# fault lanes
+# ---------------------------------------------------------------------------
+
+
+def test_poison_lane_isolated_by_eviction_replay(lm_setup):
+    """A poison request co-batched with innocents: eviction bisection
+    replays the innocents (full prompt, exact stream) and the poison lane
+    alone eats the injected fault."""
+    prog, params, cfg, run = lm_setup
+    prompts = _prompts(cfg, 3, seed=5)
+    ref, _ = static_decode(params, cfg, run, prompts, 5)
+    inj = FaultInjector(FaultPlan(poison_uids=(1,)))
+    engine = prog.serve(mode="lm_sync", cfg=cfg, run=run, slots=4,
+                        bucket_lens=(64,), faults=inj,
+                        retry=RetryPolicy(max_retries=1, **FAST_RETRY))
+    engine.warmup()
+    reqs = [engine.submit(p, uid=i, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    engine.run_until_drained()
+    assert isinstance(reqs[1].error, InjectedFault)
+    for i in (0, 2):
+        assert reqs[i].done and reqs[i].error is None
+        assert reqs[i].generated == ref[i], f"innocent uid {i} diverged"
+    assert engine.replays_total > 0  # innocents were evicted and replayed
+    assert inj.injected["poison"] > 0
+
+
+def test_killed_lm_worker_fails_over_with_full_prompt_replay(lm_setup):
+    """Supervisor failover: a worker killed mid-decode fails its in-flight
+    sequences with WorkerUnavailable; the supervisor re-routes the *full
+    prompts* to the sibling, so the final streams are exactly the static
+    reference — a crash can never truncate a sequence."""
+    prog, params, cfg, run = lm_setup
+    prompts = _prompts(cfg, 6, seed=6)
+    ref, _ = static_decode(params, cfg, run, prompts, 24, max_len=64)
+
+    async def main():
+        sup = Supervisor(heartbeat_interval_ms=5.0, pick_timeout_ms=30000.0)
+        sup.register("lm", prog, workers=2, mode="lm", warmup=(),
+                     cfg=cfg, run=run, slots=4, max_len=64,
+                     retry=RetryPolicy(**FAST_RETRY))
+        async with sup:
+            tasks = [asyncio.create_task(
+                sup.submit(p, model="lm", max_new_tokens=24))
+                for p in prompts]
+            await asyncio.sleep(0.15)  # mid-decode
+            sup.workers["lm/0"].engine.kill("chaos: injected kill")
+            out = await asyncio.gather(*tasks)
+            return out, sup.metrics()["aggregate"]
+
+    out, agg = asyncio.run(main())
+    for i, req in enumerate(out):
+        assert req.done and req.error is None
+        assert req.generated == ref[i], f"uid {i}: truncated/diverged stream"
+    assert agg["completed"] == len(prompts)
+    # the replacement warms from the shared exec cache: no new compiles
+    assert agg["compile_misses"] <= 2 * len(length_buckets(64))
+
+
+# ---------------------------------------------------------------------------
+# slow lane: soak + native-length sweep + launcher smoke
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_lm_chaos_soak(lm_setup):
+    """Sustained staggered traffic under flaky compute + a mid-soak worker
+    kill: every request resolves (no losses, no hangs), streams stay exact,
+    and the compile-cache counters stay frozen."""
+    prog, params, cfg, run = lm_setup
+    prompts = _prompts(cfg, 24, seed=7)
+    ref, _ = static_decode(params, cfg, run, prompts[:4], 6)
+
+    async def main():
+        sup = Supervisor(heartbeat_interval_ms=5.0, pick_timeout_ms=30000.0)
+        sup.register(
+            "lm", prog, workers=2, mode="lm", warmup=(),
+            cfg=cfg, run=run, slots=4, max_len=64,
+            retry=RetryPolicy(max_retries=3, **FAST_RETRY),
+            faults=lambda i: FaultInjector(flaky_rate=0.05, seed=100 + i),
+        )
+        async with sup:
+            tasks = []
+            for i, p in enumerate(prompts):
+                tasks.append(asyncio.create_task(
+                    sup.submit(p, model="lm", max_new_tokens=6)))
+                await asyncio.sleep(0.004)
+                if i == len(prompts) // 2:
+                    sup.workers["lm/1"].engine.kill("soak: injected kill")
+            out = await asyncio.gather(*tasks)
+            return out, sup.metrics()["aggregate"]
+
+    out, agg = asyncio.run(main())
+    assert len(out) == len(prompts)
+    for i, req in enumerate(out):
+        assert req.done and req.error is None, f"uid {i}: {req.error}"
+        if i < 4:
+            assert req.generated == ref[i]
+    assert agg["completed"] == len(prompts)
+    assert agg["restarts"] >= 1
+
+
+@pytest.mark.slow
+def test_lm_native_length_sweep(lm_setup):
+    """The full bucket ladder at native lengths: prompts spanning every
+    bucket decode correctly, spill upward when their tight bucket is busy,
+    and the warmed executables cover the whole ladder (no recompiles)."""
+    prog, params, cfg, run = lm_setup
+    engine = prog.serve(mode="lm_sync", cfg=cfg, run=run, slots=2,
+                        max_len=256)
+    engine.warmup()
+    warm = engine.compile_misses
+    # the whole 32..256 ladder is warmed (shared-cache hits count too)
+    assert warm + engine.compile_hits == len(engine.manager.bucket_lens)
+    rng = np.random.default_rng(8)
+    reqs = []
+    for i, total in enumerate((20, 40, 100, 200, 30, 120)):
+        plen = max(3, total - 12)
+        prompt = rng.integers(1, cfg.vocab, size=plen).tolist()
+        reqs.append(engine.submit(prompt, uid=i, max_new_tokens=12))
+        engine.step()
+    engine.run_until_drained(max_steps=2000)
+    for req in reqs:
+        assert req.done and req.error is None
+        assert len(req.generated) == 12
+    assert engine.compile_misses == warm
+    # every request decoded in the smallest bucket that held it (or one
+    # spilled up); the manager's ledger is clean at drain
+    assert engine.manager.slots_used == 0
+
+
+@pytest.mark.slow
+def test_launch_serve_lm_supervised_smoke(capsys):
+    from repro.launch import serve as launch_serve
+
+    launch_serve.main([
+        "--arch", "qwen3-8b", "--smoke", "--lm", "--supervised",
+        "--workers", "2", "--requests", "4", "--max-new", "4",
+    ])
+    out = capsys.readouterr().out
+    assert "supervised LM worker(s)" in out
+    assert "marvel_serving_tokens_total" in out
+    assert "marvel_serving_kv_slot_occupancy" in out
