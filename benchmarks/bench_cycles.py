@@ -4,15 +4,34 @@ rv32_* columns use the paper's issue-slot accounting + its 100 MHz clock
 (the FAITHFUL reproduction — target band: ~2x v0->v4); tpu_* columns use the
 v5e roofline adaptation.  Validation: v0->v4 speedup within [1.7, 2.4]
 (paper: "up to 2x").
+
+The ``lm/<class>`` rows extend the figure to the per-class extension
+ladders: one smoke-size exemplar per LM model class (dense/moe/ssm/rnn),
+same rv32 + tpu columns, gated on the *_speedup_v4 keys (the paper band
+only applies to the CNN rows the paper measured).
 """
 from __future__ import annotations
 
-from repro.core import costmodel
+from repro.core import classes, costmodel
 from repro.models.cnn import CNN_MODELS
 
-from benchmarks.common import cnn_profile, emit
+from benchmarks.common import LM_EXEMPLARS, cnn_profile, emit, lm_profile
 
 SPEEDUP_BAND = (1.7, 2.4)
+
+
+def _level_columns(base: dict) -> tuple[dict, dict]:
+    """(rv32, tpu) cycles per level from a profile's cost-model inputs."""
+    rv32 = {lvl: costmodel.rv32_cycles(base, lvl) for lvl in costmodel.LEVELS}
+    tpu = {}
+    for lvl in costmodel.LEVELS:
+        adj = costmodel.apply_level(base, lvl)
+        terms = costmodel.roofline(
+            adj["flops"], adj["hbm_bytes"], 0.0, 1,
+            int8_fraction=adj["int8_fraction"],
+        )
+        tpu[lvl] = costmodel.cycles(terms, adj["loop_iters"])
+    return rv32, tpu
 
 
 def run() -> None:
@@ -20,17 +39,7 @@ def run() -> None:
     for name in CNN_MODELS:
         prof = cnn_profile(name)
         base = prof.as_costmodel_inputs()
-        rv32 = {
-            lvl: costmodel.rv32_cycles(base, lvl) for lvl in costmodel.LEVELS
-        }
-        tpu = {}
-        for lvl in costmodel.LEVELS:
-            adj = costmodel.apply_level(base, lvl)
-            terms = costmodel.roofline(
-                adj["flops"], adj["hbm_bytes"], 0.0, 1,
-                int8_fraction=adj["int8_fraction"],
-            )
-            tpu[lvl] = costmodel.cycles(terms, adj["loop_iters"])
+        rv32, tpu = _level_columns(base)
         speedup = rv32["v0"] / rv32["v4"]
         tpu_speedup = tpu["v0"] / tpu["v4"]
         in_band = SPEEDUP_BAND[0] <= speedup <= SPEEDUP_BAND[1]
@@ -50,3 +59,21 @@ def run() -> None:
         )
         emit(f"fig11_cycles/{name}", 0.0, derived)
     emit("fig11_cycles/ALL_IN_PAPER_BAND", 0.0, str(ok))
+
+    # per-class ladder rows (row names lack "cycles" on purpose: only the
+    # speedup keys gate, as higher-is-better)
+    for cls in LM_EXEMPLARS:
+        prof = lm_profile(cls)
+        assert classes.classify(prof) == cls, (cls, classes.classify(prof))
+        base = prof.as_costmodel_inputs()
+        rv32, tpu = _level_columns(base)
+        derived = (
+            ";".join(f"rv32_{v}={rv32[v]:.3e}" for v in costmodel.LEVELS)
+            + ";" + ";".join(f"tpu_{v}={tpu[v]:.3e}" for v in costmodel.LEVELS)
+            + f";rv32_speedup_v4={rv32['v0'] / rv32['v4']:.2f}"
+            + f";tpu_speedup_v4={tpu['v0'] / tpu['v4']:.2f}"
+            + f";attn_flops={base['attn_flops']:.3e}"
+            + f";wkv_flops={base['wkv_flops']:.3e}"
+            + f";rmsnorm_epilogue_bytes={base['rmsnorm_epilogue_bytes']:.3e}"
+        )
+        emit(f"lm/{cls}", 0.0, derived)

@@ -66,3 +66,36 @@ def cnn_setup(name: str):
 def cnn_profile(name: str) -> profiler.PatternProfile:
     params, apply, x = cnn_setup(name)
     return profiler.profile_fn(lambda x: apply(params, x), x)
+
+
+# one smoke-size exemplar per LM model class (the pure-SSM stack stands in
+# for ssm_lm: hymba itself classifies hybrid, rwkv6 rnn)
+LM_EXEMPLARS = {
+    "dense_lm": "granite-3-2b",
+    "moe_lm": "llama4-maverick-400b-a17b",
+    "ssm_lm": "hymba-1.5b",
+    "rnn_lm": "rwkv6-1.6b",
+}
+
+
+@lru_cache(maxsize=None)
+def lm_profile(model_class: str) -> profiler.PatternProfile:
+    """Baseline profile of the class exemplar, for the per-class ladder rows."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, smoke_variant
+    from repro.configs.base import RunConfig
+    from repro.models import ssm as SSM
+    from repro.models import transformer as T
+
+    run = RunConfig(seq_len=32, global_batch=1, attn_chunk=16, ssm_chunk=16,
+                    wkv_chunk=16)
+    cfg = smoke_variant(get_arch(LM_EXEMPLARS[model_class]))
+    key = jax.random.PRNGKey(0)
+    if model_class == "ssm_lm":
+        params = SSM.ssm_stack_init(key, cfg)
+        fn = lambda t: SSM.ssm_stack_forward(params, t, cfg, run)[0]
+    else:
+        params = T.init_params(key, cfg)
+        fn = lambda t: T.forward_lm(params, t, cfg, run)[0]
+    return profiler.profile_fn(fn, jnp.zeros((1, 32), jnp.int32))

@@ -11,7 +11,8 @@ from repro.core.extensions import extensions_for_class
 from repro.core.profiler import PatternProfile
 
 CLASSES = (
-    "cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm", "unknown"
+    "cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm",
+    "rnn_lm", "unknown"
 )
 
 
@@ -29,6 +30,12 @@ def classify(profile: PatternProfile) -> str:
         return "cnn"
     if sort > 0 or profile.site_counts.get("moe_dispatch", 0) > 0:
         return "moe_lm"
+    # attention-free recurrences (RWKV) are their own class: the generic
+    # scan-heavy check would lump them into ssm_lm, but their hot pattern
+    # is the wkv chunk recurrence, not a selective-scan — and their ladder
+    # differs (LayerNorm models never hit add2i)
+    if profile.site_counts.get("wkv_chunk", 0) > 0 and not attn:
+        return "rnn_lm"
     if scan_heavy and attn:
         return "hybrid_lm"
     if scan_heavy:

@@ -70,8 +70,10 @@ def energy_j(cyc: float, chips: int = 1) -> float:
 #   bytes bf16 -> int8 (x0.5), matmul flops — dot_general AND
 #   conv_general_dilated (profile's conv_flops is part of matmul_flops) —
 #   run at the 2x int8 MXU rate via int8_fraction
-# v2 add2i (fused residual+norm): each fused site saves one full activation
-#   tensor read + write (2 x bytes of the activation)
+# v2 add2i (fused residual+norm): each fused site keeps the res+x sum
+#   in-register instead of writing it for the norm to re-read
+#   (rmsnorm_epilogue_bytes: exact 2 x 4 x elems per site, accounted by the
+#   profiler — same per-site accounting as conv_epilogue_bytes)
 # v2 dw_mac (per-channel int8 depthwise MAC): depthwise conv flops join the
 #   2x int8 rate one level after mac (at v1 they still run unquantized —
 #   the generic GEMM datapath cannot express the per-channel loop), and the
@@ -92,7 +94,11 @@ def energy_j(cyc: float, chips: int = 1) -> float:
 #   (acc_bytes_saved: one f32 write + one read per residual site); on rv32
 #   the standalone add's issue slots fold into the mac writeback (acc_flops)
 # v4 zol (grid pipelining / chunked streaming): removes per-iteration loop
-#   dispatch and avoids materializing S^2 attention scores in HBM.
+#   dispatch and avoids materializing S^2 attention scores in HBM; the
+#   int8-KV dequant path finally brings the WEIGHT-LESS matmuls (attention
+#   QK^T/PV, wkv state contractions — attn_flops/wkv_flops, subsets of
+#   matmul_flops with nothing to weight-quantize at v1) onto the int8 MXU
+#   rate.
 
 LEVELS = ["v0", "v1", "v2", "v3", "v4"]
 
@@ -101,12 +107,13 @@ def apply_level(profile: "dict", level: str) -> dict:
     """Take raw v0 profile dict -> adjusted terms inputs for a level.
 
     profile keys: flops, matmul_flops, hbm_bytes, weight_bytes,
-    residual_norm_bytes, epilogue_bytes, conv_epilogue_bytes, dw_flops,
+    rmsnorm_epilogue_bytes, epilogue_bytes, conv_epilogue_bytes, dw_flops,
     dw_epilogue_bytes, sep_intermediate_bytes, acc_bytes_saved, acc_flops,
-    pool_flops, pool_saved_bytes, attn_score_bytes, loop_iters.
-    (conv_flops is informational only, and dw_flops is a *subset* of
-    matmul_flops used to stage the int8 rate — do not add either to a delta
-    or conv flops would be double-counted.)
+    pool_flops, pool_saved_bytes, attn_score_bytes, attn_flops, wkv_flops,
+    loop_iters.  (conv_flops / residual_norm_bytes are informational only;
+    dw_flops, attn_flops and wkv_flops are *subsets* of matmul_flops used to
+    stage the int8 rate — do not add them to a delta or their flops would be
+    double-counted.)
     """
     p = dict(profile)
     out = {
@@ -118,6 +125,12 @@ def apply_level(profile: "dict", level: str) -> dict:
     idx = LEVELS.index(level)
     mm_flops = p.get("matmul_flops", 0.0)
     dw_flops = min(p.get("dw_flops", 0.0), mm_flops)
+    # Weight-less matmul share: attention QK^T/PV and wkv state
+    # contractions multiply two ACTIVATION tensors, so the v1/v2 int8
+    # weight quantization has nothing to quantize there — they join the
+    # int8 MXU rate only when the int8-KV dequant path lands with zol.
+    nw_flops = min(p.get("attn_flops", 0.0) + p.get("wkv_flops", 0.0),
+                   max(mm_flops - dw_flops, 0.0))
     # GEMM-form MACs — dense layers and the 1x1 convs rerouted to
     # matmul_epilogue — ride the v1 `mac` credit (the paper's int8 MAC GEMM
     # instruction); fusedmac at v3 adds only their epilogue fusion.  ONLY
@@ -125,13 +138,15 @@ def apply_level(profile: "dict", level: str) -> dict:
     # needs the separate dw_mac extension.
     if idx >= 1:  # mac: int8 weights; depthwise MACs stay f32 until dw_mac
         out["hbm_bytes"] -= p.get("weight_bytes", 0.0) * 0.5
-        out["int8_fraction"] = (mm_flops - dw_flops) / max(p["flops"], 1.0)
+        out["int8_fraction"] = (
+            (mm_flops - dw_flops - nw_flops) / max(p["flops"], 1.0)
+        )
     if idx >= 2:  # add2i: fused residual+rmsnorm; dw_mac: int8 depthwise;
         # pool: int8 pooled activations + in-register avg rescale
-        out["hbm_bytes"] -= p.get("residual_norm_bytes", 0.0)
+        out["hbm_bytes"] -= p.get("rmsnorm_epilogue_bytes", 0.0)
         out["hbm_bytes"] -= p.get("dw_epilogue_bytes", 0.0)
         out["hbm_bytes"] -= p.get("pool_saved_bytes", 0.0)
-        out["int8_fraction"] = mm_flops / max(p["flops"], 1.0)
+        out["int8_fraction"] = (mm_flops - nw_flops) / max(p["flops"], 1.0)
     if idx >= 3:  # fusedmac + conv_mac epilogue: bias/BN/act fusion;
         # sep_block: the depthwise intermediate never touches HBM;
         # acc_mac: skip-adds accumulate in-register
@@ -139,8 +154,10 @@ def apply_level(profile: "dict", level: str) -> dict:
         out["hbm_bytes"] -= p.get("conv_epilogue_bytes", 0.0)
         out["hbm_bytes"] -= p.get("sep_intermediate_bytes", 0.0)
         out["hbm_bytes"] -= p.get("acc_bytes_saved", 0.0)
-    if idx >= 4:  # zol: grid loops + streaming attention
+    if idx >= 4:  # zol: grid loops + streaming attention/scan kernels;
+        # int8-KV brings the weight-less matmuls onto the int8 rate
         out["hbm_bytes"] -= p.get("attn_score_bytes", 0.0)
+        out["int8_fraction"] = mm_flops / max(p["flops"], 1.0)
         out["loop_iters"] = p["loop_iters"] * 0.05  # grid seqencer handles rest
     out["hbm_bytes"] = max(out["hbm_bytes"], p["hbm_bytes"] * 0.1)
     return out
@@ -198,24 +215,32 @@ def rv32_cycles(profile_inputs: dict, level: str,
     Depthwise MACs (``dw_flops``) pick up the mac fusion one level later
     than dense MACs: the v1 ``mac`` instruction is the GEMM inner-product
     form, and the per-channel depthwise loop only gains its fused MAC when
-    ``dw_mac`` lands at v2.  Pool window ops (``pool_flops``, one
-    compare/add slot per window element at v0) halve when the fused
-    windowed-reduce instruction lands at v2; standalone skip-adds
-    (``acc_flops``, inside ``other_ops``) fold into the acc_mac writeback
-    at v3.
+    ``dw_mac`` lands at v2.  Weight-less MACs (``attn_flops`` +
+    ``wkv_flops`` — attention scores/readout and wkv state contractions)
+    stage even later: int8 MAC issue needs int8 operands, and the KV/state
+    stream only quantizes when the int8-KV ``zol`` path lands at v4.  Pool
+    window ops (``pool_flops``, one compare/add slot per window element at
+    v0) halve when the fused windowed-reduce instruction lands at v2;
+    standalone skip-adds (``acc_flops``, inside ``other_ops``) fold into
+    the acc_mac writeback at v3.
     """
     idx = LEVELS.index(level)
     mm_flops = profile_inputs.get("matmul_flops", 0.0)
     dw_macs = min(profile_inputs.get("dw_flops", 0.0), mm_flops) / 2.0
-    dense_macs = mm_flops / 2.0 - dw_macs
+    nw_macs = min(profile_inputs.get("attn_flops", 0.0)
+                  + profile_inputs.get("wkv_flops", 0.0),
+                  max(mm_flops - 2.0 * dw_macs, 0.0)) / 2.0
+    dense_macs = mm_flops / 2.0 - dw_macs - nw_macs
     other_ops = max(profile_inputs["flops"] - mm_flops, 0.0)
     if idx >= 3:  # acc_mac: the skip-add rides the mac writeback slot
         other_ops = max(other_ops - profile_inputs.get("acc_flops", 0.0), 0.0)
     pool_ops = profile_inputs.get("pool_flops", 0.0) * (0.5 if idx >= 2
                                                         else 1.0)
     dw_level = "v0" if level == "v1" else level
+    nw_level = level if idx >= 4 else "v0"
     return (dense_macs * rv32_cycles_per_mac(level, add2i_coverage)
             + dw_macs * rv32_cycles_per_mac(dw_level, add2i_coverage)
+            + nw_macs * rv32_cycles_per_mac(nw_level, add2i_coverage)
             + other_ops + pool_ops)
 
 

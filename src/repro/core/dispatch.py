@@ -16,8 +16,8 @@ time.  A table bound to a function with :meth:`ResolvedTable.bind` (what
 ``repro.marvel.compile`` does) is therefore captured in the closure and baked
 into the jaxpr: the compiled executable keeps its impls no matter what table
 (or none) is active at call time, across threads, and across jit caches.
-The legacy :func:`active_extensions` thread-local context remains as a shim
-over :func:`use_table` for code that still resolves ambiently.
+Ambient (thread-local) activation, where needed, is :func:`use_table` around
+a table from ``repro.core.extensions.resolve_table``.
 
 Keeping this module tiny and dependency-free avoids import cycles: model code
 imports only this; ``repro.core.extensions`` registers implementations here.
@@ -169,11 +169,6 @@ def use_table(table: ResolvedTable | Mapping[str, str]):
         yield table
     finally:
         _state.table = old
-
-
-def active_extensions(mapping: Mapping[str, str]):
-    """Legacy shim: thread-local pattern->impl activation (see use_table)."""
-    return use_table(mapping)
 
 
 def call(pattern: str, baseline: Callable[..., Any], *args, **kwargs):

@@ -1,4 +1,4 @@
-"""Extension registry + processor-version levels (paper Table 1 analogue).
+"""Extension registry + per-class processor-version ladders (paper Table 1).
 
 v0  baseline (pure jnp / XLA default)
 v1  + mac       (int8 MAC GEMM kernel — quantized multiply-accumulate)
@@ -11,25 +11,41 @@ v3  + fusedmac  (GEMM + bias + activation epilogue fusion; also the fused
     + acc_mac   (residual-add accumulate folded into the conv/GEMM epilogue)
 v4  + zol       (grid-pipelined streaming: flash attention / chunked scans)
 
-paper <-> repo mapping (v-level -> extension -> pattern -> pallas kernel);
-the ``resolved`` column says when the pattern -> impl choice is fixed:
+The v-level -> extension ladder is PER MODEL CLASS (the paper's central
+"model-class aware" claim made structural): :data:`CLASS_LADDERS` maps
+``model_class -> level -> extension names``.  The CNN ladder is the original
+global ladder; the attention-LM classes (dense/moe/ssm/hybrid/enc_dec) climb
+mac -> add2i -> fusedmac+acc_mac -> zol; the recurrent class (``rnn_lm``,
+RWKV-style) skips add2i (LayerNorm models have no rmsnorm epilogue) and
+climbs mac -> fusedmac -> zol.  :data:`LEVEL_EXTENSIONS` remains the
+global-union ladder for class-agnostic callers.
+
+  level  cnn                  dense/moe/ssm/hybrid/enc_dec  rnn_lm
+  v0     -                    -                             -
+  v1     mac conv_mac         mac                           mac
+  v2     + add2i dw_mac pool  + add2i                       (v1)
+  v3     + fusedmac acc_mac   + fusedmac acc_mac            + fusedmac
+  v4     + zol                + zol                         + zol
+
+paper <-> repo mapping (extension -> pattern -> pallas kernel); the
+``resolved`` column says when the pattern -> impl choice is fixed:
 ``trace`` = baked into the jaxpr while tracing (jit / AOT — the table active
 *at trace time* is captured, exactly like the paper's synthesized core), and
 in eager execution trace time and call time coincide, so every row is
 ``trace``:
 
-  level  extension  pattern(s)              kernel (repro/kernels/)  resolved
-  v1+    mac        mac_matmul(_int8)       mac_matmul.py            trace
-  v1+    conv_mac   fused_conv              fused_conv.py (CNN only) trace
-  v2+    add2i      residual_rmsnorm        residual_rmsnorm.py      trace
-  v2+    dw_mac     depthwise_conv          depthwise_conv.py (CNN)  trace
-  v2+    pool       pool                    pooling.py (CNN only)    trace
-  v3+    fusedmac   matmul_epilogue,        matmul_epilogue.py,      trace
-                    sep_block               depthwise_conv.py (CNN)
-  v3+    acc_mac    (rides fused_conv /     fused_conv.py,           trace
-                    matmul_epilogue)        matmul_epilogue.py
-  v4     zol        flash_attention,        flash_attention.py,      trace
-                    wkv_chunk, ssm_chunk    wkv_chunk.py
+  extension  pattern(s)              kernel (repro/kernels/)  resolved
+  mac        mac_matmul(_int8)       mac_matmul.py            trace
+  conv_mac   fused_conv              fused_conv.py (CNN only) trace
+  add2i      residual_rmsnorm        residual_rmsnorm.py      trace
+  dw_mac     depthwise_conv          depthwise_conv.py (CNN)  trace
+  pool       pool                    pooling.py (CNN only)    trace
+  fusedmac   matmul_epilogue,        matmul_epilogue.py,      trace
+             sep_block               depthwise_conv.py (CNN)
+  acc_mac    (rides fused_conv /     fused_conv.py,           trace
+             matmul_epilogue)        matmul_epilogue.py
+  zol        flash_attention,        flash_attention.py,      trace
+             wkv_chunk, ssm_chunk    wkv_chunk.py
 
 ``conv_mac`` is the paper's mac/fusedmac pair as it appears in conv inner
 loops: one int8 MAC pass over the KH*KW*Cin reduction with the dequant +
@@ -44,8 +60,8 @@ epilogue machinery, so it rides with ``fusedmac`` at v3+.
 ``pool`` (v2+, cnn) is the windowed-reduce unit: int8/fp32 max/avg pooling
 with the ``1/k^2`` rescale fused in-register, plus the global-avg reduce —
 the op family the residual CNNs (ResNet50, DenseNet121) were still shipping
-to the XLA baseline.  ``acc_mac`` (v3+, cnn and the LM classes) maps no
-pattern of its own: it is the residual-add accumulate of the
+to the XLA baseline.  ``acc_mac`` (v3+, cnn and the attention-LM classes)
+maps no pattern of its own: it is the residual-add accumulate of the
 ``fused_conv``/``matmul_epilogue`` epilogues (a skip connection added on
 the accumulator tile before the activation, so the conv/GEMM output never
 round-trips HBM just to be added).  CNNs hit it through ``fused_conv``;
@@ -55,6 +71,15 @@ add rides the GEMM epilogue too.  The profiler records its sites as
 ``acc_mac`` pseudo-sites and the cost model credits ``acc_bytes_saved``
 from v3.
 
+On the LM ladders, ``mac`` is the int8 decode-step GEMM (``mac_matmul`` —
+weights quantized per output channel, activations per row), ``add2i`` the
+fused residual+RMSNorm epilogue every pre-norm decoder block emits twice,
+and ``zol`` the chunked-streaming kernels (``flash_attention`` /
+``wkv_chunk`` / ``ssm_chunk``) including the int8-KV dequant path over the
+serving tier's per-(position, head) scale planes — attention/wkv matmuls
+carry no weights, so they only join the int8 MXU rate when int8-KV lands
+with ``zol`` at v4 (see costmodel.apply_level).
+
 Each extension names a dispatch *pattern* and the backends that implement it:
 ``ref`` (pure jnp, algorithmically fused — used on CPU and as oracle),
 ``pallas`` (the TPU kernel from repro/kernels, registered on import), and
@@ -62,12 +87,14 @@ Each extension names a dispatch *pattern* and the backends that implement it:
 current platform, ``ref`` otherwise — the same call works on CPU and TPU).
 :func:`resolve_table` performs that resolution ONCE, up front, into an
 immutable :class:`repro.core.dispatch.ResolvedTable`; ``repro.marvel.compile``
-bakes the table into the traced program, and :func:`extension_context` is the
-backward-compatible ambient shim over the same mechanism.
+bakes the table into the traced program, passing the classified
+``model_class`` so the deployed table carries exactly the class's ladder.
+Ambient activation is :func:`repro.core.dispatch.use_table` around a
+resolved table (the old ``extension_context`` shim is gone).
 """
 from __future__ import annotations
 
-import contextlib
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -91,7 +118,8 @@ EXTENSIONS: dict[str, Extension] = {
             "mac",
             ("mac_matmul", "mac_matmul_int8"),
             "int8 MAC GEMM: multiply+accumulate in one MXU pass, int8 weights",
-            ("cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm"),
+            ("cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm",
+             "rnn_lm"),
         ),
         Extension(
             "conv_mac",
@@ -131,17 +159,23 @@ EXTENSIONS: dict[str, Extension] = {
             ("matmul_epilogue", "sep_block"),
             "GEMM + bias + activation epilogue in one kernel; fused "
             "depthwise->pointwise separable block (CNN only)",
-            ("cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm"),
+            ("cnn", "dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm",
+             "rnn_lm"),
         ),
         Extension(
             "zol",
             ("flash_attention", "wkv_chunk", "ssm_chunk"),
             "zero-overhead loops: Pallas grid pipelining / chunked streaming",
-            ("dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm"),
+            ("dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm",
+             "rnn_lm"),
         ),
     ]
 }
 
+# The global-union ladder: every extension at the level it first lands on
+# ANY class's ladder.  Kept for class-agnostic callers (resolve_table
+# without model_class=, bench_resources' per-level VMEM proxies) and as the
+# fallback for the "unknown" class.
 LEVEL_EXTENSIONS: dict[str, tuple[str, ...]] = {
     "v0": (),
     "v1": ("mac", "conv_mac"),
@@ -152,10 +186,56 @@ LEVEL_EXTENSIONS: dict[str, tuple[str, ...]] = {
            "acc_mac", "zol"),
 }
 
+# The attention-LM ladder: int8 decode-step GEMMs first (mac v1), the
+# residual+RMSNorm epilogue every pre-norm block emits (add2i v2), GEMM
+# epilogue fusion + in-epilogue skip-adds (fusedmac/acc_mac v3), and the
+# chunked-streaming attention/scan kernels with the int8-KV dequant path
+# (zol v4).
+_ATTN_LM_LADDER: dict[str, tuple[str, ...]] = {
+    "v0": (),
+    "v1": ("mac",),
+    "v2": ("mac", "add2i"),
+    "v3": ("mac", "add2i", "fusedmac", "acc_mac"),
+    "v4": ("mac", "add2i", "fusedmac", "acc_mac", "zol"),
+}
 
-def patterns_for_level(level: str) -> list[str]:
+# The recurrent ladder (RWKV-style): LayerNorm models emit no rmsnorm
+# epilogue, so add2i never lands; the wkv recurrence's chunk kernel is the
+# class's zol rung.
+_RNN_LADDER: dict[str, tuple[str, ...]] = {
+    "v0": (),
+    "v1": ("mac",),
+    "v2": ("mac",),
+    "v3": ("mac", "fusedmac"),
+    "v4": ("mac", "fusedmac", "zol"),
+}
+
+# model_class -> level -> extension names.  The CNN entry IS the original
+# global ladder (byte-identical — the paper's own evaluation class is
+# unchanged by the per-class split).
+CLASS_LADDERS: dict[str, dict[str, tuple[str, ...]]] = {
+    "cnn": LEVEL_EXTENSIONS,
+    "dense_lm": _ATTN_LM_LADDER,
+    "moe_lm": _ATTN_LM_LADDER,
+    "ssm_lm": _ATTN_LM_LADDER,
+    "hybrid_lm": _ATTN_LM_LADDER,
+    "enc_dec_lm": _ATTN_LM_LADDER,
+    "rnn_lm": _RNN_LADDER,
+}
+
+
+def ladder_for_class(model_class: str | None) -> dict[str, tuple[str, ...]]:
+    """The class's level ladder; ``None`` / unregistered classes (including
+    ``unknown``) fall back to the global-union ladder."""
+    if model_class is None:
+        return LEVEL_EXTENSIONS
+    return CLASS_LADDERS.get(model_class, LEVEL_EXTENSIONS)
+
+
+def patterns_for_level(level: str,
+                       model_class: str | None = None) -> list[str]:
     pats: list[str] = []
-    for ext in LEVEL_EXTENSIONS[level]:
+    for ext in ladder_for_class(model_class)[level]:
         pats.extend(EXTENSIONS[ext].patterns)
     return pats
 
@@ -166,9 +246,19 @@ def _ensure_backends_registered() -> None:
     import repro.kernels.ops  # noqa: F401
 
 
+def _selected(ladder: dict[str, tuple[str, ...]], level: str,
+              extensions: list[str] | None) -> set[str]:
+    names = ladder[level]
+    if extensions is not None:
+        wanted = set(extensions)
+        names = tuple(n for n in names if n in wanted)
+    return set(names)
+
+
 def resolve_table(level: str, backend: str = "ref", *,
                   extensions: list[str] | None = None,
-                  platform: str | None = None) -> dispatch.ResolvedTable:
+                  platform: str | None = None,
+                  model_class: str | None = None) -> dispatch.ResolvedTable:
     """Resolve (level, backend) -> an immutable pattern->impl table, ONCE.
 
     ``backend="ref"``/``"baseline"`` keeps the pure-jnp baselines (the cost
@@ -177,7 +267,11 @@ def resolve_table(level: str, backend: str = "ref", *,
     ``pallas`` per-pattern where it is registered for ``platform`` (default:
     the current JAX backend) and falls back to the baseline otherwise.
     ``extensions`` (names from :data:`EXTENSIONS`) restricts the table to the
-    class-aware selection.  Unknown levels and backends raise ``ValueError``.
+    class-aware selection.  ``model_class`` selects the class's own ladder
+    from :data:`CLASS_LADDERS`; omitted, the global-union ladder applies for
+    back-compat, with a ``DeprecationWarning`` whenever a class ladder would
+    have resolved differently at this level.  Unknown levels and backends
+    raise ``ValueError``.
     """
     if level not in LEVEL_EXTENSIONS:
         raise ValueError(
@@ -194,7 +288,19 @@ def resolve_table(level: str, backend: str = "ref", *,
             f"unknown backend {backend!r}; registered backends: "
             f"{sorted(known)}"
         )
-    names = LEVEL_EXTENSIONS[level]
+    ladder = ladder_for_class(model_class)
+    if model_class is None:
+        union = _selected(LEVEL_EXTENSIONS, level, extensions)
+        if any(_selected(lad, level, extensions) != union
+               for lad in CLASS_LADDERS.values()):
+            warnings.warn(
+                "resolve_table() without model_class= resolves the "
+                f"global-union ladder, but class ladders diverge at {level}; "
+                "pass model_class= (repro.marvel.compile does) to bake the "
+                "class's own rungs",
+                DeprecationWarning, stacklevel=2,
+            )
+    names = ladder[level]
     if extensions is not None:
         wanted = set(extensions)
         names = tuple(n for n in names if n in wanted)
@@ -209,18 +315,6 @@ def resolve_table(level: str, backend: str = "ref", *,
             elif backend in dispatch.registered(pat):
                 mapping[pat] = backend
     return dispatch.ResolvedTable(mapping)
-
-
-@contextlib.contextmanager
-def extension_context(level: str, backend: str = "ref"):
-    """Activate a processor version ambiently (thread-local).
-
-    Backward-compatible shim over :func:`resolve_table` +
-    :func:`repro.core.dispatch.use_table`; for a deployable artifact with the
-    table baked in, use ``repro.marvel.compile`` instead.
-    """
-    with dispatch.use_table(resolve_table(level, backend)):
-        yield
 
 
 def extensions_for_class(model_class: str, profile=None) -> list[str]:

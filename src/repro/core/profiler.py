@@ -239,9 +239,32 @@ def _recording(sink: list):
                 # what a NON-streaming (v0) attention would spill to HBM:
                 # the Sq x Skv score matrix, written + read in f32
                 q, k = args[0], args[1]
-                B, Sq, K, G, _ = q.shape
+                B, Sq, K, G, dh = q.shape
                 Skv = k.shape[1]
                 s.append(("attn_scores", int(2 * 4 * B * K * G * Sq * Skv)))
+                # the QK^T + PV matmul flops of this site — a weight-less
+                # SUBSET of matmul_flops the cost model stages onto the
+                # int8 MXU rate only when the int8-KV dequant path lands
+                # with zol at v4 (there are no weights to quantize at v1)
+                s.append(("attn_flops",
+                          int(2 * 2 * B * K * G * Sq * Skv * dh)))
+            if pattern == "wkv_chunk" and len(args) >= 4:
+                # the wkv recurrence's state-update + readout contractions
+                # ((N,N) state per head per token: r·S readout and k⊗v
+                # update) — like attn_flops, weight-less matmul work staged
+                # to the int8 rate only at v4
+                r = args[0]
+                if hasattr(r, "shape") and len(r.shape) == 4:
+                    B, S, H, N = r.shape
+                    s.append(("wkv_flops", int(4 * B * S * H * N * N)))
+            if pattern == "residual_rmsnorm" and args:
+                # what the UNFUSED form round-trips through HBM: the
+                # res + x sum written once by the add and re-read by the
+                # norm, in f32 — the add2i kernel produces both outputs in
+                # one VMEM pass (exact per-site analogue of conv_epilogue)
+                res = args[0]
+                if hasattr(res, "size"):
+                    s.append(("rmsnorm_epilogue", int(2 * 4 * res.size)))
         return orig_call(pattern, baseline, *args, **kwargs)
 
     dispatch.call = recording_call
@@ -368,6 +391,15 @@ class PatternProfile:
             "pool_saved_bytes": float(self.site_bytes["pool_epilogue"]
                                       + self.site_bytes["pool_int8"]),
             "attn_score_bytes": float(self.site_bytes["attn_scores"]),
+            # weight-less matmul shares (attention QK^T/PV, wkv state
+            # contractions) — subsets of matmul_flops that only join the
+            # int8 MXU rate when int8-KV lands with zol at v4
+            "attn_flops": float(self.site_bytes["attn_flops"]),
+            "wkv_flops": float(self.site_bytes["wkv_flops"]),
+            # exact per-site accounting of the res+x intermediate the
+            # fused residual+rmsnorm (add2i) kernel keeps in-register
+            "rmsnorm_epilogue_bytes": float(
+                self.site_bytes["rmsnorm_epilogue"]),
             "loop_iters": self.loop_iters,
         }
 

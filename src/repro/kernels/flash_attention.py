@@ -5,6 +5,12 @@ The paper's ``zol`` hardware loops eliminate per-iteration branch/bookkeeping
 analogue moves the KV loop into the Pallas *grid*: the Mosaic sequencer
 iterates KV blocks with double-buffered DMA, running softmax statistics live
 in VMEM scratch — no per-iteration scalar code, no S^2 HBM spill.
+
+Ladder rung: ``zol`` v4 on every attention-bearing LM ladder (dense/moe/
+ssm/hybrid/enc_dec — see ``core.extensions.CLASS_LADDERS``); at v4 the
+dispatcher also feeds this kernel dequantized int8-KV pages (per-(position,
+head) scale planes from the decode cache), so the attention matmuls join
+the int8 rate in the cost model.
 """
 from __future__ import annotations
 

@@ -8,6 +8,10 @@ accumulate or dequant round-trip through HBM.
 
 Fixed 128-aligned tile shapes play the role of the paper's hardcoded
 x20-x22 registers: one compiled kernel variant, reused everywhere.
+
+Ladder rung: ``mac`` v1 on every class ladder (``core.extensions.
+CLASS_LADDERS``) — for LM classes this is the int8 decode-step GEMM rung,
+the first rung their ladders share with the CNN ladder.
 """
 from __future__ import annotations
 

@@ -1,12 +1,13 @@
 """jit'd wrappers + dispatch registration: the ``pallas`` backend.
 
 Importing this module registers every kernel under its MARVEL pattern name,
-so ``marvel.compile(..., backend="pallas")`` / ``extension_context(level,
-backend="pallas")`` swap them in without any model-code change (chess_rewrite
-property).  Wrappers adapt the model-layer calling conventions (grouped GQA
-heads, optional bias, quant dicts) to the kernels' 2D/3D tile layouts,
-falling back to the jnp reference for cases a kernel doesn't cover
-(cross-attention, windows, decode with kv_len).
+so ``marvel.compile(..., backend="pallas")`` — or an ambient
+``dispatch.use_table(resolve_table(level, "pallas", model_class=...))`` —
+swaps them in without any model-code change (chess_rewrite property).
+Wrappers adapt the model-layer calling conventions (grouped GQA heads,
+optional bias, quant dicts) to the kernels' 2D/3D tile layouts, falling back
+to the jnp reference for cases a kernel doesn't cover (cross-attention,
+windows, decode with kv_len).
 
 Registrations carry ``platforms=("tpu",)``: ``backend="auto"`` only picks a
 Pallas kernel where it is the production form (Mosaic on TPU); on CPU the
@@ -229,14 +230,23 @@ def _pallas_flash_attention(q, k, v, *, causal=True, q_offset=0,
     bk = min(128, Skv)
     # non-causal with ragged KV would let zero-padded keys contribute
     pad_unsafe = (not causal) and (Skv % bk != 0)
-    if (window is not None or kv_len is not None or Sq == 1 or dh != dv
-            or pad_unsafe or k_scale is not None):
-        # int8 KV (k_scale set) rides the ref path: decode is Sq==1 anyway
+    if window is not None or kv_len is not None or Sq == 1 or dh != dv \
+            or pad_unsafe:
+        # decode (Sq==1), ragged decode, windows, cross-attention: ref path
+        # (which also dequants int8 KV when k_scale is set)
         return _flash_attention_ref(
             q, k, v, causal=causal, q_offset=q_offset, impl=impl,
             chunk=chunk, window=window, kv_len=kv_len,
             k_scale=k_scale, v_scale=v_scale,
         )
+    if k_scale is not None:
+        # int8-KV dequant path (zol v4): the serving tier stores KV as int8
+        # codes with per-(position, head) f32 scale planes (PR 7's
+        # quantize_kv_int8); the dequant is a rank-1 broadcast at the
+        # kernel boundary, so the cache stays int8 in HBM and the streaming
+        # kernel consumes the dequantized tiles
+        k = (k.astype(jnp.float32) * k_scale[..., None]).astype(q.dtype)
+        v = (v.astype(jnp.float32) * v_scale[..., None]).astype(q.dtype)
     # flatten (B, K, G) -> BH; repeat kv per group
     qf = q.transpose(0, 2, 3, 1, 4).reshape(B * K * G, Sq, dh)
     kf = jnp.repeat(

@@ -4,6 +4,10 @@ The paper's ``add2i`` fuses two consecutive immediate adds (two register
 updates, one slot).  TPU analogue: the residual update and the normalized
 stream are produced in one VMEM pass — two tensor "registers" written, one
 HBM round-trip instead of three (add out, norm in, norm out).
+
+Ladder rung: ``add2i`` v2 on the CNN and RMSNorm-bearing LM ladders; the
+``rnn_lm`` ladder skips it (RWKV is a LayerNorm model — no fused residual+
+RMSNorm epilogue sites), see ``core.extensions.CLASS_LADDERS``.
 """
 from __future__ import annotations
 

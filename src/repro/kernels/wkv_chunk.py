@@ -5,6 +5,10 @@ profiler recommends fusing the *recurrence* loop instead of attention.  The
 chunk dimension is the innermost grid axis, so the (N,N) state lives in VMEM
 scratch across chunk iterations — the sequencer runs the loop, zero scalar
 overhead, state never spills per-chunk.
+
+Ladder rung: ``zol`` v4 on the ``rnn_lm`` ladder (``core.extensions.
+CLASS_LADDERS``) — the wkv recurrence is that class's hot pattern, playing
+the role flash attention plays for the attention classes.
 """
 from __future__ import annotations
 

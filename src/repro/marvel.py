@@ -364,8 +364,11 @@ def compile(fn: Callable, *example_args, level: str = "v4",
 
     # 3) class-aware extension selection -> explicit resolved table, baked
     # by closure capture: jit/AOT tracing of bound_fn resolves every
-    # dispatch site against it at trace time
-    table = resolve_table(level, backend, extensions=exts, platform=platform)
+    # dispatch site against it at trace time; the classified class picks
+    # its OWN ladder (CLASS_LADDERS), so an LM program never carries
+    # CNN-only patterns and vice versa
+    table = resolve_table(level, backend, extensions=exts, platform=platform,
+                          model_class=model_class)
     bound_fn = table.bind(model_fn)
 
     # 4) chess_rewrite of the bound program — the fusions land in the

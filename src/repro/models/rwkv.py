@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.common import shd
 from repro.core import dispatch
-from repro.models.layers import dense_init, layer_norm, mac_matmul
+from repro.models.layers import dense_init, layer_norm, mac_matmul, matmul_epilogue
 
 DECAY_LORA = 64
 
@@ -133,7 +133,8 @@ def time_mix(p, x, cfg, s0=None, chunk=64):
     out = out[:, :S].reshape(B, S, d).astype(x.dtype)
     out = layer_norm(out, p["ln_x_s"], p["ln_x_b"])
     out = out * jax.nn.silu(g)
-    return shd(mac_matmul(out, p["wo"]), "batch", "seq", None), s_final
+    # output projection through the fusedmac epilogue (rnn_lm ladder v3+)
+    return shd(matmul_epilogue(out, p["wo"]), "batch", "seq", None), s_final
 
 
 def channel_mix(p, x, cfg):
@@ -142,7 +143,8 @@ def channel_mix(p, x, cfg):
     xr = _lerp(x, xp, p["mu_cr"])
     h = jnp.square(jax.nn.relu(mac_matmul(xk, p["cm_k"])))
     h = shd(h, "batch", "seq", "mlp")
-    return jax.nn.sigmoid(mac_matmul(xr, p["cm_r"])) * mac_matmul(h, p["cm_v"])
+    # down-projection through the fusedmac epilogue (rnn_lm ladder v3+)
+    return jax.nn.sigmoid(mac_matmul(xr, p["cm_r"])) * matmul_epilogue(h, p["cm_v"])
 
 
 def rwkv_block(p, x, cfg, chunk=64):

@@ -13,7 +13,10 @@ import jax.numpy as jnp
 
 from repro.common import shd
 from repro.core import dispatch
-from repro.models.layers import dense_init, mac_matmul, matmul_epilogue
+from repro.models.layers import (
+    dense_init, embed_init, embed_logits, embed_lookup, mac_matmul,
+    matmul_epilogue, mlp, mlp_init, residual_rmsnorm, rms_norm,
+)
 
 
 def ssm_init(key, cfg, dtype):
@@ -144,3 +147,49 @@ def ssm_decode(p, x, state, cfg):
     out = y.astype(x.dtype) * jax.nn.silu(z)
     out = matmul_epilogue(out[:, None], p["out_proj"])
     return out, {"h": h, "conv": conv_buf[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# pure-SSM stack (the ssm_lm class exemplar)
+# ---------------------------------------------------------------------------
+
+
+def ssm_stack_init(key, cfg, dtype=None):
+    """Params for a small *pure*-SSM LM (Mamba-style): embed -> n_layers x
+    (SSM sublayer + gated MLP with residual_rmsnorm between) -> tied logits.
+
+    No registered arch is attention-free selective-scan (hymba is hybrid,
+    rwkv6 is a wkv recurrence), so this stack is the ``ssm_lm`` exemplar the
+    class-ladder tests and benchmarks profile and compile.
+    """
+    dtype = jnp.dtype(dtype or cfg.param_dtype)
+    ks = jax.random.split(key, cfg.n_layers + 1)
+
+    def layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ssm": ssm_init(k1, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": mlp_init(k2, cfg, dtype),
+        }
+
+    return {
+        "embed": embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "layers": [layer(k) for k in ks[1:]],
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def ssm_stack_forward(params, tokens, cfg, run):
+    """Tokens (B,S) -> (logits, aux). The profile shows ssm_chunk sites and
+    no attention, so classify() -> ``ssm_lm`` and compile() resolves that
+    class's ladder."""
+    x = embed_lookup(params["embed"], tokens)
+    for p in params["layers"]:
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        s = ssm_forward(p["ssm"], h, cfg, chunk=run.ssm_chunk)
+        x, h2 = residual_rmsnorm(x, s, p["ln2"], cfg.norm_eps)
+        x = mlp(p["mlp"], h2, cfg, residual=x)  # acc_mac skip-add
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return embed_logits(params["embed"], x), jnp.zeros((), jnp.float32)

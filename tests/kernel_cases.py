@@ -98,6 +98,57 @@ def pool_case(seed, h, w_sp, c, dtype=jnp.float32, batch=2):
     return jax.random.normal(key, (batch, h, w_sp, c), dtype)
 
 
+# --- LM-kernel cases (mac / add2i / zol rungs of the LM class ladders) ---
+
+
+def mac_case(seed, m, k, n):
+    """(x_int8, w_int8, scale) for a mac_matmul_int8 (int8 GEMM) case."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.randint(ks[0], (m, k), -127, 128, jnp.int8)
+    w = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+    s = jax.random.uniform(ks[2], (n,), jnp.float32) * 0.02
+    return x, w, s
+
+
+def rmsnorm_case(seed, rows, d):
+    """(res, x, scale) for a fused residual+RMSNorm epilogue case."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    res = jax.random.normal(ks[0], (rows, d))
+    x = jax.random.normal(ks[1], (rows, d))
+    scale = 0.5 + jax.random.uniform(ks[2], (d,))
+    return res, x, scale
+
+
+def attn_case(seed, b, sq, kheads, g, dh, skv=None, int8_kv=False):
+    """(q, k, v, k_scale, v_scale): q grouped (B,Sq,K,G,dh); with
+    ``int8_kv`` the KV comes back as int8 codes + per-(position, head)
+    f32 scale planes — the serving tier's quantized-cache layout."""
+    skv = skv or sq
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, sq, kheads, g, dh))
+    k = jax.random.normal(ks[1], (b, skv, kheads, dh))
+    v = jax.random.normal(ks[2], (b, skv, kheads, dh))
+    if not int8_kv:
+        return q, k, v, None, None
+    from repro.models.layers import quantize_kv_int8
+
+    kq, k_s = quantize_kv_int8(k)
+    vq, v_s = quantize_kv_int8(v)
+    return q, kq, vq, k_s, v_s
+
+
+def wkv_case(seed, b, s, heads, n):
+    """(r, k, v, lw, u, s0) for a chunked WKV recurrence case; ``lw`` is a
+    strictly-negative log-decay, as the model's low-rank tanh path emits."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r, k, v = (jax.random.normal(ks[i], (b, s, heads, n)) * 0.3
+               for i in range(3))
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, heads, n)) * 0.3)
+    u = jax.random.normal(ks[4], (heads, n)) * 0.3
+    s0 = jnp.zeros((b, heads, n, n))
+    return r, k, v, lw, u, s0
+
+
 # ---------------------------------------------------------------------------
 # quantized oracles (bit-faithful to the wrappers' on-the-fly quantization)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,194 @@
+"""Per-class extension ladders: CLASS_LADDERS resolution and semantics.
+
+The api_redesign acceptance contract:
+
+1. The CNN ladder is byte-identical to the pre-ladder global registry —
+   the refactor moves LM classes onto their own rungs without touching the
+   paper's CNN results.
+2. Every LM class (dense/moe/ssm/hybrid/enc_dec vs rnn) resolves a distinct
+   ladder through ``resolve_table``/``marvel.compile``, and the classless
+   call warns (DeprecationWarning) exactly when the ladders diverge.
+3. The ladder changes cost, never semantics: one small config per LM class
+   produces v0..v4-agreeing logits under the class's own table (pallas
+   backend, interpret mode) — the LM mirror of test_cross_version.py.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels.ops  # noqa: F401  (registers pallas impls)
+from repro import marvel
+from repro.configs import get_arch, smoke_variant
+from repro.configs.base import RunConfig
+from repro.core import dispatch
+from repro.core.extensions import (
+    CLASS_LADDERS, LEVEL_EXTENSIONS, ladder_for_class, resolve_table,
+)
+from repro.models import ssm as SSM
+from repro.models import transformer as T
+
+RUN = RunConfig(seq_len=32, global_batch=1, attn_chunk=16, ssm_chunk=16,
+                wkv_chunk=16)
+LEVELS = ("v0", "v1", "v2", "v3", "v4")
+
+# frozen copy of the global registry as of the per-class-ladder redesign;
+# the CNN ladder must never drift from it
+_CNN_LADDER_FROZEN = {
+    "v0": (),
+    "v1": ("mac", "conv_mac"),
+    "v2": ("mac", "conv_mac", "add2i", "dw_mac", "pool"),
+    "v3": ("mac", "conv_mac", "add2i", "dw_mac", "pool", "fusedmac",
+           "acc_mac"),
+    "v4": ("mac", "conv_mac", "add2i", "dw_mac", "pool", "fusedmac",
+           "acc_mac", "zol"),
+}
+
+
+# ---------------------------------------------------------------------------
+# ladder registry + resolution
+# ---------------------------------------------------------------------------
+
+
+def test_cnn_ladder_byte_identical_to_global_registry():
+    assert CLASS_LADDERS["cnn"] == _CNN_LADDER_FROZEN == LEVEL_EXTENSIONS
+
+
+def test_ladders_are_cumulative_and_distinct():
+    for cls, ladder in CLASS_LADDERS.items():
+        prev: set = set()
+        for lvl in LEVELS:
+            cur = set(ladder[lvl])
+            assert prev <= cur, (cls, lvl)
+            prev = cur
+    # the recurrent class skips the RMSNorm-epilogue and acc rungs
+    assert "add2i" not in CLASS_LADDERS["rnn_lm"]["v4"]
+    assert "acc_mac" not in CLASS_LADDERS["rnn_lm"]["v4"]
+    assert "add2i" in CLASS_LADDERS["dense_lm"]["v2"]
+    # LM ladders never carry CNN-only extensions
+    for cls in ("dense_lm", "moe_lm", "ssm_lm", "hybrid_lm", "enc_dec_lm",
+                "rnn_lm"):
+        assert not {"conv_mac", "dw_mac", "pool"} & set(
+            CLASS_LADDERS[cls]["v4"]), cls
+    # unknown / unregistered classes fall back to the global union
+    assert ladder_for_class(None) is LEVEL_EXTENSIONS
+    assert ladder_for_class("unknown") is LEVEL_EXTENSIONS
+    assert ladder_for_class("not_a_class") is LEVEL_EXTENSIONS
+
+
+def test_resolve_table_selects_class_ladder():
+    cnn = resolve_table("v4", "pallas", model_class="cnn")
+    dense = resolve_table("v4", "pallas", model_class="dense_lm")
+    rnn = resolve_table("v4", "pallas", model_class="rnn_lm")
+    assert "fused_conv" in cnn and "pool" in cnn
+    assert "fused_conv" not in dense and "pool" not in dense
+    assert "residual_rmsnorm" in dense  # add2i rung
+    assert "residual_rmsnorm" not in rnn  # LayerNorm class: no add2i
+    assert "wkv_chunk" in rnn and "mac_matmul_int8" in rnn
+    assert cnn != dense != rnn
+    # the classless call resolves the global union (== the CNN table here)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        union = resolve_table("v4", "pallas")
+    assert union == cnn
+
+
+def test_classless_resolve_warns_exactly_when_ladders_diverge():
+    # non-baseline backend + divergent ladders: warn
+    with pytest.warns(DeprecationWarning, match="model_class"):
+        resolve_table("v2", "pallas")
+    # baseline backends resolve the empty table before the ladder matters
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert len(resolve_table("v2", "ref")) == 0
+        # v0 selects nothing on every ladder: no divergence, no warning
+        resolve_table("v0", "pallas")
+        # an extensions filter that equalizes the ladders: no warning
+        resolve_table("v4", "pallas", extensions=("mac",))
+
+
+# ---------------------------------------------------------------------------
+# class exemplars (one small config per LM class)
+# ---------------------------------------------------------------------------
+
+
+def _dense_lm():
+    cfg = smoke_variant(get_arch("granite-3-2b"))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return lambda t: T.forward_lm(params, t, cfg, RUN)[0]
+
+
+def _moe_lm():
+    cfg = smoke_variant(get_arch("llama4-maverick-400b-a17b"))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return lambda t: T.forward_lm(params, t, cfg, RUN)[0]
+
+
+def _ssm_lm():
+    cfg = smoke_variant(get_arch("hymba-1.5b"))
+    params = SSM.ssm_stack_init(jax.random.PRNGKey(0), cfg)
+    return lambda t: SSM.ssm_stack_forward(params, t, cfg, RUN)[0]
+
+
+def _rnn_lm():
+    cfg = smoke_variant(get_arch("rwkv6-1.6b"))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return lambda t: T.forward_lm(params, t, cfg, RUN)[0]
+
+
+_EXEMPLARS = {
+    "dense_lm": _dense_lm,
+    "moe_lm": _moe_lm,
+    "ssm_lm": _ssm_lm,
+    "rnn_lm": _rnn_lm,
+}
+
+
+def _tokens():
+    return jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0, 256)
+
+
+# ---------------------------------------------------------------------------
+# compile() resolves each class's own ladder, with modeled speedup
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls", sorted(_EXEMPLARS))
+def test_compile_resolves_class_ladder_with_speedup(cls):
+    fn = _EXEMPLARS[cls]()
+    prog = marvel.compile(fn, _tokens(), level="v4", backend="pallas",
+                          precompile=False, do_rewrite=False)
+    assert prog.model_class == cls
+    # the baked table is the class ladder's, not the global union's
+    assert "fused_conv" not in prog.table and "pool" not in prog.table
+    if cls == "rnn_lm":
+        assert "residual_rmsnorm" not in prog.table
+    else:
+        assert "residual_rmsnorm" in prog.table
+    # the class reports a modeled v4 win on both targets (fig11-style)
+    assert prog.report.tpu_speedup_v4 > 1.0, cls
+    assert prog.report.rv32_speedup_v4 > 1.0, cls
+
+
+# ---------------------------------------------------------------------------
+# cross-version equivalence per class (cost changes, semantics never)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls", sorted(_EXEMPLARS))
+def test_lm_logits_agree_across_all_versions(cls):
+    fn = _EXEMPLARS[cls]()
+    tok = _tokens()
+    base = np.asarray(fn(tok), np.float32)  # v0: pure baseline
+    assert np.isfinite(base).all()
+    for lvl in LEVELS[1:]:
+        table = resolve_table(lvl, "pallas", model_class=cls)
+        with dispatch.use_table(table):
+            out = np.asarray(fn(tok), np.float32)
+        assert np.isfinite(out).all(), (cls, lvl)
+        # bf16 models, f32-accumulating kernels vs bf16 einsum baseline:
+        # allow bf16-scale absolute noise, require matching greedy decisions
+        np.testing.assert_allclose(out, base, atol=0.8, rtol=0)
+        assert (out.argmax(-1) == base.argmax(-1)).mean() > 0.99, (cls, lvl)

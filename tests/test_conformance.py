@@ -44,10 +44,7 @@ except ImportError:  # container without hypothesis: fuzz layer skips
 def run_mac_matmul(seed=0, m=64, k=96, n=32):
     from repro.kernels.mac_matmul import mac_matmul_int8
 
-    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    x = jax.random.randint(ks[0], (m, k), -127, 128, jnp.int8)
-    w = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
-    s = jax.random.uniform(ks[2], (n,), jnp.float32) * 0.02
+    x, w, s = kc.mac_case(seed, m, k, n)
     got = mac_matmul_int8(x, w, s)
     want = ref.mac_matmul_int8_ref(x, w, s)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -134,10 +131,7 @@ def run_pool(seed=0, h=13, w_sp=11, c=5, op="max", k=2, stride=2,
 
 
 def run_residual_rmsnorm(seed=0, rows=33, d=96):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
-    res = jax.random.normal(ks[0], (rows, d))
-    x = jax.random.normal(ks[1], (rows, d))
-    scale = jnp.ones((d,))
+    res, x, scale = kc.rmsnorm_case(seed, rows, d)
     new_res, normed = ops._pallas_residual_rmsnorm(res, x, scale)
     want_res, want_norm = ref.residual_rmsnorm_ref(res, x, scale)
     tol = kc.tol_from_acc(jnp.float32, d)
@@ -147,26 +141,22 @@ def run_residual_rmsnorm(seed=0, rows=33, d=96):
                                **tol)
 
 
-def run_flash_attention(seed=0, b=1, sq=64, kheads=2, g=2, dh=16):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    q = jax.random.normal(ks[0], (b, sq, kheads, g, dh))
-    k = jax.random.normal(ks[1], (b, sq, kheads, dh))
-    v = jax.random.normal(ks[2], (b, sq, kheads, dh))
+def run_flash_attention(seed=0, b=1, sq=64, kheads=2, g=2, dh=16,
+                        int8_kv=False):
     from repro.models.layers import _flash_attention_ref
 
-    got = ops._pallas_flash_attention(q, k, v, causal=True)
-    want = _flash_attention_ref(q, k, v, causal=True)
+    q, k, v, k_s, v_s = kc.attn_case(seed, b, sq, kheads, g, dh,
+                                     int8_kv=int8_kv)
+    got = ops._pallas_flash_attention(q, k, v, causal=True,
+                                      k_scale=k_s, v_scale=v_s)
+    want = _flash_attention_ref(q, k, v, causal=True,
+                                k_scale=k_s, v_scale=v_s)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                **kc.tol_from_acc(jnp.float32, sq, slack=4.0))
 
 
 def run_wkv_chunk(seed=0, b=1, s=32, heads=2, n=8, chunk=16):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
-    r, k, v = (jax.random.normal(ks[i], (b, s, heads, n)) * 0.3
-               for i in range(3))
-    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, heads, n)) * 0.3)
-    u = jax.random.normal(ks[4], (heads, n)) * 0.3
-    s0 = jnp.zeros((b, heads, n, n))
+    r, k, v, lw, u, s0 = kc.wkv_case(seed, b, s, heads, n)
     got, got_state = ops._pallas_wkv_chunk(r, k, v, lw, u, s0, chunk)
     want, want_state = ref.wkv_ref_sequential(r, k, v, lw, u, s0)
     tol = kc.tol_from_acc(jnp.float32, s, slack=8.0)
@@ -189,6 +179,14 @@ RUNNERS = {
 }
 
 
+# patterns with a dedicated fuzz lane (all four LM kernels included; only
+# sep_block rides solely the deterministic grid + guards)
+FUZZ_COVERED = (
+    "fused_conv", "depthwise_conv", "pool", "matmul_epilogue",
+    "mac_matmul_int8", "residual_rmsnorm", "flash_attention", "wkv_chunk",
+)
+
+
 def test_every_registered_pallas_impl_has_conformance_cases():
     """A kernel registered without conformance cases fails by construction."""
     registered = set(dispatch.registered_patterns("pallas"))
@@ -198,6 +196,14 @@ def test_every_registered_pallas_impl_has_conformance_cases():
         f"registered pallas impls without conformance cases: {sorted(missing)}"
         " — add a runner to tests/test_conformance.py::RUNNERS"
     )
+    # every LM kernel has grid AND fuzz coverage, not just a runner
+    gridded = {impl for impl, _ in GRID}
+    lm_kernels = {"mac_matmul_int8", "residual_rmsnorm", "flash_attention",
+                  "wkv_chunk"}
+    assert lm_kernels <= gridded
+    assert lm_kernels <= set(FUZZ_COVERED) <= set(RUNNERS)
+    if HAVE_HYPOTHESIS:
+        assert len(_FUZZERS) == len(FUZZ_COVERED)
 
 
 # ---------------------------------------------------------------------------
@@ -238,9 +244,21 @@ GRID = [
     ("pool", dict(op="global_avg")),
     ("pool", dict(op="global_avg", dtype=jnp.int8)),
     ("pool", dict(h=16, w_sp=16, c=130, op="max", k=2)),
+    # LM-kernel grid (the LM class ladders' mac / add2i / zol rungs):
+    # decode-step GEMM (m=1), multi-tile / odd shapes, multi-block q,
+    # grouped-query layouts, the int8-KV dequant path, and multi-chunk
+    # vs single-chunk WKV scans
+    ("mac_matmul_int8", dict(m=1, k=256, n=128)),
     ("residual_rmsnorm", dict()),
+    ("residual_rmsnorm", dict(rows=130, d=257)),
     ("flash_attention", dict()),
+    ("flash_attention", dict(sq=200, dh=32)),
+    ("flash_attention", dict(b=2, kheads=1, g=4, dh=8)),
+    ("flash_attention", dict(int8_kv=True)),
+    ("flash_attention", dict(sq=130, kheads=3, g=1, int8_kv=True)),
     ("wkv_chunk", dict()),
+    ("wkv_chunk", dict(s=64, chunk=16, heads=3, n=16)),
+    ("wkv_chunk", dict(b=2, s=48, chunk=48)),
 ]
 
 
@@ -456,6 +474,25 @@ if HAVE_HYPOTHESIS:
         st.integers(1, 40), st.sampled_from(["none", "relu", "silu"]),
         st.booleans(),
     )
+    _mac_params = st.tuples(
+        st.integers(0, 10_000), st.integers(1, 150), st.integers(1, 300),
+        st.integers(1, 150),
+    )
+    _rms_params = st.tuples(
+        st.integers(0, 10_000), st.integers(1, 140), st.integers(8, 300),
+    )
+    _attn_params = st.tuples(
+        st.integers(0, 10_000), st.sampled_from([1, 2]),
+        st.sampled_from([16, 33, 64, 130]),            # sq (crosses bq=128)
+        st.integers(1, 3), st.integers(1, 3),          # kv heads, group size
+        st.sampled_from([8, 16, 32]),                  # dh
+        st.booleans(),                                 # int8-KV path
+    )
+    _wkv_params = st.tuples(
+        st.integers(0, 10_000), st.sampled_from([1, 2]),
+        st.integers(1, 3), st.sampled_from([4, 8, 16]),  # heads, n
+        st.sampled_from([4, 8, 16]), st.integers(1, 4),  # chunk, n_chunks
+    )
 
     def _fuzz_conv(p):
         seed, h, w, cin, cout, k, stride, padding, act, res = p
@@ -475,8 +512,24 @@ if HAVE_HYPOTHESIS:
         seed, m, k, n, act, res = p
         run_matmul_epilogue(seed, m, k, n, act, residual=res)
 
+    def _fuzz_mac(p):
+        run_mac_matmul(*p)
+
+    def _fuzz_rmsnorm(p):
+        run_residual_rmsnorm(*p)
+
+    def _fuzz_attn(p):
+        seed, b, sq, kheads, g, dh, int8_kv = p
+        run_flash_attention(seed, b, sq, kheads, g, dh, int8_kv=int8_kv)
+
+    def _fuzz_wkv(p):
+        seed, b, heads, n, chunk, nc = p
+        run_wkv_chunk(seed, b, chunk * nc, heads, n, chunk)
+
     _FUZZERS = [(_fuzz_conv, _conv_params), (_fuzz_dw, _dw_params),
-                (_fuzz_pool, _pool_params), (_fuzz_mm, _mm_params)]
+                (_fuzz_pool, _pool_params), (_fuzz_mm, _mm_params),
+                (_fuzz_mac, _mac_params), (_fuzz_rmsnorm, _rms_params),
+                (_fuzz_attn, _attn_params), (_fuzz_wkv, _wkv_params)]
 
     def _make(fuzzer, params, max_examples):
         @settings(max_examples=max_examples, deadline=None)

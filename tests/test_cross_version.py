@@ -16,8 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import profiler
-from repro.core.extensions import extension_context
+from repro.core import dispatch, profiler
+from repro.core.extensions import resolve_table
 from repro.kernels import fused_conv as fc
 from repro.kernels import matmul_epilogue as me
 from repro.kernels import pooling as pk
@@ -53,7 +53,8 @@ def test_logits_agree_across_all_versions(name, in_shape, tol):
     base = apply(p, x)  # v0: pure baseline
     assert np.isfinite(np.asarray(base)).all()
     for lvl in LEVELS[1:]:
-        with extension_context(lvl, backend="pallas"):
+        table = resolve_table(lvl, "pallas", model_class="cnn")
+        with dispatch.use_table(table):
             out = apply(p, x)
         rel = float(jnp.linalg.norm(out - base) / jnp.linalg.norm(base))
         assert np.isfinite(np.asarray(out)).all(), lvl
@@ -95,7 +96,7 @@ def test_v4_dispatch_zero_baseline_conv_and_pool_sites(name, monkeypatch):
                   "depthwise_conv_ref", "sep_block_ref"):
         monkeypatch.setattr(ref, rname, falling(getattr(ref, rname), rname))
 
-    with extension_context("v4", backend="pallas"):
+    with dispatch.use_table(resolve_table("v4", "pallas", model_class="cnn")):
         jax.eval_shape(lambda x: apply(p, x), x)
 
     assert not fallbacks, fallbacks  # the acceptance criterion
@@ -130,7 +131,7 @@ def test_v2_pooling_dispatches_through_pool_kernels(name, monkeypatch):
         ref, "pool_ref",
         lambda *a, **k: ref_calls.append(1) or real_ref(*a, **k),
     )
-    with extension_context("v2", backend="pallas"):
+    with dispatch.use_table(resolve_table("v2", "pallas", model_class="cnn")):
         jax.eval_shape(lambda x: apply(p, x), x)
     assert len(calls) == sites["pool"]
     assert not ref_calls

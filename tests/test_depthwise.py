@@ -18,9 +18,9 @@ import pytest
 from kernel_cases import dw_case as _dw_case
 from kernel_cases import quantize as _quant
 from kernel_cases import sep_case as _sep_case
-from repro.core import costmodel, profiler
+from repro.core import costmodel, dispatch, profiler
 from repro.core.extensions import (
-    EXTENSIONS, LEVEL_EXTENSIONS, extension_context, patterns_for_level,
+    EXTENSIONS, LEVEL_EXTENSIONS, patterns_for_level, resolve_table,
 )
 from repro.kernels import depthwise_conv as dwk
 from repro.kernels import fused_conv as fc
@@ -212,7 +212,7 @@ def test_mobile_cnns_zero_grouped_baseline_fallbacks_at_v2(name, monkeypatch):
         lambda *a, **k: (grouped_ref.append(1) if k.get("groups", 1) != 1
                          else None) or real_ref(*a, **k),
     )
-    with extension_context("v2", backend="pallas"):
+    with dispatch.use_table(resolve_table("v2", "pallas", model_class="cnn")):
         jax.eval_shape(lambda x: apply(p, x), x)
     assert len(dw_calls) == sites["depthwise_conv"]
     assert not grouped_ref  # the acceptance criterion
@@ -234,7 +234,7 @@ def test_mobile_cnns_fuse_sep_blocks_at_v4(name, monkeypatch):
     real_dw = dwk.depthwise_conv_int8
     monkeypatch.setattr(dwk, "depthwise_conv_int8",
                         lambda *a, **k: dw_calls.append(1) or real_dw(*a, **k))
-    with extension_context("v4", backend="pallas"):
+    with dispatch.use_table(resolve_table("v4", "pallas", model_class="cnn")):
         jax.eval_shape(lambda x: apply(p, x), x)
     assert len(sep_calls) == sites["sep_block"] > 0
     assert not dw_calls
@@ -248,7 +248,8 @@ def test_mobilenetv1_e2e_v2_and_v4_pallas():
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
     base = apply(p, x)
     for lvl in ("v2", "v4"):
-        with extension_context(lvl, backend="pallas"):
+        with dispatch.use_table(resolve_table(lvl, "pallas",
+                                              model_class="cnn")):
             fused = apply(p, x)
         rel = float(jnp.linalg.norm(fused - base) / jnp.linalg.norm(base))
         assert np.isfinite(np.asarray(fused)).all()

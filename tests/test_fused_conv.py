@@ -14,9 +14,9 @@ import pytest
 
 from kernel_cases import conv_case as _rand_case
 from kernel_cases import quant_conv_oracle as _quant_oracle
-from repro.core import costmodel, profiler
+from repro.core import costmodel, dispatch, profiler
 from repro.core.extensions import (
-    EXTENSIONS, extension_context, patterns_for_level,
+    EXTENSIONS, patterns_for_level, resolve_table,
 )
 from repro.kernels import fused_conv as fc
 from repro.kernels import ops  # noqa: F401  (registers pallas impls)
@@ -116,7 +116,7 @@ def test_all_cnns_dispatch_every_nongrouped_conv(name, monkeypatch):
         return real(*a, **k)
 
     monkeypatch.setattr(fc, "fused_conv_int8", counting)
-    with extension_context("v4", backend="pallas"):
+    with dispatch.use_table(resolve_table("v4", "pallas", model_class="cnn")):
         jax.eval_shape(lambda x: apply(p, x), x)
     assert total > 0
     assert len(calls) == total - absorbed > 0
@@ -127,7 +127,7 @@ def test_lenet5_e2e_v4_pallas():
     p = init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (2, *in_shape))
     base = apply(p, x)
-    with extension_context("v4", backend="pallas"):
+    with dispatch.use_table(resolve_table("v4", "pallas", model_class="cnn")):
         fused = apply(p, x)
     rel = float(jnp.linalg.norm(fused - base) / jnp.linalg.norm(base))
     assert np.isfinite(np.asarray(fused)).all()
@@ -141,7 +141,7 @@ def test_mobilenetv2_e2e_v4_pallas():
     p = init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
     base = apply(p, x)
-    with extension_context("v4", backend="pallas"):
+    with dispatch.use_table(resolve_table("v4", "pallas", model_class="cnn")):
         fused = apply(p, x)
     rel = float(jnp.linalg.norm(fused - base) / jnp.linalg.norm(base))
     assert np.isfinite(np.asarray(fused)).all()

@@ -15,7 +15,8 @@ import numpy as np
 import pytest
 
 from repro import marvel
-from repro.core.extensions import extension_context, resolve_table
+from repro.core import dispatch
+from repro.core.extensions import resolve_table
 from repro.core.pipeline import MarvelReport, run_marvel_flow
 from repro.models.cnn import CNN_MODELS, get_cnn
 
@@ -185,7 +186,7 @@ def test_baked_program_ignores_ambient_context():
     params, apply, x = _setup("lenet5")
     prog = marvel.compile(lambda a: apply(params, a), x, backend="ref")
     y0 = np.asarray(prog(x))
-    with extension_context("v4", backend="pallas"):
+    with dispatch.use_table(resolve_table("v4", "pallas", model_class="cnn")):
         y1 = np.asarray(prog(x))
     np.testing.assert_array_equal(y0, y1)
     assert prog.cache_misses == 1  # no retrace, no recompile

@@ -4,10 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import costmodel, profiler, rewrite
+from repro.core import costmodel, dispatch, profiler, rewrite
 from repro.core.classes import classify, recommend
 from repro.core.extensions import (
-    LEVEL_EXTENSIONS, extension_context, patterns_for_level,
+    LEVEL_EXTENSIONS, patterns_for_level, resolve_table,
 )
 from repro.core.pipeline import run_marvel_flow
 from repro.models.cnn import get_cnn
@@ -65,7 +65,7 @@ def test_classify_lm_families():
 
     run = RunConfig(seq_len=32, global_batch=1, attn_chunk=16, ssm_chunk=16,
                     wkv_chunk=16)
-    for arch, want in [("granite-3-2b", "dense_lm"), ("rwkv6-1.6b", "ssm_lm"),
+    for arch, want in [("granite-3-2b", "dense_lm"), ("rwkv6-1.6b", "rnn_lm"),
                        ("hymba-1.5b", "hybrid_lm")]:
         cfg = smoke_variant(get_arch(arch))
         params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -105,15 +105,15 @@ def test_levels_are_cumulative():
     assert patterns_for_level("v4")  # non-empty
 
 
-def test_extension_context_swaps_pallas_impls():
+def test_resolved_table_swaps_pallas_impls():
     import repro.kernels.ops  # noqa: F401  (registers)
-    from repro.core import dispatch
     from repro.models.layers import residual_rmsnorm
 
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
     s = jnp.ones((128,))
     base = residual_rmsnorm(x, x, s)
-    with extension_context("v4", backend="pallas"):
+    table = resolve_table("v4", "pallas", model_class="dense_lm")
+    with dispatch.use_table(table):
         fused = residual_rmsnorm(x, x, s)
     np.testing.assert_allclose(np.asarray(base[1]), np.asarray(fused[1]),
                                rtol=1e-5, atol=1e-5)
@@ -224,24 +224,22 @@ def test_dispatch_resolved_table_hashable_mapping():
     assert dict(a) == {"p": "x", "q": "y"}
 
 
-def test_extension_context_is_resolve_table_shim():
+def test_use_table_activates_resolved_table():
     import repro.kernels.ops  # noqa: F401
-    from repro.core import dispatch
-    from repro.core.extensions import resolve_table
 
-    with extension_context("v2", backend="pallas"):
-        assert dispatch.current_table() == resolve_table("v2", "pallas")
-    with extension_context("v4"):  # ref: pure-baseline table
-        assert len(dispatch.current_table()) == 0
+    table = resolve_table("v2", "pallas", model_class="cnn")
+    with dispatch.use_table(table):
+        assert dispatch.current_table() == table
+    assert dispatch.current_table() == dispatch.EMPTY_TABLE
+    # a baseline backend resolves to the empty (pure-v0) table
+    assert resolve_table("v4", "ref") == dispatch.EMPTY_TABLE
 
 
-def test_extension_context_unknown_backend_raises():
+def test_resolve_table_unknown_backend_raises():
     with pytest.raises(ValueError, match="pallsa"):
-        with extension_context("v4", backend="pallsa"):
-            pass  # pragma: no cover
+        resolve_table("v4", backend="pallsa")
     with pytest.raises(ValueError, match="unknown processor version"):
-        with extension_context("v99"):
-            pass  # pragma: no cover
+        resolve_table("v99")
 
 
 def test_quantize_roundtrip_error_bounded():

@@ -6,7 +6,8 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_variant
 from repro.configs.base import RunConfig
-from repro.core.extensions import extension_context
+from repro.core import dispatch
+from repro.core.extensions import resolve_table
 from repro.core.pipeline import run_marvel_flow
 from repro.models import transformer as T
 from repro.models.cnn import get_cnn
@@ -41,7 +42,8 @@ def test_extension_levels_numerically_equivalent():
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
     logits_v0, _ = T.forward_lm(params, tokens, cfg, RUN)
-    with extension_context("v4", backend="pallas"):
+    table = resolve_table("v4", "pallas", model_class="dense_lm")
+    with dispatch.use_table(table):
         logits_v4, _ = T.forward_lm(params, tokens, cfg, RUN)
     a = np.asarray(logits_v0, np.float32)
     b = np.asarray(logits_v4, np.float32)
