@@ -9,9 +9,11 @@ alongside as the no-coalescing comparison point.
 
 The fault rows (informational, lenet5 only) measure the control plane from
 this PR's robustness tier: throughput under injected flaky compute (degraded
-vs healthy req/s), the shed rate of an undersized admission queue, and the
+vs healthy req/s), the shed rate of an undersized admission queue, the
 supervisor's recovery latency after an abrupt worker kill (warmup replay is
-an AOT cache hit, so recovery must not recompile).
+an AOT cache hit, so recovery must not recompile), and the overhead of the
+process-isolated worker tier (one actor process behind the unix-socket RPC
+vs the same wave in-process).
 
 The LM rows drive the continuous-batching decode tier (lm_server +
 kvcache): a seeded Poisson arrival trace with varied generation lengths is
@@ -194,6 +196,41 @@ def fault_rows(prog, in_shape, imgs, healthy_dt: float) -> None:
         "serving/lenet5_recovery_latency", rdt * 1e3,
         f"recovery_ms={rdt * 1e3:.1f};restarts={agg['restarts']};"
         f"recompiles_during_recovery={recompiles}",
+    )
+
+    # process isolation overhead (informational): the same supervised wave
+    # through one in-process worker vs one actor process behind the
+    # unix-socket RPC tier; the delta is the pickle + frame round-trip
+    import inspect
+
+    from repro.runtime.actor import cnn_program_factory
+
+    n = min(32, len(imgs))
+
+    async def supervised_wave(**reg_kwargs):
+        program = reg_kwargs.pop("program", prog)
+        s = Supervisor()
+        s.register("lenet5", program, workers=1, warmup=in_shape,
+                   max_batch=MAX_BATCH, max_delay_ms=2.0, **reg_kwargs)
+        async with s:
+            t0 = time.perf_counter()
+            await s.submit_wave(imgs[:n])
+            dt = time.perf_counter() - t0
+            p = s.workers["lenet5/0"].engine.ping()  # records RPC RTT
+            if inspect.isawaitable(p):
+                await p
+            return dt, s.metrics()["aggregate"]
+
+    idt, _ = asyncio.run(supervised_wave())
+    pdt, pagg = asyncio.run(supervised_wave(
+        program=None, isolation="process",
+        program_factory=cnn_program_factory,
+        factory_kwargs=dict(model="lenet5")))
+    emit(
+        "serving/lenet5_process_isolation", pdt / n * 1e6,
+        f"process_req_s={n / pdt:.1f};inproc_req_s={n / idt:.1f};"
+        f"process_overhead={pdt / idt:.2f}x;"
+        f"rpc_p50_ms={pagg['rpc_roundtrip_p50_ms']:.2f}",
     )
 
 

@@ -17,11 +17,23 @@ and a *draining restart* of worker 0 is issued mid-wave: admission closes,
 in-flight requests flush, a warmed replacement swaps in — zero accepted
 requests dropped.  Ops semantics are documented in docs/serving_ops.md.
 
+With ``--isolation process`` (implies ``--supervised``), each worker is
+its own OS process behind the actor RPC tier, and the demo escalates from
+a polite draining restart to ``kill -9``: worker 0's process is SIGKILLed
+while the wave is in flight.  The supervisor's crash-only path takes over
+— in-flight requests fail over to the surviving worker, a warm
+replacement process comes up (zero recompiles after its warmup replay),
+and every accepted request still resolves.
+
     PYTHONPATH=src python examples/serve_cnn.py [--model lenet5] [--n 64]
     PYTHONPATH=src python examples/serve_cnn.py --supervised
+    PYTHONPATH=src python examples/serve_cnn.py --supervised \
+        --isolation process
 """
 import argparse
 import asyncio
+import os
+import signal
 import time
 
 import jax
@@ -32,31 +44,78 @@ from repro.launch.serve import random_images
 from repro.models.cnn import get_cnn
 
 
+async def _kill_dash_nine(sup, worker):
+    """SIGKILL the worker's OS process the moment it owns in-flight
+    requests — the harshest possible mid-traffic failure."""
+    for _ in range(2000):
+        if worker.engine.outstanding > 0:
+            break
+        await asyncio.sleep(0.001)
+    pid = worker.engine.pid
+    print(f"kill -9 {pid} ({worker.name}, mid-wave)")
+    os.kill(pid, signal.SIGKILL)
+    return pid
+
+
 def serve_supervised(args, prog, in_shape):
-    """Two supervised workers; worker 0 is hot-swapped (draining restart)
-    while the wave is in flight.  Every accepted request still resolves."""
+    """Two supervised workers with mid-wave surgery: a draining restart of
+    worker 0 (in-process isolation) or a ``kill -9`` of its OS process
+    (``--isolation process``).  Every accepted request still resolves."""
     from repro.runtime.supervisor import Supervisor
+
+    process = args.isolation == "process"
 
     async def serve() -> dict:
         sup = Supervisor()
-        sup.register(args.model, prog, workers=2, warmup=in_shape,
-                     max_batch=args.max_batch,
-                     max_delay_ms=args.max_delay_ms)
+        reg_kwargs = dict(workers=2, warmup=in_shape,
+                          max_batch=args.max_batch,
+                          max_delay_ms=args.max_delay_ms)
+        if process:
+            from repro.runtime.actor import cnn_program_factory
+
+            reg_kwargs.update(isolation="process",
+                              program_factory=cnn_program_factory,
+                              factory_kwargs=dict(model=args.model))
+        sup.register(args.model, prog, **reg_kwargs)
         async with sup:
             t0 = time.perf_counter()
             wave = asyncio.gather(
                 *(sup.submit(im)
                   for im in random_images(in_shape, args.n))
             )
-            # hot-swap worker 0 while the wave is in flight: admission
-            # closes, accepted requests flush, a warmed replacement swaps in
-            await sup.restart_worker(f"{args.model}/0", drain=True)
+            if process:
+                # no drain, no warning: SIGKILL the worker process and let
+                # crash-only recovery re-route + respawn
+                w0 = sup.workers[f"{args.model}/0"]
+                old_pid = await _kill_dash_nine(sup, w0)
+            else:
+                # hot-swap worker 0 while the wave is in flight: admission
+                # closes, accepted requests flush, a warmed replacement
+                # swaps in
+                await sup.restart_worker(f"{args.model}/0", drain=True)
             results = await wave
             dt = time.perf_counter() - t0
             agg = sup.metrics()["aggregate"]
+            what = "kill -9" if process else "draining restart"
             print(f"served {len(results)} requests through a mid-traffic "
-                  f"draining restart in {dt * 1e3:.1f} ms "
+                  f"{what} in {dt * 1e3:.1f} ms "
                   f"(restarts={agg['restarts']}, dropped=0)")
+            if process:
+                for _ in range(600):  # wait for the replacement process
+                    w0 = sup.workers[f"{args.model}/0"]
+                    if (len(sup.healthy_workers()) == 2
+                            and w0.engine.pid != old_pid):
+                        break
+                    await asyncio.sleep(0.05)
+                await w0.engine.ping()
+                agg = sup.metrics()["aggregate"]  # post-recovery snapshot
+                print(f"replacement pid {w0.engine.pid} is warm: "
+                      f"recompiles_after_warmup="
+                      f"{w0.engine.metrics()['recompiles_after_warmup']}, "
+                      f"failovers={agg['failovers']}, "
+                      f"rpc p50="
+                      f"{agg['rpc_roundtrip_p50_ms']:.2f} ms")
+                return agg
             return agg
 
     agg = asyncio.run(serve())
@@ -74,9 +133,21 @@ def main():
     ap.add_argument("--supervised", action="store_true",
                     help="serve under the supervisor and demonstrate a "
                          "mid-traffic draining restart")
+    ap.add_argument("--isolation", choices=["inproc", "process"],
+                    default="inproc",
+                    help="with --supervised: process puts each worker in "
+                         "its own OS process and demonstrates surviving a "
+                         "mid-traffic kill -9")
     args = ap.parse_args()
+    if args.isolation == "process" and not args.supervised:
+        ap.error("--isolation process requires --supervised")
 
     init, apply, in_shape = get_cnn(args.model)
+    if args.supervised and args.isolation == "process":
+        # the actors compile their own programs on their device slices;
+        # nothing to build parent-side
+        serve_supervised(args, None, in_shape)
+        return
     params = init(jax.random.PRNGKey(0))
     x = np.zeros((1, *in_shape), np.float32)
 

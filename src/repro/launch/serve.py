@@ -22,6 +22,12 @@ CNN async tier (marvel.compile -> shard over local devices -> async engine)::
 Supervised CNN tier::
 
     python -m repro.launch.serve --cnn lenet5 --supervised --workers 2
+
+Process-isolated workers (each worker is its own OS process owning a
+device slice; a ``kill -9`` costs one worker, never the fleet)::
+
+    python -m repro.launch.serve --cnn lenet5 --supervised --workers 2 \
+        --isolation process
 """
 from __future__ import annotations
 
@@ -75,29 +81,52 @@ def lm_prompts(vocab: int, n: int) -> list[list[int]]:
 
 def serve_lm_continuous(args) -> None:
     """The LM serving tier: continuous batching over a bucketed KV-slot
-    pool, optionally supervised (``--supervised --workers N``)."""
-    from repro import marvel
-
+    pool, optionally supervised (``--supervised --workers N``), each
+    worker optionally its own OS process (``--isolation process``)."""
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
-    run = RunConfig(seq_len=32, global_batch=args.slots, mode="decode",
-                    attn_chunk=16)
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    x = np.ones((1, 8), np.int32)
-    prog = marvel.compile(lambda p, t: T.forward_lm(p, t, cfg, run)[0], x,
-                          params=params, precompile=False)
-    lm_kwargs = dict(cfg=cfg, run=run, slots=args.slots,
-                     max_len=args.max_len, kv_quant=args.kv_quant)
     prompts = lm_prompts(cfg.vocab, args.requests)
+    process = args.supervised and args.isolation == "process"
+
+    def build_prog():
+        from repro import marvel
+
+        run = RunConfig(seq_len=32, global_batch=args.slots, mode="decode",
+                        attn_chunk=16)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        x = np.ones((1, 8), np.int32)
+        prog = marvel.compile(
+            lambda p, t: T.forward_lm(p, t, cfg, run)[0], x,
+            params=params, precompile=False)
+        return prog, dict(cfg=cfg, run=run)
+
+    engine_kwargs = dict(slots=args.slots, max_len=args.max_len,
+                         kv_quant=args.kv_quant)
+    if not process:
+        prog, ctx_kwargs = build_prog()
+        lm_kwargs = {**ctx_kwargs, **engine_kwargs}
 
     if args.supervised:
         from repro.runtime.supervisor import Supervisor
 
         async def main() -> str:
             sup = Supervisor()
-            sup.register(args.arch, prog, workers=args.workers, mode="lm",
-                         warmup=(), **lm_kwargs)
+            if process:
+                # each actor rebuilds cfg/run child-side via the factory;
+                # only the engine knobs cross the pipe
+                from repro.runtime.actor import lm_program_factory
+
+                sup.register(args.arch, None, workers=args.workers,
+                             mode="lm", warmup=(), isolation="process",
+                             program_factory=lm_program_factory,
+                             factory_kwargs=dict(arch=args.arch,
+                                                 smoke=args.smoke,
+                                                 global_batch=args.slots),
+                             **engine_kwargs)
+            else:
+                sup.register(args.arch, prog, workers=args.workers,
+                             mode="lm", warmup=(), **lm_kwargs)
             async with sup:
                 t0 = time.perf_counter()
                 results = await sup.submit_wave(
@@ -149,9 +178,18 @@ def serve_cnn_supervised(args, prog, in_shape) -> None:
 
     async def main() -> str:
         sup = Supervisor()
-        sup.register(args.cnn, prog, workers=args.workers,
-                     warmup=in_shape, max_batch=args.max_batch,
-                     max_delay_ms=args.max_delay_ms)
+        reg_kwargs = dict(workers=args.workers, warmup=in_shape,
+                          max_batch=args.max_batch,
+                          max_delay_ms=args.max_delay_ms)
+        if args.isolation == "process":
+            # no parent-side program: each actor compiles its own copy
+            # on its granted device slice
+            from repro.runtime.actor import cnn_program_factory
+
+            reg_kwargs.update(isolation="process",
+                              program_factory=cnn_program_factory,
+                              factory_kwargs=dict(model=args.cnn))
+        sup.register(args.cnn, prog, **reg_kwargs)
         async with sup:
             t0 = time.perf_counter()
             results = await sup.submit_wave(
@@ -173,6 +211,9 @@ def serve_cnn(args) -> None:
     from repro.models.cnn import get_cnn
 
     init, apply, in_shape = get_cnn(args.cnn)
+    if args.supervised and args.isolation == "process":
+        serve_cnn_supervised(args, None, in_shape)
+        return
     params = init(jax.random.PRNGKey(0))
     x = np.zeros((1, *in_shape), np.float32)
     prog = marvel.compile(apply, x, params=params, level="v4",
@@ -223,9 +264,16 @@ def main(argv=None):
                          "(prints Prometheus metrics on exit)")
     ap.add_argument("--workers", type=int, default=2,
                     help="supervised engine workers (with --supervised)")
+    ap.add_argument("--isolation", choices=["inproc", "process"],
+                    default="inproc",
+                    help="supervised worker isolation: in-process engines "
+                         "(default) or one OS process per worker with its "
+                         "own device slice (crash-only recovery)")
     args = ap.parse_args(argv)
     if args.supervised and not (args.cnn or args.lm):
         ap.error("--supervised requires --cnn or --lm")
+    if args.isolation == "process" and not args.supervised:
+        ap.error("--isolation process requires --supervised")
     if args.lm and not args.arch:
         ap.error("--lm requires --arch")
     if (args.cnn is None) == (args.arch is None):

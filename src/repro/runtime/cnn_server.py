@@ -364,6 +364,12 @@ class AsyncCnnEngine:
     def pending(self) -> int:
         return self._queue.qsize() if self._queue is not None else 0
 
+    @property
+    def outstanding(self) -> int:
+        """Admitted-but-unresolved requests — the supervisor's
+        least-outstanding routing signal."""
+        return self._live_reqs
+
     def _retry_after_hint_ms(self) -> float:
         """Load-shedding hint: estimated drain time of the current backlog
         (batches ahead x observed per-batch latency)."""

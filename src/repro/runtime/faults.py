@@ -23,12 +23,30 @@ every compute attempt) and raises according to a declarative
   :class:`~repro.runtime.batching.WorkerUnavailable` so a supervisor can
   re-route them (exercises auto-recovery with zero lost requests).
 
+Process isolation (PR 9) adds *process-level* fault kinds that only make
+sense when the worker is a real OS process (:mod:`repro.runtime.actor`):
+
+* **SIGKILL** — the child shoots itself in the head at a compute boundary;
+  the parent sees the process sentinel fire, not an exception;
+* **SIGSTOP hang** — the child freezes without dying (wedged device call);
+  heartbeats stop, the sentinel stays quiet, and the supervisor's hang
+  detector must escalate to SIGKILL;
+* **nonzero-exit crash** — ``os._exit(code)`` on the Nth batch (models a
+  native-code abort / OOM-killer with an exit status);
+* **slow start** — the child sleeps before its HELLO handshake (models a
+  cold cache / slow device init; exercises bring-up timeouts);
+* **corrupt RPC reply** — the child truncates or garbles its next reply
+  *and then closes the connection*, so the parent fails deterministically
+  with a :class:`~repro.runtime.rpc.ProtocolError` instead of hanging.
+
 Everything is deterministic given the plan and seed; ``injected`` counts
 what actually fired so tests can assert counters against the plan.
 """
 from __future__ import annotations
 
+import os
 import random
+import signal
 import time
 from dataclasses import dataclass, field
 from typing import Collection
@@ -108,3 +126,92 @@ class FaultInjector:
             raise InjectedFault(
                 f"injected flaky failure (attempt {self.attempts})"
             )
+
+
+@dataclass
+class ProcessFaultPlan(FaultPlan):
+    """A :class:`FaultPlan` extended with OS-process fault kinds.
+
+    Only meaningful inside a :class:`~repro.runtime.actor.WorkerActor`
+    child; the in-process engines ignore the extra fields (they subclass
+    the same injector surface, so the plan is drop-in either way).
+    ``*_after_attempts`` budgets count compute attempts exactly like
+    ``die_after_attempts`` does.
+    """
+
+    sigkill_after_attempts: int | None = None   # raw SIGKILL: sentinel fires
+    sigstop_after_attempts: int | None = None   # freeze: hang, not death
+    exit_after_attempts: int | None = None      # os._exit(exit_code)
+    exit_code: int = 3
+    slow_start_ms: float = 0.0                  # sleep before HELLO
+    corrupt_reply_after: int | None = None      # corrupt the Nth RPC reply
+    corrupt_mode: str = "truncate"              # "truncate" | "garbage"
+
+
+class ProcessFaultInjector(FaultInjector):
+    """Applies a :class:`ProcessFaultPlan` at the compute boundary of a
+    worker *process*.  Inherits every in-process fault kind; the process
+    kinds fire first (real death beats simulated death).
+
+    ``reply_corruption()`` is polled by the actor's RPC loop before each
+    reply: it returns the corruption mode string exactly once when the
+    reply counter crosses ``corrupt_reply_after``, else ``None``.
+    """
+
+    def __init__(self, plan: ProcessFaultPlan | None = None, **plan_kwargs):
+        super().__init__(plan or ProcessFaultPlan(**plan_kwargs))
+        self.injected.update(
+            {"sigkill": 0, "sigstop": 0, "exit": 0, "corrupt_reply": 0}
+        )
+        self._replies = 0
+
+    def before_compute(self, uids: Collection[int]) -> None:
+        plan = self.plan
+        if isinstance(plan, ProcessFaultPlan):
+            # peek at the attempt number super() is about to count
+            attempt = self.attempts + 1
+            if (plan.sigkill_after_attempts is not None
+                    and attempt > plan.sigkill_after_attempts):
+                self.injected["sigkill"] += 1
+                os.kill(os.getpid(), signal.SIGKILL)
+            if (plan.sigstop_after_attempts is not None
+                    and attempt > plan.sigstop_after_attempts):
+                self.injected["sigstop"] += 1
+                os.kill(os.getpid(), signal.SIGSTOP)
+                # execution resumes here once the supervisor SIGKILLs or
+                # (in tests) SIGCONTs us; fall through to the base kinds
+            if (plan.exit_after_attempts is not None
+                    and attempt > plan.exit_after_attempts):
+                self.injected["exit"] += 1
+                os._exit(plan.exit_code)
+        super().before_compute(uids)
+
+    def reply_corruption(self) -> str | None:
+        plan = self.plan
+        if not isinstance(plan, ProcessFaultPlan):
+            return None
+        if plan.corrupt_reply_after is None:
+            return None
+        self._replies += 1
+        if self._replies == plan.corrupt_reply_after:
+            self.injected["corrupt_reply"] += 1
+            return plan.corrupt_mode
+        return None
+
+
+def make_injector(faults) -> FaultInjector | None:
+    """Normalize a plan / injector / None into an injector (or None).
+
+    Accepts what :meth:`Supervisor.register`'s per-worker fault factories
+    return, so call sites don't care whether they were handed a declarative
+    plan or a pre-built injector.
+    """
+    if faults is None:
+        return None
+    if isinstance(faults, FaultInjector):
+        return faults
+    if isinstance(faults, ProcessFaultPlan):
+        return ProcessFaultInjector(faults)
+    if isinstance(faults, FaultPlan):
+        return FaultInjector(faults)
+    raise TypeError(f"expected FaultPlan or FaultInjector, got {faults!r}")

@@ -666,5 +666,11 @@ class AsyncLmEngine:
     def pending(self) -> int:
         return len(self._inbox) + len(self.engine.queue)
 
+    @property
+    def outstanding(self) -> int:
+        """Admitted-but-unresolved sequences — the supervisor's
+        least-outstanding routing signal."""
+        return self._live_reqs
+
     def metrics(self) -> dict:
         return self.engine.metrics()

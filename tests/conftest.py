@@ -1,16 +1,51 @@
 # NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests and
 # benches must see the real single CPU device. Only launch/dryrun.py sets the
 # 512-device flag (before importing jax).
+import signal
+import threading
+
 import jax
+import pytest
 
 jax.config.update("jax_platform_name", "cpu")
 
 
 def pytest_configure(config):
     # registered here as well as pytest.ini so `-p no:cacheprovider` runs and
-    # direct pytest invocations from other cwds still know the marker
+    # direct pytest invocations from other cwds still know the markers
     config.addinivalue_line(
         "markers",
         "slow: long-running tests (full six-CNN compile sweeps, serving "
         'soak); the fast CI lane runs -m "not slow"',
     )
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): hard SIGALRM deadline for one test — a deadlock "
+        "(e.g. a hung actor RPC) fails the test instead of hanging the job",
+    )
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    """Hand-rolled hard timeout (the image has no pytest-timeout): arm
+    SIGALRM around the test body.  The alarm interrupts even a test stuck
+    in a blocking syscall — which is exactly the failure mode an RPC
+    deadlock in the process-isolation chaos soak would produce."""
+    marker = item.get_closest_marker("timeout")
+    if marker is None or threading.current_thread() is not threading.main_thread():
+        return (yield)
+    seconds = float(marker.args[0]) if marker.args else 120.0
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded its {seconds:.0f}s hard timeout "
+            f"(timeout marker) — likely a deadlock"
+        )
+
+    prev = signal.signal(signal.SIGALRM, on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        return (yield)
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, prev)

@@ -1,0 +1,233 @@
+"""The supervisor's graceful-degradation ladder, tested at the routing
+layer with scripted worker engines (no jax, no compute):
+
+* least-outstanding routing (ties rotate round-robin),
+* AdmissionError failover — a saturated worker is excluded and the next
+  healthy sibling tried before any backpressure surfaces,
+* brownout shedding — when *every* healthy worker is saturated, requests
+  whose deadline slack can't cover the quoted drain time shed first,
+  and ``retry_after_ms`` is honored only in that all-saturated state,
+* the per-model circuit breaker — K consecutive failed submits trip it
+  open, new submits fast-fail with a cooldown hint, a half-open probe
+  closes or re-opens it.
+
+The same ladder is exercised over real engines (in-process and
+process-isolated) in test_serving_faults.py / test_process_isolation.py;
+here the scripted engines make every branch deterministic.
+"""
+import asyncio
+
+import pytest
+
+from repro.runtime.batching import AdmissionError, WorkerUnavailable
+from repro.runtime.supervisor import (
+    CircuitBreaker, Supervisor, WorkerHandle, _ModelEntry,
+)
+from repro.runtime.watchdog import StragglerWatchdog
+
+
+class ScriptedEngine:
+    """A worker engine whose submit() plays back a script of outcomes:
+    "ok", an exception instance (raised), or a callable(uid)."""
+
+    def __init__(self, script=(), outstanding=0):
+        self.script = list(script)
+        self.outstanding = outstanding
+        self.is_alive = True
+        self.calls: list[int] = []
+
+    async def submit(self, payload, *, uid=None, deadline_ms=None, **kw):
+        self.calls.append(uid)
+        action = self.script.pop(0) if self.script else "ok"
+        if isinstance(action, BaseException):
+            raise action
+        return action
+
+    def kill(self, reason=""):
+        self.is_alive = False
+
+    def metrics(self):
+        return {"submitted": len(self.calls)}
+
+
+def _fleet(sup: Supervisor, model: str, engines) -> list[WorkerHandle]:
+    """Wire scripted engines into the supervisor as healthy workers."""
+    sup._models[model] = _ModelEntry(name=model, program=None,
+                                     workers=len(engines), engine_kwargs={})
+    handles = []
+    for i, eng in enumerate(engines):
+        wh = WorkerHandle(name=f"{model}/{i}", model=model, index=i,
+                          engine=eng, watchdog=StragglerWatchdog(),
+                          state="healthy")
+        sup.workers[wh.name] = wh
+        handles.append(wh)
+    return handles
+
+
+def _sup(**kw) -> Supervisor:
+    kw.setdefault("pick_timeout_ms", 100.0)
+    kw.setdefault("max_failovers", 4)
+    return Supervisor(**kw)
+
+
+# -- least-outstanding routing ----------------------------------------------
+
+
+def test_pick_prefers_least_outstanding():
+    sup = _sup()
+    busy, idle = ScriptedEngine(outstanding=3), ScriptedEngine(outstanding=0)
+    _fleet(sup, "m", [busy, idle])
+
+    async def main():
+        return [(await sup._pick("m")).name for _ in range(4)]
+
+    assert asyncio.run(main()) == ["m/1"] * 4  # the idle worker, every time
+
+
+def test_pick_ties_rotate_round_robin():
+    sup = _sup()
+    _fleet(sup, "m", [ScriptedEngine(), ScriptedEngine()])
+
+    async def main():
+        return [(await sup._pick("m")).name for _ in range(4)]
+
+    picks = asyncio.run(main())
+    assert set(picks) == {"m/0", "m/1"}  # an idle fleet still alternates
+    assert picks[0] != picks[1] and picks[2] != picks[3]
+
+
+def test_pick_excludes_saturated_workers():
+    sup = _sup()
+    _fleet(sup, "m", [ScriptedEngine(outstanding=0),
+                      ScriptedEngine(outstanding=9)])
+
+    async def main():
+        return (await sup._pick("m", exclude={"m/0"})).name
+
+    assert asyncio.run(main()) == "m/1"  # excluded beats least-outstanding
+
+
+# -- AdmissionError failover + brownout --------------------------------------
+
+
+def test_admission_failover_tries_next_healthy_worker():
+    sup = _sup()
+    saturated = ScriptedEngine([AdmissionError("full", retry_after_ms=50.0)],
+                               outstanding=0)
+    healthy = ScriptedEngine(outstanding=1)  # less attractive, but open
+    _fleet(sup, "m", [saturated, healthy])
+
+    result = asyncio.run(sup.submit(object(), model="m"))
+    assert result == "ok"
+    assert healthy.calls, "the sibling must have served the request"
+    assert sup.failovers == 1
+    assert sup.shed_brownout == 0
+
+
+def test_all_saturated_surfaces_retry_after():
+    sup = _sup()
+    errs = [AdmissionError("full", retry_after_ms=40.0),
+            AdmissionError("full", retry_after_ms=25.0)]
+    _fleet(sup, "m", [ScriptedEngine([errs[0]]), ScriptedEngine([errs[1]])])
+
+    with pytest.raises(AdmissionError) as ei:
+        asyncio.run(sup.submit(object(), model="m"))
+    # backpressure carries a worker-quoted hint — honored only here, when
+    # every healthy worker reported saturation
+    assert ei.value.retry_after_ms is not None
+    assert sup.shed_brownout == 0  # no deadline -> backpressure, not shed
+
+
+def test_brownout_sheds_lowest_deadline_slack_first():
+    sup = _sup()
+    _fleet(sup, "m", [
+        ScriptedEngine([AdmissionError("full", retry_after_ms=500.0)]),
+        ScriptedEngine([AdmissionError("full", retry_after_ms=800.0)]),
+    ])
+
+    with pytest.raises(AdmissionError, match="brownout"):
+        # 10 ms of slack can't survive a 500 ms drain: shed immediately
+        asyncio.run(sup.submit(object(), model="m", deadline_ms=10.0))
+    assert sup.shed_brownout == 1
+    assert sup.metrics()["aggregate"]["shed_brownout"] == 1
+
+
+def test_brownout_spares_requests_with_enough_slack():
+    sup = _sup()
+    _fleet(sup, "m", [
+        ScriptedEngine([AdmissionError("full", retry_after_ms=5.0)]),
+        ScriptedEngine([AdmissionError("full", retry_after_ms=5.0)]),
+    ])
+
+    with pytest.raises(AdmissionError) as ei:
+        asyncio.run(sup.submit(object(), model="m", deadline_ms=10_000.0))
+    assert "brownout" not in str(ei.value)  # plenty of slack: backpressure
+    assert sup.shed_brownout == 0
+
+
+# -- circuit breaker ----------------------------------------------------------
+
+
+def test_circuit_breaker_unit():
+    cb = CircuitBreaker(trip_after=2, cooldown_ms=100.0)
+    now = 10.0
+    cb.check(now)  # closed: no-op
+    assert cb.record_failure(now) is False
+    assert cb.record_failure(now) is True  # second consecutive: trips
+    assert cb.state == "open" and cb.trips == 1
+
+    with pytest.raises(AdmissionError) as ei:
+        cb.check(now + 0.05)  # 50 ms in: still cooling down
+    assert 0 < ei.value.retry_after_ms <= 100.0
+
+    cb.check(now + 0.2)  # cooldown elapsed: half-open probe allowed
+    assert cb.state == "half_open"
+    cb.record_failure(now + 0.2)  # probe failed: re-opens immediately
+    assert cb.state == "open" and cb.trips == 2
+
+    cb.check(now + 0.4)
+    cb.record_success()  # probe succeeded: closed, counters reset
+    assert cb.state == "closed" and cb.consecutive == 0
+
+
+def test_breaker_trips_after_consecutive_failed_submits():
+    sup = _sup(max_failovers=0, breaker_trip_after=2,
+               breaker_cooldown_ms=60_000.0)
+    # a worker that looks healthy but always drops the request mid-flight
+    dying = ScriptedEngine([WorkerUnavailable("gone")] * 10)
+    _fleet(sup, "m", [dying])
+
+    async def main():
+        for _ in range(2):
+            with pytest.raises(WorkerUnavailable):
+                await sup.submit(object(), model="m")
+        # tripped: the next submit fast-fails WITHOUT touching a worker
+        before = len(dying.calls)
+        with pytest.raises(AdmissionError, match="circuit open") as ei:
+            await sup.submit(object(), model="m")
+        assert len(dying.calls) == before
+        assert ei.value.retry_after_ms is not None
+        return sup.metrics()["aggregate"]
+
+    agg = asyncio.run(main())
+    assert agg["circuit_open"] == 1 and agg["circuit_trips"] == 1
+
+
+def test_breaker_success_resets_consecutive_failures():
+    sup = _sup(max_failovers=0, breaker_trip_after=3)
+    flaky = ScriptedEngine([WorkerUnavailable("blip"), "ok",
+                            WorkerUnavailable("blip"), "ok"] * 3)
+    _fleet(sup, "m", [flaky])
+
+    async def main():
+        outcomes = []
+        for _ in range(8):
+            try:
+                outcomes.append(await sup.submit(object(), model="m"))
+            except WorkerUnavailable:
+                outcomes.append("err")
+        return outcomes
+
+    # failures never run consecutive, so the breaker never opens
+    assert asyncio.run(main()) == ["err", "ok"] * 4
+    assert sup.metrics()["aggregate"]["circuit_open"] == 0

@@ -1,0 +1,164 @@
+"""Wire-level tests for the actor RPC frame codec (repro.runtime.rpc).
+
+Every failure mode must resolve to a deterministic ProtocolError — never a
+hang, never a silently-wrong object.  The codec is pure, so these run
+without sockets or processes; the process-level integration rides on top
+in test_process_isolation.py.
+"""
+import asyncio
+import pickle
+import struct
+
+import numpy as np
+import pytest
+
+from repro.runtime import rpc
+from repro.runtime.batching import AdmissionError
+
+OP = rpc.OPCODES
+
+
+def _one(reader: rpc.FrameReader):
+    frames = list(reader.frames())
+    assert len(frames) == 1
+    return frames[0]
+
+
+class TestFrameCodec:
+    def test_roundtrip(self):
+        obj = {"payload": np.arange(12, dtype=np.float32).reshape(3, 4),
+               "uid": 7, "kwargs": {"max_new_tokens": 3}}
+        buf = rpc.encode_frame(OP["submit"], 42, obj)
+        r = rpc.FrameReader()
+        r.feed(buf)
+        opcode, rid, out = _one(r)
+        assert (opcode, rid) == (OP["submit"], 42)
+        np.testing.assert_array_equal(out["payload"], obj["payload"])
+        assert out["uid"] == 7 and out["kwargs"] == {"max_new_tokens": 3}
+        r.eof()  # clean boundary: no dangling bytes
+
+    def test_byte_at_a_time_reassembly(self):
+        buf = rpc.encode_frame(OP["ping"], 1, None)
+        r = rpc.FrameReader()
+        for i in range(len(buf) - 1):
+            r.feed(buf[i:i + 1])
+            assert list(r.frames()) == []  # incomplete: nothing yielded
+        r.feed(buf[-1:])
+        assert _one(r)[:2] == (OP["ping"], 1)
+
+    def test_interleaved_replies_multiplex_by_req_id(self):
+        # two replies land back-to-back out of submission order; each
+        # resolves to its own req_id — the parent's pending-futures map
+        # depends on exactly this
+        buf = (rpc.encode_frame(OP["reply_ok"], 9, "second")
+               + rpc.encode_frame(OP["reply_ok"], 3, "first")
+               + rpc.encode_frame(OP["reply_err"], 5, ValueError("boom")))
+        r = rpc.FrameReader()
+        r.feed(buf)
+        frames = list(r.frames())
+        assert [(op, rid) for op, rid, _ in frames] == [
+            (OP["reply_ok"], 9), (OP["reply_ok"], 3), (OP["reply_err"], 5)]
+        assert frames[0][2] == "second" and frames[1][2] == "first"
+        assert isinstance(frames[2][2], ValueError)
+
+    def test_truncated_frame_is_protocol_error(self):
+        buf = rpc.encode_frame(OP["submit"], 1, {"x": list(range(100))})
+        r = rpc.FrameReader()
+        r.feed(buf[:len(buf) // 2])
+        assert list(r.frames()) == []  # waiting for the rest...
+        with pytest.raises(rpc.ProtocolError, match="truncated"):
+            r.eof()  # ...but the stream closed mid-frame
+
+    def test_oversized_frame_is_protocol_error_not_allocation(self):
+        # a corrupted length field must fail on the HEADER, before any
+        # payload is buffered
+        head = rpc.HEADER.pack(2**31, OP["submit"], 1)
+        r = rpc.FrameReader(max_frame_bytes=1024)
+        r.feed(head)
+        with pytest.raises(rpc.ProtocolError, match="oversized"):
+            list(r.frames())
+
+    def test_unknown_opcode_is_protocol_error(self):
+        head = rpc.HEADER.pack(0, 255, 1)
+        r = rpc.FrameReader()
+        r.feed(head)
+        with pytest.raises(rpc.ProtocolError, match="unknown opcode"):
+            list(r.frames())
+
+    def test_corrupt_payload_is_protocol_error(self):
+        garbage = b"\x00not-a-pickle"
+        buf = rpc.HEADER.pack(len(garbage), OP["reply_ok"], 1) + garbage
+        r = rpc.FrameReader()
+        r.feed(buf)
+        with pytest.raises(rpc.ProtocolError, match="corrupt frame payload"):
+            list(r.frames())
+
+    def test_encode_rejects_unknown_opcode_and_oversized_payload(self):
+        with pytest.raises(rpc.ProtocolError, match="unknown opcode"):
+            rpc.encode_frame(99, 1, None)
+        with pytest.raises(rpc.ProtocolError, match="frame cap"):
+            rpc.encode_frame(OP["submit"], 1, b"x" * 2048,
+                             max_frame_bytes=1024)
+
+    def test_header_layout_is_stable(self):
+        # the wire format is a contract between parent and child builds
+        assert rpc.HEADER.size == 13
+        length, opcode, rid = struct.unpack(
+            ">IBQ", rpc.encode_frame(OP["stop"], 2**40, None)[:13])
+        assert opcode == OP["stop"] and rid == 2**40
+
+
+class TestExceptionTransport:
+    def test_admission_error_keeps_retry_after_ms(self):
+        # the load-shedding hint must survive the pickle hop: supervisor
+        # brownout decisions read it off the re-raised exception
+        e = AdmissionError("worker saturated", retry_after_ms=37.5)
+        out = pickle.loads(pickle.dumps(e))
+        assert isinstance(out, AdmissionError)
+        assert out.retry_after_ms == 37.5
+
+    def test_exception_roundtrip_through_frame(self):
+        buf = rpc.encode_frame(
+            OP["reply_err"], 1, AdmissionError("full", retry_after_ms=5.0))
+        r = rpc.FrameReader()
+        r.feed(buf)
+        _, _, exc = _one(r)
+        assert isinstance(exc, AdmissionError)
+        assert exc.retry_after_ms == 5.0
+
+
+class TestAsyncStreamHelpers:
+    def test_read_frame_truncated_header(self):
+        async def run():
+            reader = asyncio.StreamReader()
+            reader.feed_data(b"\x00\x01\x02")  # 3 of 13 header bytes
+            reader.feed_eof()
+            with pytest.raises(rpc.ProtocolError, match="truncated frame"):
+                await rpc.read_frame(reader)
+        asyncio.run(run())
+
+    def test_read_frame_truncated_payload(self):
+        async def run():
+            reader = asyncio.StreamReader()
+            buf = rpc.encode_frame(OP["reply_ok"], 1, list(range(50)))
+            reader.feed_data(buf[:-5])
+            reader.feed_eof()
+            with pytest.raises(rpc.ProtocolError, match="truncated frame"):
+                await rpc.read_frame(reader)
+        asyncio.run(run())
+
+    def test_read_frame_clean_eof(self):
+        async def run():
+            reader = asyncio.StreamReader()
+            reader.feed_eof()
+            with pytest.raises(EOFError):
+                await rpc.read_frame(reader)
+        asyncio.run(run())
+
+    def test_read_frame_roundtrip(self):
+        async def run():
+            reader = asyncio.StreamReader()
+            reader.feed_data(rpc.encode_frame(OP["hello"], 0, {"pid": 123}))
+            opcode, rid, obj = await rpc.read_frame(reader)
+            assert (opcode, rid, obj) == (OP["hello"], 0, {"pid": 123})
+        asyncio.run(run())
