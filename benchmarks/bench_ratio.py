@@ -1,0 +1,230 @@
+"""Measured pallas-vs-ref ratio lane: one gated row per conformance case.
+
+For every (impl, case) on the shared conformance grid
+(``tests/kernel_cases.py::GRID`` — the same shapes the differential
+correctness suite runs), this module times the Pallas wrapper and the jnp
+reference on the calibrated runner (``benchmarks/calibrate.py``) and emits
+
+    ratio/<case-id>, <pallas_us>,
+        pallas_vs_ref_ratio=<ref_us/pallas_us>;noise_floor=<tol>;ref_us=...
+
+``pallas_vs_ref_ratio`` is gated higher-is-better by ``benchmarks/gate.py``
+at ``max(--tol, noise_floor)`` — the noise floor is the runner's own
+variance estimate for that row, so a kernel that structurally slows down
+(2x the work, a lost fusion, an accidental fallback) fails CI while
+scheduler jitter does not.  Raw wall-clock (``us_per_call``, ``ref_us``)
+stays informational: ratios are portable across machines, absolute
+microseconds are not.
+
+Both callables take their operands as jit arguments (never closure-captured
+constants), so XLA cannot const-fold the workload away on either side.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import jax
+
+_TESTS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "tests"
+)
+if _TESTS not in sys.path:
+    sys.path.insert(0, _TESTS)
+
+import kernel_cases as kc  # noqa: E402  (lives in tests/, path set above)
+
+from benchmarks import calibrate, common  # noqa: E402
+from repro.kernels import ops, ref  # noqa: E402
+
+# interpret-mode kernels are slow; the inner loop auto-sizes toward
+# ~2ms rep blocks (so fast refs average many calls, slow kernels get
+# inner=1) under a loose — but shipped-with-the-row — noise criterion
+CAL_OPTS = dict(reps=3, target_rep_us=2000.0, max_inner=16, warmup_max=4,
+                cv_cutoff=0.25, max_reruns=1)
+
+
+# --------------------------------------------------------------------------
+# pair builders: (pallas_fn, ref_fn, args) per impl, mirroring the
+# conformance runners' defaults so each row measures the exact case the
+# correctness suite asserts on
+# --------------------------------------------------------------------------
+
+
+def _pair_mac_matmul(seed, m=64, k=96, n=32):
+    from repro.kernels.mac_matmul import mac_matmul_int8
+
+    args = kc.mac_case(seed, m, k, n)
+    return mac_matmul_int8, ref.mac_matmul_int8_ref, args
+
+
+def _pair_fused_conv(seed, h=13, w_sp=11, cin=5, cout=9, k=3, stride=1,
+                     padding="SAME", act="relu", residual=False):
+    x, w, b, s, t = kc.conv_case(seed, h, w_sp, cin, cout, k)
+    res = None
+    if residual:
+        shape = jax.eval_shape(
+            lambda a, ww: ref.fused_conv_ref(a, ww, None, stride=stride,
+                                             padding=padding), x, w,
+        ).shape
+        res = jax.random.normal(jax.random.PRNGKey(seed + 1), shape)
+
+    def pallas(x, w, b, s, t, res):
+        return ops._pallas_fused_conv(x, w, b, stride=stride, padding=padding,
+                                      groups=1, act=act, scale=s, shift=t,
+                                      residual=res)
+
+    def baseline(x, w, b, s, t, res):
+        return ref.fused_conv_ref(x, w, b, stride=stride, padding=padding,
+                                  groups=1, act=act, scale=s, shift=t,
+                                  residual=res)
+
+    return pallas, baseline, (x, w, b, s, t, res)
+
+
+def _pair_depthwise(seed, h=13, w_sp=11, c=5, stride=1, padding="SAME",
+                    act="relu"):
+    x, w, b, s, t = kc.dw_case(seed, h, w_sp, c)
+
+    def pallas(x, w, b, s, t):
+        return ops._pallas_depthwise_conv(x, w, b, stride=stride,
+                                          padding=padding, act=act,
+                                          scale=s, shift=t)
+
+    def baseline(x, w, b, s, t):
+        return ref.depthwise_conv_ref(x, w, b, stride=stride, padding=padding,
+                                      act=act, scale=s, shift=t)
+
+    return pallas, baseline, (x, w, b, s, t)
+
+
+def _pair_sep_block(seed, h=13, w_sp=11, c=5, cout=9, stride=1,
+                    dw_act="relu", pw_act="none"):
+    x, wd, wp, ds, dt, ps, pt = kc.sep_case(seed, h, w_sp, c, cout)
+
+    def pallas(x, wd, wp, ds, dt, ps, pt):
+        return ops._pallas_sep_block(x, wd, wp, stride=stride, dw_scale=ds,
+                                     dw_shift=dt, dw_act=dw_act, pw_scale=ps,
+                                     pw_shift=pt, pw_act=pw_act)
+
+    def baseline(x, wd, wp, ds, dt, ps, pt):
+        return ref.sep_block_ref(x, wd, wp, stride=stride, dw_scale=ds,
+                                 dw_shift=dt, dw_act=dw_act, pw_scale=ps,
+                                 pw_shift=pt, pw_act=pw_act)
+
+    return pallas, baseline, (x, wd, wp, ds, dt, ps, pt)
+
+
+def _pair_matmul_epilogue(seed, m=37, k=64, n=48, act="relu",
+                          dtype=None, residual=False, affine=True):
+    import jax.numpy as jnp
+
+    x, w, b, r = kc.matmul_case(seed, m, k, n, dtype or jnp.float32)
+    s = 0.5 + jax.random.uniform(jax.random.PRNGKey(seed + 2), (n,))
+
+    def pallas(x, w, b, s, r):
+        return ops._pallas_matmul_epilogue(
+            x, w, b, act=act, scale=s if affine else None, shift=None,
+            residual=r if residual else None,
+        )
+
+    def baseline(x, w, b, s, r):
+        return ref.matmul_epilogue_ref(
+            x, w, b, act=act, scale=s if affine else None, shift=None,
+            residual=r if residual else None,
+        )
+
+    return pallas, baseline, (x, w, b, s, r)
+
+
+def _pair_pool(seed, h=13, w_sp=11, c=5, op="max", k=2, stride=2,
+               dtype=None):
+    import jax.numpy as jnp
+
+    x = kc.pool_case(seed, h, w_sp, c, dtype or jnp.float32)
+
+    def pallas(x):
+        return ops._pallas_pool(x, op=op, k=k, stride=stride)
+
+    def baseline(x):
+        return ref.pool_ref(x, op=op, k=k, stride=stride)
+
+    return pallas, baseline, (x,)
+
+
+def _pair_residual_rmsnorm(seed, rows=33, d=96):
+    args = kc.rmsnorm_case(seed, rows, d)
+    return ops._pallas_residual_rmsnorm, ref.residual_rmsnorm_ref, args
+
+
+def _pair_flash_attention(seed, b=1, sq=64, kheads=2, g=2, dh=16,
+                          int8_kv=False):
+    from repro.models.layers import _flash_attention_ref
+
+    q, k, v, k_s, v_s = kc.attn_case(seed, b, sq, kheads, g, dh,
+                                     int8_kv=int8_kv)
+
+    def pallas(q, k, v, k_s, v_s):
+        return ops._pallas_flash_attention(q, k, v, causal=True,
+                                           k_scale=k_s, v_scale=v_s)
+
+    def baseline(q, k, v, k_s, v_s):
+        return _flash_attention_ref(q, k, v, causal=True,
+                                    k_scale=k_s, v_scale=v_s)
+
+    return pallas, baseline, (q, k, v, k_s, v_s)
+
+
+def _pair_wkv_chunk(seed, b=1, s=32, heads=2, n=8, chunk=16):
+    r, k, v, lw, u, s0 = kc.wkv_case(seed, b, s, heads, n)
+
+    def pallas(r, k, v, lw, u, s0):
+        return ops._pallas_wkv_chunk(r, k, v, lw, u, s0, chunk)
+
+    def baseline(r, k, v, lw, u, s0):
+        return ref.wkv_ref_sequential(r, k, v, lw, u, s0)
+
+    return pallas, baseline, (r, k, v, lw, u, s0)
+
+
+PAIRS = {
+    "mac_matmul_int8": _pair_mac_matmul,
+    "fused_conv": _pair_fused_conv,
+    "depthwise_conv": _pair_depthwise,
+    "sep_block": _pair_sep_block,
+    "matmul_epilogue": _pair_matmul_epilogue,
+    "pool": _pair_pool,
+    "residual_rmsnorm": _pair_residual_rmsnorm,
+    "flash_attention": _pair_flash_attention,
+    "wkv_chunk": _pair_wkv_chunk,
+}
+
+
+def measure_case(impl: str, case: dict, seed: int = 0,
+                 **cal_opts) -> calibrate.RatioResult:
+    """Calibrated pallas-vs-ref ratio for one grid case (reused by the
+    bench-gate e2e test, which injects a fake-slow pallas side)."""
+    pallas_fn, ref_fn, args = PAIRS[impl](seed, **case)
+    opts = {**CAL_OPTS, **cal_opts}
+    return calibrate.ratio_vs_ref(pallas_fn, ref_fn, *args, **opts)
+
+
+def row_for(impl: str, case: dict,
+            rr: calibrate.RatioResult) -> tuple[str, float, str]:
+    """(name, us_per_call, derived) for one measured ratio row."""
+    name = f"ratio/{kc.case_id(impl, case)}"
+    derived = (f"pallas_vs_ref_ratio={rr.ratio:.4g};"
+               f"noise_floor={rr.noise_floor:.3g};"
+               f"ref_us={rr.ref.us_per_call:.4g}")
+    return name, rr.pallas.us_per_call, derived
+
+
+def run() -> None:
+    for idx, (impl, case) in enumerate(kc.GRID):
+        rr = measure_case(impl, case, seed=idx)
+        common.emit(*row_for(impl, case, rr))
+
+
+if __name__ == "__main__":
+    run()
+    common.write_bench_json("ratio")

@@ -1,0 +1,188 @@
+"""Calibrated micro-benchmark runner: steady-state timing you can gate.
+
+``benchmarks.common.time_fn``'s median-of-3 is fine for a human eyeballing a
+CSV, but it is not gateable: it re-jits the callable on every invocation, it
+has no steady-state criterion (the first timed rep can still be paging code
+or warming allocator pools), and a single noisy rep moves the median.  This
+module replaces it with the measurement discipline of a real micro-bench
+harness:
+
+* **jit once** — the callable is compiled exactly once per measurement; every
+  timed call hits the same executable.
+* **warmup-until-stable** — single calls are timed until two consecutive
+  timings agree within ``warmup_rtol`` (bounded by ``warmup_max``), so reps
+  start from steady state, not from the first post-compile call.
+* **min-of-K inner-loop reps** — K reps each average ``inner`` back-to-back
+  calls; the *minimum* rep is the estimate (the minimum is the
+  noise-robust statistic for a lower-bounded timing distribution — anything
+  above it is interference, not the workload).
+* **dispatch-overhead subtraction** — the per-call cost of dispatching a
+  trivial jitted identity (measured once per process with the same rep
+  scheme) is subtracted, so small kernels are not dominated by Python/jax
+  dispatch.
+* **CV noise cutoff with bounded re-runs** — if the coefficient of variation
+  across reps exceeds ``cv_cutoff``, the rep block re-runs (at most
+  ``max_reruns`` times); the final CV ships with the measurement so
+  downstream consumers (the bench gate's per-row noise floor) can widen
+  tolerances instead of flaking.
+
+Because two implementations measured by the *same* runner on the *same*
+machine share its systematic error, their **ratio** is portable where raw
+wall-clock is not — that is what `benchmarks/bench_ratio.py` gates.  Every
+knob (``clock``, ``sync``, ``jit``, ``overhead_us``) is injectable so the
+statistics are unit-testable under a fake clock (tests/test_calibrate.py).
+"""
+from __future__ import annotations
+
+import functools
+import statistics
+import time
+from dataclasses import dataclass
+
+# measurements never collapse to 0 (a 0.0 baseline metric would be
+# ungateable — see gate.py's leaving-zero handling) even when the dispatch
+# overhead estimate exceeds a tiny kernel's own time
+MIN_US = 1e-3
+
+
+@dataclass(frozen=True)
+class Measurement:
+    """One calibrated timing: the gateable number plus its provenance."""
+
+    us_per_call: float       # min-of-K, overhead-subtracted, floored
+    overhead_us: float       # dispatch overhead subtracted from every rep
+    cv: float                # coefficient of variation of the final rep block
+    reps_us: tuple           # the final rep block (per-call microseconds)
+    inner: int               # calls averaged per rep
+    warmup_iters: int        # calls burned reaching steady state
+    reruns: int              # rep blocks discarded for exceeding cv_cutoff
+    stable: bool             # final cv <= cv_cutoff
+
+
+@dataclass(frozen=True)
+class RatioResult:
+    """A pallas-vs-ref comparison on one runner: the gateable ratio."""
+
+    ratio: float             # ref_us / pallas_us (higher = kernel faster)
+    noise_floor: float       # per-row gate tolerance (from the two CVs)
+    pallas: Measurement
+    ref: Measurement
+
+
+def _jax_sync(out):
+    import jax
+
+    jax.block_until_ready(out)
+
+
+@functools.lru_cache(maxsize=None)
+def dispatch_overhead_us() -> float:
+    """Per-call dispatch+sync cost of a trivial jitted identity, measured
+    once per process with the same min-of-K scheme as the real timings."""
+    import jax
+    import jax.numpy as jnp
+
+    one = jnp.zeros((8,), jnp.float32)
+    ident = jax.jit(lambda x: x)
+    _jax_sync(ident(one))  # compile outside the timed region
+    reps = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        for _ in range(64):
+            _jax_sync(ident(one))
+        reps.append((time.perf_counter() - t0) * 1e6 / 64)
+    return min(reps)
+
+
+def calibrated_time(fn, *args, reps: int = 5, inner: int | None = None,
+                    target_rep_us: float = 2000.0, max_inner: int = 64,
+                    warmup_min: int = 2, warmup_max: int = 8,
+                    warmup_rtol: float = 0.25, cv_cutoff: float = 0.10,
+                    max_reruns: int = 2, overhead_us: float | None = None,
+                    clock=None, sync=None, jit: bool = True) -> Measurement:
+    """Steady-state per-call time of ``fn(*args)`` in microseconds.
+
+    ``clock``/``sync``/``jit``/``overhead_us`` are injectable for testing;
+    by default the callable is jitted once, calls are fenced with
+    ``jax.block_until_ready``, and the process-wide dispatch overhead is
+    subtracted.
+    """
+    clock = clock or time.perf_counter
+    if sync is None:
+        sync = _jax_sync if jit else (lambda out: out)
+    if jit:
+        import jax
+
+        fn = jax.jit(fn)
+    if overhead_us is None:
+        overhead_us = dispatch_overhead_us() if jit else 0.0
+
+    def once() -> float:
+        t0 = clock()
+        sync(fn(*args))
+        return (clock() - t0) * 1e6
+
+    # warmup-until-stable (the first call also compiles): stop as soon as two
+    # consecutive timings agree within warmup_rtol, after at least warmup_min
+    # post-compile calls, bounded by warmup_max total
+    warm = [once()]
+    while len(warm) < warmup_max:
+        warm.append(once())
+        if (len(warm) > warmup_min
+                and abs(warm[-1] - warm[-2]) <= warmup_rtol
+                * max(warm[-2], 1e-9)):
+            break
+    est = warm[-1]
+
+    if inner is None:
+        inner = max(1, min(max_inner, int(target_rep_us / max(est, 1e-6))))
+
+    def rep() -> float:
+        t0 = clock()
+        for _ in range(inner):
+            sync(fn(*args))
+        return (clock() - t0) * 1e6 / inner
+
+    reruns = 0
+    while True:
+        block = [rep() for _ in range(reps)]
+        mean = sum(block) / len(block)
+        cv = (statistics.pstdev(block) / mean) if mean > 0 else 0.0
+        if cv <= cv_cutoff or reruns >= max_reruns:
+            break
+        reruns += 1
+    return Measurement(
+        us_per_call=max(min(block) - overhead_us, MIN_US),
+        overhead_us=overhead_us,
+        cv=cv,
+        reps_us=tuple(block),
+        inner=inner,
+        warmup_iters=len(warm),
+        reruns=reruns,
+        stable=cv <= cv_cutoff,
+    )
+
+
+# the cross-machine floor under the ratio gate: CI runners and dev boxes
+# disagree on interpret-mode-Python vs compiled-jnp relative speed by tens of
+# percent, so the lane is tuned to catch *structural* regressions (a kernel
+# doing 2x the work = -50% ratio) rather than scheduler jitter
+RATIO_NOISE_FLOOR = 0.35
+RATIO_NOISE_CEIL = 0.60
+
+
+def ratio_vs_ref(pallas_fn, ref_fn, *args, floor: float = RATIO_NOISE_FLOOR,
+                 cv_mult: float = 4.0, **kwargs) -> RatioResult:
+    """Time both implementations on the same runner and form the gateable
+    ``ref_us / pallas_us`` ratio (> 1 means the kernel path is faster).
+
+    The per-row ``noise_floor`` is the gate tolerance for this row:
+    ``max(floor, cv_mult * (cv_pallas + cv_ref))`` capped at
+    ``RATIO_NOISE_CEIL`` so a pathologically noisy run can still gate a 2x
+    regression.
+    """
+    p = calibrated_time(pallas_fn, *args, **kwargs)
+    r = calibrated_time(ref_fn, *args, **kwargs)
+    noise = min(RATIO_NOISE_CEIL, max(floor, cv_mult * (p.cv + r.cv)))
+    return RatioResult(ratio=r.us_per_call / p.us_per_call,
+                       noise_floor=noise, pallas=p, ref=r)

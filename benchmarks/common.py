@@ -9,7 +9,6 @@ trajectory is diffable across PRs.
 from __future__ import annotations
 
 import json
-import time
 from functools import lru_cache
 
 import jax
@@ -41,17 +40,18 @@ def write_bench_json(group: str,
 
 
 def time_fn(fn, *args, reps: int = 3) -> float:
-    """Median wall-time in microseconds (jit-compiled, post-warmup)."""
-    jfn = jax.jit(fn)
-    out = jfn(*args)
-    jax.block_until_ready(out)
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(jfn(*args))
-        times.append((time.perf_counter() - t0) * 1e6)
-    times.sort()
-    return times[len(times) // 2]
+    """Steady-state wall-time per call in microseconds.
+
+    Thin front over :func:`benchmarks.calibrate.calibrated_time` (jit once,
+    warmup-until-stable, min-of-K, dispatch-overhead subtraction) with a
+    loose noise criterion — these rows are informational wall-clock, the
+    gated lane is ``bench_ratio``."""
+    from benchmarks import calibrate
+
+    return calibrate.calibrated_time(
+        fn, *args, reps=reps, warmup_max=4, max_reruns=1, cv_cutoff=0.25,
+        max_inner=8,
+    ).us_per_call
 
 
 @lru_cache(maxsize=None)

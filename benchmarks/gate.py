@@ -3,11 +3,27 @@
 CI runs the benchmark suite, then this module compares the fresh
 ``BENCH_*.json`` files against the committed ``benchmarks/baseline/``
 snapshot (or a directory of artifacts downloaded from the previous main
-run).  Deterministic model-derived metrics are *gated*: a regression beyond
-``--tol`` (default 15%) on any ``*speedup*`` metric (higher is better) or
-any ``rv32_v*``/``tpu_v*`` cycles metric (lower is better) fails the job.
-Wall-clock metrics (``us_per_call``, ``req_s``, ``p99_ms`` ...) vary with
-the runner, so they are reported in the delta table but never gate.
+run).  Three metric classes are *gated* (regression beyond tolerance fails
+the job):
+
+* ``*speedup*`` and ``paper_band`` — higher is better (booleans parse to
+  1.0/0.0, so a CNN dropping out of the paper's 2x band is a 1.0 -> 0.0
+  regression, not a silently-vanished metric);
+* ``rv32_v*`` / ``tpu_v*`` on cycles rows — lower is better (any ladder
+  level, ``v0``..``v10``+);
+* ``*_ratio`` on rows that carry a ``noise_floor`` metric — higher is
+  better, gated at ``max(--tol, noise_floor)`` per row.  The noise floor is
+  the calibrated runner's own variance estimate
+  (``benchmarks/calibrate.py``), so the measured pallas-vs-ref lane
+  (``benchmarks/bench_ratio.py``) gates without flaking; ratio-named
+  wall-clock metrics on rows *without* a noise floor (``async_sync_ratio``,
+  ``cache_ratio``) stay informational.
+
+Raw wall-clock metrics (``us_per_call``, ``req_s``, ``p99_ms`` ...) vary
+with the runner, so they are reported in the delta table but never gate.
+A gated metric whose baseline is 0 can still regress: the delta is
+reported as +/-inf and flagged ``leaving zero`` (growing from 0 fails
+lower-is-better metrics; falling from 0 fails higher-is-better ones).
 
 The delta table is written to ``$GITHUB_STEP_SUMMARY`` when set (the job
 summary page), and always printed to stdout.
@@ -20,12 +36,16 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import math
 import os
 import re
 import sys
 
-GATE_HIGHER = re.compile(r"speedup")
-GATE_LOWER = re.compile(r"^(rv32|tpu)_v\d$")
+GATE_HIGHER = re.compile(r"speedup|^paper_band$")
+GATE_LOWER = re.compile(r"^(rv32|tpu)_v\d+$")
+GATE_RATIO = re.compile(r"_ratio$")
+# per-row metadata, never a gated metric itself
+NEVER_GATE = frozenset({"noise_floor"})
 
 
 def load_rows(directory: str) -> dict[str, dict[str, float]]:
@@ -46,14 +66,22 @@ def load_rows(directory: str) -> dict[str, dict[str, float]]:
 
 
 def parse_metrics(row: dict) -> dict[str, float]:
-    """The numeric metrics of one row: us_per_call + parsed derived k=v's."""
+    """The numeric metrics of one row: us_per_call + parsed derived k=v's.
+
+    Presence (not truthiness) keeps a legitimate ``us_per_call == 0.0``;
+    booleans parse to 1.0/0.0 so flag metrics (``paper_band=True``) are
+    gateable instead of silently dropped by ``float("True")``."""
     out: dict[str, float] = {}
-    if row.get("us_per_call"):
+    if row.get("us_per_call") is not None:
         out["us_per_call"] = float(row["us_per_call"])
     for part in str(row.get("derived", "")).split(";"):
         if "=" not in part:
             continue
         key, _, val = part.partition("=")
+        val = val.strip()
+        if val in ("True", "False"):
+            out[key.strip()] = 1.0 if val == "True" else 0.0
+            continue
         try:
             out[key.strip()] = float(val)
         except ValueError:
@@ -61,13 +89,24 @@ def parse_metrics(row: dict) -> dict[str, float]:
     return out
 
 
-def gate_direction(row_name: str, key: str) -> int:
+def gate_direction(row_name: str, key: str,
+                   metrics: dict[str, float] | None = None) -> int:
     """+1: higher is better (gated); -1: lower is better (gated); 0: not
-    gated (wall-clock / informational)."""
+    gated (wall-clock / informational).
+
+    ``*_ratio`` metrics gate only when ``metrics`` carries a
+    ``noise_floor`` — the calibrated-runner contract.  Rows without one
+    (``async_sync_ratio``, ``cache_ratio`` ...) are raw wall-clock and stay
+    informational."""
+    if key in NEVER_GATE:
+        return 0
     if GATE_HIGHER.search(key):
         return +1
     if "cycles" in row_name and GATE_LOWER.match(key):
         return -1
+    if (GATE_RATIO.search(key) and metrics is not None
+            and "noise_floor" in metrics):
+        return +1
     return 0
 
 
@@ -85,26 +124,39 @@ def compare(baseline: dict, current: dict, tol: float
     for name, base_metrics in sorted(baseline.items()):
         cur_metrics = current.get(name)
         if cur_metrics is None:
-            if any(gate_direction(name, k) for k in base_metrics):
+            if any(gate_direction(name, k, base_metrics)
+                   for k in base_metrics):
                 missing.append(name)
             continue
         for key, base in base_metrics.items():
             if key not in cur_metrics:
                 continue
             cur = cur_metrics[key]
-            delta = (cur - base) / abs(base) if base else 0.0
-            direction = gate_direction(name, key)
+            if base:
+                delta = (cur - base) / abs(base)
+            else:
+                # a zero baseline has no scale — report leaving zero as an
+                # infinite move so it can never hide a regression
+                delta = math.copysign(math.inf, cur) if cur else 0.0
+            direction = gate_direction(name, key, base_metrics)
+            eff_tol = tol
+            if direction and GATE_RATIO.search(key):
+                # measured ratios gate at their own noise floor (per-row,
+                # from the calibrated runner) when it exceeds --tol
+                eff_tol = max(tol, base_metrics.get("noise_floor", 0.0),
+                              cur_metrics.get("noise_floor", 0.0))
             regressed = (
-                direction != 0 and (-direction * delta) > tol
+                direction != 0 and (-direction * delta) > eff_tol
             )
             deltas.append({
                 "row": name, "metric": key, "baseline": base,
                 "current": cur, "delta": delta, "gated": direction != 0,
-                "regressed": regressed,
+                "regressed": regressed, "tol": eff_tol,
+                "leaving_zero": base == 0 and cur != 0,
             })
     for name, cur_metrics in sorted(current.items()):
         if name not in baseline and any(
-            gate_direction(name, k) for k in cur_metrics
+            gate_direction(name, k, cur_metrics) for k in cur_metrics
         ):
             added.append(name)
     return deltas, missing, added
@@ -122,9 +174,14 @@ def markdown_table(deltas: list[dict], tol: float) -> str:
             continue
         status = ("**FAIL**" if d["regressed"]
                   else "ok" if d["gated"] else "info")
+        if d.get("leaving_zero"):
+            status += " (leaving zero)"
+        delta = ("+inf" if d["delta"] == math.inf
+                 else "-inf" if d["delta"] == -math.inf
+                 else f"{d['delta']:+.1%}")
         lines.append(
             f"| {d['row']} | {d['metric']} | {d['baseline']:.4g} "
-            f"| {d['current']:.4g} | {d['delta']:+.1%} | {status} |"
+            f"| {d['current']:.4g} | {delta} | {status} |"
         )
     return "\n".join(lines)
 

@@ -1,132 +1,161 @@
-"""§Perf hillclimbing harness: hypothesis -> change -> re-lower -> measure.
+"""Kernel tile autotuner: hillclimb per-(kernel, shape-bucket) block sizes.
 
-Each experiment is a named RunConfig mutation on one (arch x shape) cell.
-The baseline (paper-faithful defaults from launch.shardings.default_run) is
-measured first; every variant records the three roofline terms so
-EXPERIMENTS.md §Perf can show before/after per hypothesis.
+For each tunable kernel the tuner runs coordinate descent over its knob
+space (``repro.kernels.tuning.DEFAULTS`` names the knobs; ``SEARCH_SPACE``
+names the candidate values) on a representative multi-tile workload from
+the conformance grid, measuring every candidate with the calibrated runner
+(``benchmarks/calibrate.py``) under a one-entry :class:`TuneTable` — i.e.
+through the exact ``kernels/ops.py`` dispatch path that will consume the
+winner, so the tuner cannot measure a config the dispatcher would not use.
 
-    PYTHONPATH=src python -m benchmarks.hillclimb deepseek-v2-236b train_4k
+Winners (only when they beat the defaults beyond the measurement's own
+noise) are written to ``benchmarks/tuned/<backend>.json``;
+``marvel.compile(tuned="auto")`` bakes that file into the program at trace
+time.  Shapes the tuner never saw fall back to the kernel defaults.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [kernel ...]
 """
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+from __future__ import annotations
 
 import json
 import sys
-import time
 
-from repro.configs import get_arch
-from repro.core.costmodel import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
-from repro.launch.dryrun import run_cell
-from repro.launch.shardings import default_run
+from benchmarks import calibrate
+from benchmarks.bench_ratio import PAIRS
+from repro.core import dispatch
+from repro.kernels import tuning
 
-
-def terms(r):
-    chips = r["chips"]
-    c = r["jaxpr_flops_global"] / (chips * PEAK_FLOPS_BF16)
-    m = r["hbm_bytes_per_dev"] / HBM_BW
-    x = r["collective_total_per_dev"] / ICI_BW_PER_LINK
-    dom = max([("compute", c), ("memory", m), ("collective", x)],
-              key=lambda kv: kv[1])[0]
-    return dict(compute_s=c, memory_s=m, collective_s=x, dominant=dom,
-                step_s=max(c, m, x),
-                roofline_frac=c / max(c, m, x),
-                peak_gib=r["peak_bytes_per_dev_tpu"] / 2**30)
-
-
-# hypothesis catalogue: name -> (RunConfig mutation, rationale)
-VARIANTS = {
-    "no_seq_parallel": (
-        dict(seq_parallel=False),
-        "SP saves activation memory but adds per-layer all-gathers of the "
-        "residual stream; if memory fits without it, collective term drops",
-    ),
-    "microbatches_half": (
-        "HALVE_MB",
-        "each microbatch re-gathers FSDP weights; fewer microbatches -> "
-        "fewer weight all-gathers (trade: more activation memory)",
-    ),
-    "microbatches_double": (
-        "DOUBLE_MB",
-        "smaller activation working set; more weight regathers",
-    ),
-    "attn_chunk_2x": (
-        "DOUBLE_CHUNK",
-        "larger KV chunks halve the scan trip count (zol overhead) and "
-        "improve MXU utilization per step; more VMEM per chunk",
-    ),
-    "remat_dots": (
-        dict(remat="dots"),
-        "saving dot outputs (vs recompute-all) cuts backward recompute "
-        "FLOPs ~25% at the cost of stored activations",
-    ),
-    "tp_only": (
-        dict(sharding="tp"),
-        "replicating weights over data removes per-layer FSDP all-gathers "
-        "entirely (only viable if params fit replicated)",
-    ),
-    "moe_groups_2x": (
-        "DOUBLE_GROUPS",
-        "more GShard groups -> smaller per-group sort/capacity buffers, "
-        "more parallelism in dispatch",
-    ),
-    "unroll2": (
-        dict(scan_unroll=2),
-        "unrolling the layer scan 2x lets XLA overlap collectives of layer "
-        "i with compute of layer i+1 (halves loop overhead)",
-    ),
+# candidate values per knob; coordinate descent starts from DEFAULTS and
+# sweeps one knob at a time (2 passes), so cost is sum not product of these
+SEARCH_SPACE: dict[str, dict[str, list[int]]] = {
+    "fused_conv": {"bm": [64, 128, 256], "bn": [128, 256], "bk": [128, 256]},
+    "matmul_epilogue": {"bm": [64, 128, 256], "bn": [128, 256],
+                        "bk": [128, 256]},
+    "depthwise_conv": {"bm": [64, 128, 256], "bc": [128, 256]},
+    "sep_block": {"bm": [64, 128], "bn": [128, 256], "bc": [128, 256]},
+    "flash_attention": {"bq": [64, 128], "bk": [64, 128, 256]},
 }
 
+# representative multi-tile workload per kernel (conformance-grid shapes,
+# so the tuned bucket is one the correctness suite also exercises)
+WORKLOADS: dict[str, dict] = {
+    "fused_conv": dict(h=8, w_sp=9, cin=130, cout=140, stride=2, act="relu"),
+    "matmul_epilogue": dict(m=130, k=257, n=140, act="relu", residual=True),
+    "depthwise_conv": dict(h=10, w_sp=9, c=130, stride=2, act="relu6"),
+    "sep_block": dict(h=8, w_sp=9, c=130, cout=140, stride=2),
+    "flash_attention": dict(sq=200, dh=32),
+}
 
-def mutate(run, spec):
-    if spec == "HALVE_MB":
-        return run.replace(microbatches=max(1, run.microbatches // 2))
-    if spec == "DOUBLE_MB":
-        return run.replace(microbatches=run.microbatches * 2)
-    if spec == "DOUBLE_CHUNK":
-        return run.replace(attn_chunk=run.attn_chunk * 2)
-    if spec == "DOUBLE_GROUPS":
-        return run.replace(moe_groups=run.moe_groups * 2 or 32)
-    return run.replace(**spec)
+CAL_OPTS = dict(reps=3, inner=1, warmup_max=4, cv_cutoff=0.25, max_reruns=1)
+
+# a winner must beat the defaults by more than the measurement noise, or
+# the defaults stay (an untuned bucket is cheaper to reason about than a
+# tuned one that buys nothing)
+MIN_GAIN = 0.05
 
 
-def main():
-    arch, shape = sys.argv[1], sys.argv[2]
-    only = sys.argv[3].split(",") if len(sys.argv) > 3 else None
-    cfg = get_arch(arch)
-    out = {"arch": arch, "shape": shape, "experiments": []}
+def _bucket_dims(kernel: str, args) -> tuple[int, ...]:
+    """The tuning dims of one workload, via the same extractors ops.py
+    uses at dispatch time."""
+    if kernel == "fused_conv":
+        return tuning.conv_dims(args[0].shape, args[1].shape)
+    if kernel == "depthwise_conv":
+        return tuning.dw_dims(args[0].shape)
+    if kernel == "sep_block":
+        return tuning.sep_dims(args[0].shape, args[2].shape[-1])
+    if kernel == "matmul_epilogue":
+        return tuning.gemm_dims(args[0].shape, args[1].shape)
+    if kernel == "flash_attention":
+        return tuning.attn_dims(args[0].shape, args[1].shape)
+    raise ValueError(f"no dim extractor for kernel {kernel!r}")
 
-    def measure(tag, run):
-        t0 = time.time()
-        try:
-            r = run_cell(arch, shape, multi_pod=False, run=run)
-            t = terms(r)
-            rec = {"tag": tag, "ok": True, **t,
-                   "wall_s": round(time.time() - t0, 1)}
-        except Exception as e:  # noqa: BLE001
-            rec = {"tag": tag, "ok": False, "error": f"{type(e).__name__}: {e}"}
-        out["experiments"].append(rec)
-        print(json.dumps(rec), flush=True)
-        return rec
 
-    base = measure("baseline", None)
-    for tag, (spec, why) in VARIANTS.items():
-        if only and tag not in only:
+def measure_cfg(kernel: str, pallas_fn, args, dims, cfg,
+                **cal_opts) -> calibrate.Measurement:
+    """Time the kernel's dispatch path with ``cfg`` ambient for its bucket."""
+    table = tuning.TuneTable({kernel: {tuning.shape_bucket(*dims): cfg}})
+
+    def fn(*a):
+        with dispatch.use_tuning(table):
+            return pallas_fn(*a)
+
+    return calibrate.calibrated_time(fn, *args, **{**CAL_OPTS, **cal_opts})
+
+
+def tune_kernel(kernel: str, sweeps: int = 2, **cal_opts) -> dict:
+    """Coordinate-descent the kernel's knobs on its representative workload.
+
+    Returns {"dims", "bucket", "cfg", "us", "default_us", "gain"}; ``cfg``
+    is ``None`` when no candidate beat the defaults beyond MIN_GAIN."""
+    pallas_fn, _, args = PAIRS[kernel](0, **WORKLOADS[kernel])
+    dims = _bucket_dims(kernel, args)
+    bucket = tuning.shape_bucket(*dims)
+    space = SEARCH_SPACE[kernel]
+
+    best = dict(tuning.DEFAULTS[kernel])
+    seen: dict[tuple, float] = {}
+
+    def us_of(cfg: dict) -> float:
+        key = tuple(sorted(cfg.items()))
+        if key not in seen:
+            m = measure_cfg(kernel, pallas_fn, args, dims, cfg, **cal_opts)
+            seen[key] = m.us_per_call
+            print(f"  {kernel} {cfg}: {m.us_per_call:.1f}us "
+                  f"(cv={m.cv:.2f})", flush=True)
+        return seen[key]
+
+    default_us = us_of(best)
+    best_us = default_us
+    for _ in range(sweeps):
+        improved = False
+        for knob, values in space.items():
+            for val in values:
+                cand = {**best, knob: val}
+                if cand == best:
+                    continue
+                t = us_of(cand)
+                if t < best_us:
+                    best, best_us, improved = cand, t, True
+        if not improved:
+            break
+
+    gain = (default_us - best_us) / default_us if default_us > 0 else 0.0
+    keep = best != dict(tuning.DEFAULTS[kernel]) and gain > MIN_GAIN
+    return {
+        "dims": list(dims), "bucket": list(bucket),
+        "cfg": best if keep else None,
+        "us": best_us, "default_us": default_us, "gain": round(gain, 3),
+    }
+
+
+def main(argv=None) -> None:
+    import jax
+
+    only = set(argv if argv is not None else sys.argv[1:])
+    unknown = only - set(SEARCH_SPACE)
+    if unknown:
+        raise SystemExit(f"unknown kernel(s) {sorted(unknown)}; "
+                         f"choose from {sorted(SEARCH_SPACE)}")
+    backend = jax.default_backend()
+    configs: dict[str, dict[tuple, dict]] = {}
+    results: dict[str, dict] = {}
+    for kernel in SEARCH_SPACE:
+        if only and kernel not in only:
             continue
-        run = mutate(default_run(cfg, shape), spec)
-        rec = measure(tag, run)
-        if rec.get("ok") and base.get("ok"):
-            rec["delta_step_pct"] = round(
-                100 * (base["step_s"] - rec["step_s"]) / base["step_s"], 1
-            )
-            rec["hypothesis"] = why
-            print(f"  -> {tag}: step {base['step_s']:.3f}s -> "
-                  f"{rec['step_s']:.3f}s ({rec['delta_step_pct']:+.1f}%)",
-                  flush=True)
-    path = f"results/hillclimb_{arch}_{shape}.json"
-    os.makedirs("results", exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
-    print("wrote", path)
+        print(f"tuning {kernel} on {WORKLOADS[kernel]}", flush=True)
+        res = tune_kernel(kernel)
+        results[kernel] = res
+        if res["cfg"] is not None:
+            configs[kernel] = {tuple(res["bucket"]): res["cfg"]}
+        print(f"  -> {kernel}: default {res['default_us']:.1f}us, best "
+              f"{res['us']:.1f}us ({res['gain']:+.1%}) "
+              f"{'KEPT' if res['cfg'] else 'defaults kept'}", flush=True)
+
+    table = tuning.TuneTable(configs, backend=backend)
+    path = tuning.save_tuned(table)
+    print(f"wrote {path} ({table.n_configs} config(s))")
+    print(json.dumps({k: {kk: vv for kk, vv in v.items() if kk != "dims"}
+                      for k, v in results.items()}, indent=1))
 
 
 if __name__ == "__main__":

@@ -11,6 +11,8 @@ trajectory is tracked — and gated — across PRs).
   table8_resources <- paper Table 8 / Fig 10 (resource overhead proxies)
   table10_memory   <- paper Table 10 (DM/PM per version)
   kernel/*         <- Pallas kernel micro-benches (interpret mode)
+  ratio/*          <- calibrated pallas-vs-ref ratios on the conformance
+                      grid (gated by benchmarks.gate per-row noise floors)
   roofline/*       <- dry-run roofline terms (assignment §Roofline)
   compile/*        <- marvel.compile AOT path (compile-once-call-many)
   serving/*        <- async serving tier (throughput, p99, occupancy)
@@ -32,8 +34,8 @@ from benchmarks import common
 def main() -> None:
     from benchmarks import (
         bench_compile, bench_cycles, bench_energy, bench_kernels,
-        bench_memory, bench_patterns, bench_resources, bench_roofline,
-        bench_serving,
+        bench_memory, bench_patterns, bench_ratio, bench_resources,
+        bench_roofline, bench_serving,
     )
 
     print("name,us_per_call,derived")
@@ -41,8 +43,8 @@ def main() -> None:
         "patterns": bench_patterns, "cycles": bench_cycles,
         "energy": bench_energy, "resources": bench_resources,
         "memory": bench_memory, "kernels": bench_kernels,
-        "roofline": bench_roofline, "compile": bench_compile,
-        "serving": bench_serving,
+        "ratio": bench_ratio, "roofline": bench_roofline,
+        "compile": bench_compile, "serving": bench_serving,
     }
     only = set(sys.argv[1:])
     unknown = only - set(mods)

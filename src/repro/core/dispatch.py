@@ -171,6 +171,29 @@ def use_table(table: ResolvedTable | Mapping[str, str]):
         _state.table = old
 
 
+def current_tuning():
+    """The ambient tile-tuning table (``repro.kernels.tuning.TuneTable``)
+    consulted by the kernel wrappers on this thread, or None (defaults).
+
+    Kept here (a generic slot on the same thread-local as the extension
+    table) so ``kernels/tuning.py`` stays import-cycle-free: this module
+    never imports it."""
+    return getattr(_state, "tuning", None)
+
+
+@contextlib.contextmanager
+def use_tuning(table):
+    """Activate a tuning table on this thread for the duration of the block
+    (same trace-time-baking semantics as :func:`use_table`: under jit the
+    body runs at trace time, so the tile choice lands in the jaxpr)."""
+    old = current_tuning()
+    _state.tuning = table
+    try:
+        yield table
+    finally:
+        _state.tuning = old
+
+
 def call(pattern: str, baseline: Callable[..., Any], *args, **kwargs):
     impl_name = current_table().impl_for(pattern)
     if impl_name is None or impl_name in BASELINE_IMPLS:

@@ -35,6 +35,10 @@ class MarvelReport:
     hbm_bytes: dict[str, float] = field(default_factory=dict)
     rv32_speedup_v4: float = 0.0
     tpu_speedup_v4: float = 0.0
+    # autotuned tile configs baked into the program ({kernel: {"HxW..":
+    # {knob: int}}}, from benchmarks/tuned/<backend>.json via
+    # marvel.compile(tuned=...)); empty = kernel defaults
+    tuned_configs: dict = field(default_factory=dict)
 
     def summary(self) -> str:
         rw = self.rewrite_stats if self.rewrite_ok else (
@@ -59,12 +63,19 @@ class MarvelReport:
             f"v0->v4 speedup: rv32 {self.rv32_speedup_v4:.2f}x"
             f" (paper claims ~2x), tpu {self.tpu_speedup_v4:.2f}x"
         )
+        if self.tuned_configs:
+            n = sum(len(b) for b in self.tuned_configs.values())
+            lines.append(
+                f"tuned tiles: {n} config(s) over "
+                f"{', '.join(sorted(self.tuned_configs))}"
+            )
         return "\n".join(lines)
 
 
 def build_report(prof: profiler.PatternProfile, model_class: str,
                  exts: list[str], rewrite_stats: dict, *,
-                 rewrite_ok: bool = True, chips: int = 1) -> MarvelReport:
+                 rewrite_ok: bool = True, chips: int = 1,
+                 tuned_configs: dict | None = None) -> MarvelReport:
     """Fill the per-version cost/energy tables from a profile (Figs 11/12)."""
     report = MarvelReport(
         model_class=model_class,
@@ -72,6 +83,7 @@ def build_report(prof: profiler.PatternProfile, model_class: str,
         profile=prof,
         rewrite_stats=rewrite_stats,
         rewrite_ok=rewrite_ok,
+        tuned_configs=dict(tuned_configs or {}),
     )
     base = prof.as_costmodel_inputs()
     for lvl in costmodel.LEVELS:

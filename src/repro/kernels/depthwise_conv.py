@@ -72,49 +72,54 @@ def _dw_kernel(x_ref, w_ref, es_ref, eb_ref, o_ref, acc_ref, *,
         o_ref[0] = _ACTS[act](y).reshape(boh, wo, -1).astype(o_ref.dtype)
 
 
-def _padded_image(x_int8, top, left, hp_req, wp_req):
+def _padded_image(x_int8, top, left, hp_req, wp_req, bc=BC):
     """Zero-pad (exact for symmetric int8) so every tap slice is in bounds
     (extents from :func:`repro.kernels.common.conv_tile_plan`)."""
     _, h, w_in, _ = x_int8.shape
     x_p = jnp.pad(x_int8, ((0, 0), (top, max(hp_req - h - top, 0)),
                            (left, max(wp_req - w_in - left, 0)), (0, 0)))
-    x_p, _ = pad_to(x_p, 3, BC)
+    x_p, _ = pad_to(x_p, 3, bc)
     return x_p
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "act",
-                                             "out_dtype"))
+                                             "out_dtype", "bm", "bc"))
 def depthwise_conv_int8(x_int8, w_int8, eff_scale, eff_bias, *, stride=1,
-                        padding="SAME", act="none", out_dtype=jnp.float32):
+                        padding="SAME", act="none", out_dtype=jnp.float32,
+                        bm=BM, bc=BC):
     """x: (N, H, W, C) int8; w: (KH, KW, C) int8 (one tap stack per channel);
     eff_scale/eff_bias: (C,) f32 -> act(acc*eff_scale + eff_bias), returned
-    as (N, Ho, Wo, C) ``out_dtype``."""
+    as (N, Ho, Wo, C) ``out_dtype``.
+
+    ``bm``/``bc`` are the autotunable tile sizes: output-pixel block and
+    channel block (defaults: the VPU-native 128s; the dispatch wrapper
+    overrides them from the active tuning table)."""
     n, h, w_in, c = x_int8.shape
     kh, kw, _ = w_int8.shape
     ho, wo, boh, ohb, top, left, hp_req, wp_req = conv_tile_plan(
-        h, w_in, kh, kw, stride, padding, BM
+        h, w_in, kh, kw, stride, padding, bm
     )
-    x_p = _padded_image(x_int8, top, left, hp_req, wp_req)
-    w_p, _ = pad_to(w_int8, 2, BC)
-    es, _ = pad_to(eff_scale.reshape(1, -1).astype(jnp.float32), 1, BC)
-    eb, _ = pad_to(eff_bias.reshape(1, -1).astype(jnp.float32), 1, BC)
+    x_p = _padded_image(x_int8, top, left, hp_req, wp_req, bc)
+    w_p, _ = pad_to(w_int8, 2, bc)
+    es, _ = pad_to(eff_scale.reshape(1, -1).astype(jnp.float32), 1, bc)
+    eb, _ = pad_to(eff_bias.reshape(1, -1).astype(jnp.float32), 1, bc)
     _, hp, wp, cp = x_p.shape
     out = pl.pallas_call(
         functools.partial(_dw_kernel, stride=stride, boh=boh, wo=wo, act=act),
-        grid=(n, ohb, cp // BC, kh, kw),
+        grid=(n, ohb, cp // bc, kh, kw),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, BC),
+            pl.BlockSpec((1, hp, wp, bc),
                          lambda ni, oi, ci, khi, kwi: (ni, 0, 0, ci)),
-            pl.BlockSpec((1, 1, BC),
+            pl.BlockSpec((1, 1, bc),
                          lambda ni, oi, ci, khi, kwi: (khi, kwi, ci)),
-            pl.BlockSpec((1, BC), lambda ni, oi, ci, khi, kwi: (0, ci)),
-            pl.BlockSpec((1, BC), lambda ni, oi, ci, khi, kwi: (0, ci)),
+            pl.BlockSpec((1, bc), lambda ni, oi, ci, khi, kwi: (0, ci)),
+            pl.BlockSpec((1, bc), lambda ni, oi, ci, khi, kwi: (0, ci)),
         ],
         out_specs=pl.BlockSpec(
-            (1, boh, wo, BC), lambda ni, oi, ci, khi, kwi: (ni, oi, 0, ci)
+            (1, boh, wo, bc), lambda ni, oi, ci, khi, kwi: (ni, oi, 0, ci)
         ),
         out_shape=jax.ShapeDtypeStruct((n, ohb * boh, wo, cp), out_dtype),
-        scratch_shapes=[pltpu.VMEM((boh * wo, BC), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((boh * wo, bc), jnp.int32)],
         interpret=interpret_mode(),
     )(x_p, w_p, es, eb)
     return out[:, :ho, :, :c]
@@ -154,10 +159,12 @@ def _sep_kernel(x_ref, wd_ref, ds_ref, db_ref, wp_ref, ps_ref, pb_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "dw_act",
-                                             "pw_act", "out_dtype"))
+                                             "pw_act", "out_dtype",
+                                             "bm", "bn", "bc"))
 def sep_block_int8(x_int8, w_dw_int8, dw_scale, dw_bias, w_pw_int8,
                    pw_scale, pw_bias, *, stride=1, padding="SAME",
-                   dw_act="relu", pw_act="none", out_dtype=jnp.float32):
+                   dw_act="relu", pw_act="none", out_dtype=jnp.float32,
+                   bm=BM, bn=BN, bc=BC):
     """Fused depthwise -> pointwise block, one HBM write.
 
     x: (N, H, W, C) int8; w_dw: (KH, KW, C) int8; w_pw: (C, Cout) int8;
@@ -166,42 +173,46 @@ def sep_block_int8(x_int8, w_dw_int8, dw_scale, dw_bias, w_pw_int8,
     ``pw_act((dw_act(dwconv(x)) @ w_pw) * pw_scale + pw_bias)`` as
     (N, Ho, Wo, Cout) ``out_dtype`` — the depthwise intermediate stays in
     VMEM.
+
+    ``bm``/``bn``/``bc`` are the autotunable tile sizes: output-pixel
+    block, Cout block, C contraction block (the dispatch wrapper overrides
+    the 128 defaults from the active tuning table).
     """
     n, h, w_in, _ = x_int8.shape
     kh, kw, _ = w_dw_int8.shape
     cout = w_pw_int8.shape[1]
     ho, wo, boh, ohb, top, left, hp_req, wp_req = conv_tile_plan(
-        h, w_in, kh, kw, stride, padding, BM
+        h, w_in, kh, kw, stride, padding, bm
     )
-    x_p = _padded_image(x_int8, top, left, hp_req, wp_req)
-    wd, _ = pad_to(w_dw_int8, 2, BC)
-    ds, _ = pad_to(dw_scale.reshape(1, -1).astype(jnp.float32), 1, BC)
-    db, _ = pad_to(dw_bias.reshape(1, -1).astype(jnp.float32), 1, BC)
-    wp, _ = pad_to(w_pw_int8, 0, BC)
-    wp, _ = pad_to(wp, 1, BN)
-    ps, _ = pad_to(pw_scale.reshape(1, -1).astype(jnp.float32), 1, BN)
-    pb, _ = pad_to(pw_bias.reshape(1, -1).astype(jnp.float32), 1, BN)
+    x_p = _padded_image(x_int8, top, left, hp_req, wp_req, bc)
+    wd, _ = pad_to(w_dw_int8, 2, bc)
+    ds, _ = pad_to(dw_scale.reshape(1, -1).astype(jnp.float32), 1, bc)
+    db, _ = pad_to(dw_bias.reshape(1, -1).astype(jnp.float32), 1, bc)
+    wp, _ = pad_to(w_pw_int8, 0, bc)
+    wp, _ = pad_to(wp, 1, bn)
+    ps, _ = pad_to(pw_scale.reshape(1, -1).astype(jnp.float32), 1, bn)
+    pb, _ = pad_to(pw_bias.reshape(1, -1).astype(jnp.float32), 1, bn)
     _, hp, wp_sp, cp = x_p.shape
-    nb = wp.shape[1] // BN
+    nb = wp.shape[1] // bn
     out = pl.pallas_call(
         functools.partial(_sep_kernel, stride=stride, boh=boh, wo=wo,
                           kh=kh, kw=kw, dw_act=dw_act, pw_act=pw_act),
-        grid=(n, ohb, nb, cp // BC),
+        grid=(n, ohb, nb, cp // bc),
         in_specs=[
-            pl.BlockSpec((1, hp, wp_sp, BC),
+            pl.BlockSpec((1, hp, wp_sp, bc),
                          lambda ni, oi, nbi, ci: (ni, 0, 0, ci)),
-            pl.BlockSpec((kh, kw, BC), lambda ni, oi, nbi, ci: (0, 0, ci)),
-            pl.BlockSpec((1, BC), lambda ni, oi, nbi, ci: (0, ci)),
-            pl.BlockSpec((1, BC), lambda ni, oi, nbi, ci: (0, ci)),
-            pl.BlockSpec((BC, BN), lambda ni, oi, nbi, ci: (ci, nbi)),
-            pl.BlockSpec((1, BN), lambda ni, oi, nbi, ci: (0, nbi)),
-            pl.BlockSpec((1, BN), lambda ni, oi, nbi, ci: (0, nbi)),
+            pl.BlockSpec((kh, kw, bc), lambda ni, oi, nbi, ci: (0, 0, ci)),
+            pl.BlockSpec((1, bc), lambda ni, oi, nbi, ci: (0, ci)),
+            pl.BlockSpec((1, bc), lambda ni, oi, nbi, ci: (0, ci)),
+            pl.BlockSpec((bc, bn), lambda ni, oi, nbi, ci: (ci, nbi)),
+            pl.BlockSpec((1, bn), lambda ni, oi, nbi, ci: (0, nbi)),
+            pl.BlockSpec((1, bn), lambda ni, oi, nbi, ci: (0, nbi)),
         ],
         out_specs=pl.BlockSpec(
-            (1, boh, wo, BN), lambda ni, oi, nbi, ci: (ni, oi, 0, nbi)
+            (1, boh, wo, bn), lambda ni, oi, nbi, ci: (ni, oi, 0, nbi)
         ),
-        out_shape=jax.ShapeDtypeStruct((n, ohb * boh, wo, nb * BN), out_dtype),
-        scratch_shapes=[pltpu.VMEM((boh * wo, BN), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((n, ohb * boh, wo, nb * bn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((boh * wo, bn), jnp.float32)],
         interpret=interpret_mode(),
     )(x_p, wd, ds, db, wp, ps, pb)
     return out[:, :ho, :, :cout]

@@ -79,65 +79,69 @@ def _kernel(x_ref, w_ref, es_ref, eb_ref, *refs,
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "act",
-                                             "out_dtype"))
+                                             "out_dtype", "bm", "bn", "bk"))
 def fused_conv_int8(x_int8, w_int8, eff_scale, eff_bias, residual=None, *,
                     stride=1, padding="SAME", act="none",
-                    out_dtype=jnp.float32):
+                    out_dtype=jnp.float32, bm=BM, bn=BN, bk=BK):
     """x: (N, H, W, Cin) int8; w: (KH, KW, Cin, Cout) int8;
     eff_scale/eff_bias: (Cout,) f32; residual: optional (N, Ho, Wo, Cout)
     skip tensor -> act(acc*eff_scale + eff_bias [+ residual]), returned as
     (N, Ho, Wo, Cout) ``out_dtype``.  The residual-add (the ``acc_mac``
     extension) happens in-register on the accumulator tile, so the skip
     connection costs one extra VMEM read instead of a full HBM round-trip
-    of the conv output."""
+    of the conv output.
+
+    ``bm``/``bn``/``bk`` are the autotunable tile sizes: output-pixel block,
+    Cout block, Cin contraction block (defaults: the MXU-native 128s; the
+    dispatch wrapper overrides them from the active tuning table)."""
     n, h, w_in, _ = x_int8.shape
     kh, kw, _, cout = w_int8.shape
     ho, wo, boh, ohb, top, left, hp_req, wp_req = conv_tile_plan(
-        h, w_in, kh, kw, stride, padding, BM
+        h, w_in, kh, kw, stride, padding, bm
     )
     # pad so every (kh, kw, row-block) slice is in bounds; zero padding is
     # exact for symmetric int8 (zero-point 0)
     x_p = jnp.pad(x_int8, ((0, 0), (top, max(hp_req - h - top, 0)),
                            (left, max(wp_req - w_in - left, 0)), (0, 0)))
-    x_p, _ = pad_to(x_p, 3, BK)
-    w_p, _ = pad_to(w_int8, 2, BK)
-    w_p, _ = pad_to(w_p, 3, BN)
-    es, _ = pad_to(eff_scale.reshape(1, -1).astype(jnp.float32), 1, BN)
-    eb, _ = pad_to(eff_bias.reshape(1, -1).astype(jnp.float32), 1, BN)
+    x_p, _ = pad_to(x_p, 3, bk)
+    w_p, _ = pad_to(w_int8, 2, bk)
+    w_p, _ = pad_to(w_p, 3, bn)
+    es, _ = pad_to(eff_scale.reshape(1, -1).astype(jnp.float32), 1, bn)
+    eb, _ = pad_to(eff_bias.reshape(1, -1).astype(jnp.float32), 1, bn)
     _, hp, wp, cp = x_p.shape
-    nb = w_p.shape[3] // BN
+    nb = w_p.shape[3] // bn
     operands = [x_p, w_p, es, eb]
     in_specs = [
-        pl.BlockSpec((1, hp, wp, BK),
+        pl.BlockSpec((1, hp, wp, bk),
                      lambda ni, oi, nbi, khi, kwi, kci: (ni, 0, 0, kci)),
-        pl.BlockSpec((1, 1, BK, BN),
+        pl.BlockSpec((1, 1, bk, bn),
                      lambda ni, oi, nbi, khi, kwi, kci: (khi, kwi, kci, nbi)),
-        pl.BlockSpec((1, BN),
+        pl.BlockSpec((1, bn),
                      lambda ni, oi, nbi, khi, kwi, kci: (0, nbi)),
-        pl.BlockSpec((1, BN),
+        pl.BlockSpec((1, bn),
                      lambda ni, oi, nbi, khi, kwi, kci: (0, nbi)),
     ]
     if residual is not None:
         # skip tensor tiled exactly like the output block
         r_p = jnp.pad(residual.astype(jnp.float32),
                       ((0, 0), (0, ohb * boh - ho), (0, 0), (0, 0)))
-        r_p, _ = pad_to(r_p, 3, BN)
+        r_p, _ = pad_to(r_p, 3, bn)
         operands.append(r_p)
         in_specs.append(pl.BlockSpec(
-            (1, boh, wo, BN),
+            (1, boh, wo, bn),
             lambda ni, oi, nbi, khi, kwi, kci: (ni, oi, 0, nbi),
         ))
     out = pl.pallas_call(
         functools.partial(_kernel, stride=stride, boh=boh, wo=wo, act=act,
                           has_residual=residual is not None),
-        grid=(n, ohb, nb, kh, kw, cp // BK),
+        grid=(n, ohb, nb, kh, kw, cp // bk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
-            (1, boh, wo, BN),
+            (1, boh, wo, bn),
             lambda ni, oi, nbi, khi, kwi, kci: (ni, oi, 0, nbi),
         ),
-        out_shape=jax.ShapeDtypeStruct((n, ohb * boh, wo, nb * BN), out_dtype),
-        scratch_shapes=[pltpu.VMEM((boh * wo, BN), jnp.int32)],
+        out_shape=jax.ShapeDtypeStruct((n, ohb * boh, wo, nb * bn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((boh * wo, bn), jnp.int32)],
         interpret=interpret_mode(),
     )(*operands)
     return out[:, :ho, :, :cout]

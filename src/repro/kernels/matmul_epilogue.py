@@ -52,16 +52,20 @@ def _kernel(x_ref, w_ref, es_ref, eb_ref, *refs, act, has_residual):
         o_ref[...] = _ACTS[act](y).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("act",))
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
 def matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None,
-                    residual=None):
+                    residual=None, *, bm=BM, bn=BN, bk=BK):
     """x: (..., K); w: (K, N); b/scale/shift: (N,) or None; residual:
     optional (..., N) skip tensor ->
     ``act((x@w + b)*scale + shift [+ residual])``.  The whole epilogue folds
     into one per-column (scale, bias) pair — ``act(acc*scale + (b*scale +
     shift))`` — applied in-register; the residual-add (the ``acc_mac``
     extension) rides the same epilogue, so a skip connection costs one VMEM
-    read instead of an HBM round-trip of the GEMM output."""
+    read instead of an HBM round-trip of the GEMM output.
+
+    ``bm``/``bn``/``bk`` are the autotunable M/N/K tile sizes (defaults:
+    the MXU-native 128s; the dispatch wrapper overrides them from the
+    active tuning table)."""
     orig_shape = x.shape
     n_out = w.shape[1]
     x2 = x.reshape(-1, orig_shape[-1])
@@ -78,33 +82,33 @@ def matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None,
         if r2 is not None:
             y = y + r2.astype(jnp.float32)
         return _ACTS[act](y).astype(x.dtype).reshape(*orig_shape[:-1], n_out)
-    x2, M = pad_to(x2, 0, BM)
-    x2, _ = pad_to(x2, 1, BK)
-    w, _ = pad_to(w, 0, BK)
-    w, N = pad_to(w, 1, BN)
-    es, _ = pad_to(es, 1, BN)
-    eb, _ = pad_to(eb, 1, BN)
+    x2, M = pad_to(x2, 0, bm)
+    x2, _ = pad_to(x2, 1, bk)
+    w, _ = pad_to(w, 0, bk)
+    w, N = pad_to(w, 1, bn)
+    es, _ = pad_to(es, 1, bn)
+    eb, _ = pad_to(eb, 1, bn)
     Mp, Kp = x2.shape
     Np = w.shape[1]
     operands = [x2, w, es, eb]
     in_specs = [
-        pl.BlockSpec((BM, BK), lambda m, n, k: (m, k)),
-        pl.BlockSpec((BK, BN), lambda m, n, k: (k, n)),
-        pl.BlockSpec((1, BN), lambda m, n, k: (0, n)),
-        pl.BlockSpec((1, BN), lambda m, n, k: (0, n)),
+        pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+        pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+        pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
+        pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
     ]
     if r2 is not None:
-        r2, _ = pad_to(r2, 0, BM)
-        r2, _ = pad_to(r2, 1, BN)
+        r2, _ = pad_to(r2, 0, bm)
+        r2, _ = pad_to(r2, 1, bn)
         operands.append(r2)
-        in_specs.append(pl.BlockSpec((BM, BN), lambda m, n, k: (m, n)))
+        in_specs.append(pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)))
     out = pl.pallas_call(
         functools.partial(_kernel, act=act, has_residual=r2 is not None),
-        grid=(Mp // BM, Np // BN, Kp // BK),
+        grid=(Mp // bm, Np // bn, Kp // bk),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((BM, BN), lambda m, n, k: (m, n)),
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
-        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret_mode(),
     )(*operands)
     return out[:M, :N].reshape(*orig_shape[:-1], N)

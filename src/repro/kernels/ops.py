@@ -27,6 +27,7 @@ from repro.kernels import pooling as pk
 from repro.kernels import ref
 from repro.kernels import matmul_epilogue as me
 from repro.kernels import residual_rmsnorm as rr
+from repro.kernels import tuning
 from repro.kernels import wkv_chunk as wk
 from repro.kernels.common import (
     conv_kernel_eligible, conv_out_size, conv_residual_fusable,
@@ -84,9 +85,11 @@ def _pallas_fused_conv(x, w, b=None, *, stride=1, padding="SAME", groups=1,
     # fold dequant + bias + BN affine into one in-register (scale, bias) pair:
     #   act((acc*dq + bias)*s + t + res) = act(acc*(dq*s) + (bias*s + t) + res)
     # (the residual rides unscaled — it is already in output units)
+    cfg = tuning.lookup("fused_conv", tuning.conv_dims(x.shape, w.shape))
     out = fc.fused_conv_int8(
         x_int8, w_int8, dq * s, bias * s + t, residual,
         stride=stride, padding=padding, act=act,
+        bm=cfg["bm"], bn=cfg["bn"], bk=cfg["bk"],
     )
     return out.astype(x.dtype)
 
@@ -140,9 +143,10 @@ def _pallas_depthwise_conv(x, w, b=None, *, stride=1, padding="SAME",
     s = jnp.ones((c,), jnp.float32) if scale is None else scale.astype(jnp.float32)
     t = jnp.zeros((c,), jnp.float32) if shift is None else shift.astype(jnp.float32)
     # same epilogue fold as fused_conv: act(acc*(dq*s) + (bias*s + t))
+    cfg = tuning.lookup("depthwise_conv", tuning.dw_dims(x.shape))
     out = dw.depthwise_conv_int8(
         x_int8, w_int8, dq * s, bias * s + t, stride=stride, padding=padding,
-        act=act,
+        act=act, bm=cfg["bm"], bc=cfg["bc"],
     )
     return out.astype(x.dtype)
 
@@ -181,9 +185,11 @@ def _pallas_sep_block(x, w_dw, w_pw, *, stride=1, padding="SAME",
     # dw epilogue fold: dw_act(acc_dw*(xs*wds*ds) + dt); the pointwise stage
     # contracts that f32 tile against int8 weights, so its fold is
     # pw_act(acc_pw*(wps*ps) + (pb*ps + pt))
+    cfg = tuning.lookup("sep_block", tuning.sep_dims(x.shape, cout))
     out = dw.sep_block_int8(
         x_int8, wd_int8, xs * wds * ds, dt, wp_int8, wps * ps, pb * ps + pt,
         stride=stride, padding=padding, dw_act=dw_act, pw_act=pw_act,
+        bm=cfg["bm"], bn=cfg["bn"], bc=cfg["bc"],
     )
     return out.astype(x.dtype)
 
@@ -194,8 +200,11 @@ def _pallas_matmul_epilogue(x, w, b=None, act="none", scale=None, shift=None,
         # mis-shaped skip tensor: stay on the algorithmically-fused oracle
         return ref.matmul_epilogue_ref(x, w, b, act=act, scale=scale,
                                        shift=shift, residual=residual)
+    cfg = tuning.lookup("matmul_epilogue",
+                        tuning.gemm_dims(x.shape, w.shape))
     return me.matmul_epilogue(x, w, b, act=act, scale=scale, shift=shift,
-                              residual=residual)
+                              residual=residual,
+                              bm=cfg["bm"], bn=cfg["bn"], bk=cfg["bk"])
 
 
 def _pallas_pool(x, *, op, k=2, stride=2):
@@ -226,8 +235,10 @@ def _pallas_flash_attention(q, k, v, *, causal=True, q_offset=0,
     dv = v.shape[-1]
     # kernel covers the self-attention fast path; everything else -> ref
     Skv = k.shape[1]
-    bq = min(128, Sq)
-    bk = min(128, Skv)
+    cfg = tuning.lookup("flash_attention",
+                        tuning.attn_dims(q.shape, k.shape))
+    bq = min(cfg["bq"], Sq)
+    bk = min(cfg["bk"], Skv)
     # non-causal with ragged KV would let zero-padded keys contribute
     pad_unsafe = (not causal) and (Skv % bk != 0)
     if window is not None or kv_len is not None or Sq == 1 or dh != dv \

@@ -1,0 +1,233 @@
+"""Tile autotuning: per-(kernel, shape-bucket, backend) block-size configs.
+
+The Pallas kernels ship with safe default tile sizes (128-square blocks, the
+MXU/VPU-native shape).  ``benchmarks/hillclimb.py`` searches the per-kernel
+knob space on representative workloads with the calibrated runner
+(``benchmarks/calibrate.py``) and writes the winners to
+``benchmarks/tuned/<backend>.json``; ``marvel.compile(tuned="auto")`` loads
+that file into a :class:`TuneTable` and bakes it into the program the same
+way the extension table is baked — closure-captured at trace time via
+:meth:`TuneTable.bind`, so the ``MarvelProgram`` keeps its tile configs no
+matter what is ambient at call time and ``recompiles_after_warmup`` stays 0
+(the table is constant for the life of the program).
+
+Shape buckets are next-power-of-two per dimension (floor 8), the same
+granularity as the serving tier's batch buckets: close shapes share a
+config, and a shape the tuner never saw falls back to :data:`DEFAULTS`.
+
+The dim extractors (:func:`conv_dims` ...) are the single source of truth
+for *what* gets bucketed per kernel — ``kernels/ops.py`` (consumption) and
+``benchmarks/hillclimb.py`` (search) both call them, so the tuner and the
+dispatcher cannot disagree about which bucket a workload lands in.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import math
+import os
+import pathlib
+from typing import Mapping
+
+from repro.core import dispatch
+
+# safe defaults per kernel: the knob names double as the schema — a tuned
+# config is filtered to exactly these keys on load
+DEFAULTS: dict[str, dict[str, int]] = {
+    "fused_conv": {"bm": 128, "bn": 128, "bk": 128},
+    "matmul_epilogue": {"bm": 128, "bn": 128, "bk": 128},
+    "depthwise_conv": {"bm": 128, "bc": 128},
+    "sep_block": {"bm": 128, "bn": 128, "bc": 128},
+    "flash_attention": {"bq": 128, "bk": 128},
+}
+
+
+def shape_bucket(*dims: int) -> tuple[int, ...]:
+    """Next power of two per dim, floor 8 (0 stays 0 — degenerate shapes
+    never match a tuned bucket)."""
+    return tuple(
+        0 if d <= 0 else max(8, 1 << math.ceil(math.log2(d)))
+        for d in (int(d) for d in dims)
+    )
+
+
+# dim extractors: the bucketed dims per kernel (shapes, not arrays, so the
+# tuner can bucket a planned workload without materializing it)
+
+def conv_dims(x_shape, w_shape) -> tuple[int, ...]:
+    """(H, W, Cin, Cout) of a fused_conv site."""
+    return (x_shape[1], x_shape[2], x_shape[3], w_shape[3])
+
+
+def dw_dims(x_shape) -> tuple[int, ...]:
+    """(H, W, C) of a depthwise site."""
+    return (x_shape[1], x_shape[2], x_shape[3])
+
+
+def sep_dims(x_shape, cout: int) -> tuple[int, ...]:
+    """(H, W, C, Cout) of a fused separable site."""
+    return (x_shape[1], x_shape[2], x_shape[3], cout)
+
+
+def gemm_dims(x_shape, w_shape) -> tuple[int, ...]:
+    """(M, K, N) of a matmul_epilogue site (leading dims flattened)."""
+    return (int(math.prod(x_shape[:-1])), w_shape[0], w_shape[1])
+
+
+def attn_dims(q_shape, k_shape) -> tuple[int, ...]:
+    """(Sq, Skv, dh) of a flash_attention site (grouped-q layout)."""
+    return (q_shape[1], k_shape[1], q_shape[-1])
+
+
+class TuneTable(Mapping):
+    """Immutable (kernel, bucket) -> tile-config mapping.
+
+    Hashable (keys compile caches, like :class:`dispatch.ResolvedTable`);
+    :meth:`bind` closure-captures it so jit/AOT tracing bakes the configs
+    into the program.
+    """
+
+    __slots__ = ("_map", "backend")
+
+    def __init__(self, configs: Mapping | None = None, backend: str = ""):
+        # {kernel: {bucket-tuple: {knob: int}}}, knob-filtered + frozen
+        m: dict[str, dict[tuple, dict[str, int]]] = {}
+        for kernel, buckets in (configs or {}).items():
+            knobs = DEFAULTS.get(kernel)
+            if knobs is None:
+                continue
+            for bucket, cfg in buckets.items():
+                if isinstance(bucket, str):
+                    bucket = tuple(int(d) for d in bucket.split("x"))
+                clean = {k: int(v) for k, v in cfg.items() if k in knobs}
+                if clean:
+                    m.setdefault(kernel, {})[tuple(bucket)] = clean
+        self._map = m
+        self.backend = backend
+
+    def __getitem__(self, kernel: str):
+        return self._map[kernel]
+
+    def __iter__(self):
+        return iter(self._map)
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def __hash__(self) -> int:
+        return hash((self.backend, frozenset(
+            (k, b, frozenset(cfg.items()))
+            for k, buckets in self._map.items()
+            for b, cfg in buckets.items()
+        )))
+
+    def __eq__(self, other: object) -> bool:
+        if isinstance(other, TuneTable):
+            return self._map == other._map
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        n = sum(len(b) for b in self._map.values())
+        return f"TuneTable({n} configs, backend={self.backend or '?'})"
+
+    @property
+    def n_configs(self) -> int:
+        return sum(len(b) for b in self._map.values())
+
+    def get_cfg(self, kernel: str, dims: tuple[int, ...]) -> dict[str, int]:
+        """The tuned knobs for this kernel/bucket ({} when untuned)."""
+        return self._map.get(kernel, {}).get(shape_bucket(*dims), {})
+
+    def as_json(self) -> dict:
+        """JSON-serializable form (bucket tuples -> "HxWx..." strings)."""
+        return {
+            "backend": self.backend,
+            "configs": {
+                kernel: {
+                    "x".join(str(d) for d in bucket): dict(cfg)
+                    for bucket, cfg in sorted(buckets.items())
+                }
+                for kernel, buckets in sorted(self._map.items())
+            },
+        }
+
+    def summary_configs(self) -> dict[str, dict[str, dict[str, int]]]:
+        """Report-facing view: {kernel: {"HxW...": cfg}}."""
+        return self.as_json()["configs"]
+
+    def bind(self, fn):
+        """``fn`` with this table ambient while its body runs (= trace time
+        under jit/AOT, so the tile configs are baked into the jaxpr)."""
+        if not self._map:
+            return fn  # empty table: nothing to bake
+
+        @functools.wraps(fn)
+        def bound(*args, **kwargs):
+            with dispatch.use_tuning(self):
+                return fn(*args, **kwargs)
+
+        bound.__marvel_tuning__ = self  # type: ignore[attr-defined]
+        return bound
+
+
+EMPTY = TuneTable()
+
+
+def lookup(kernel: str, dims: tuple[int, ...]) -> dict[str, int]:
+    """The effective tile config at a dispatch site: kernel defaults
+    overlaid with the ambient :class:`TuneTable`'s bucket entry (if any).
+
+    Called inside the wrappers in ``kernels/ops.py`` — i.e. at trace time
+    under jit, so whichever table :meth:`TuneTable.bind` (or
+    :func:`dispatch.use_tuning`) made ambient is what gets baked.
+    """
+    cfg = dict(DEFAULTS[kernel])
+    table = dispatch.current_tuning()
+    if table is not None:
+        cfg.update(table.get_cfg(kernel, dims))
+    return cfg
+
+
+def tuned_dir() -> pathlib.Path:
+    """Where tuned configs live: ``$MARVEL_TUNED_DIR`` or the repo's
+    ``benchmarks/tuned/``."""
+    env = os.environ.get("MARVEL_TUNED_DIR")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "tuned"
+
+
+def load_tuned(backend: str | None = None) -> TuneTable:
+    """The committed :class:`TuneTable` for ``backend`` (default: the
+    current jax backend); an empty table when no file exists — defaults
+    apply and nothing breaks."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return _load_cached(str(tuned_dir()), backend)
+
+
+@functools.lru_cache(maxsize=None)
+def _load_cached(directory: str, backend: str) -> TuneTable:
+    path = pathlib.Path(directory) / f"{backend}.json"
+    if not path.exists():
+        return TuneTable(backend=backend)
+    with open(path) as f:
+        payload = json.load(f)
+    return TuneTable(payload.get("configs", {}),
+                     backend=payload.get("backend", backend))
+
+
+def save_tuned(table: TuneTable, path: str | os.PathLike | None = None) -> str:
+    """Write ``table`` as ``<tuned_dir>/<backend>.json`` (hillclimb's
+    output side)."""
+    if path is None:
+        path = tuned_dir() / f"{table.backend or 'unknown'}.json"
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(table.as_json(), f, indent=1, sort_keys=True)
+        f.write("\n")
+    _load_cached.cache_clear()
+    return str(path)

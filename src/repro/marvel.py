@@ -58,6 +58,7 @@ from repro.core import costmodel, dispatch, profiler
 from repro.core import rewrite as rewrite_mod
 from repro.core.extensions import resolve_table
 from repro.core.pipeline import MarvelReport, build_report
+from repro.kernels import tuning as tuning_mod
 from repro.quant.ptq import fake_quantize_tree
 
 
@@ -88,6 +89,10 @@ class MarvelProgram:
     backend: str  # as requested (possibly "auto")
     table: dispatch.ResolvedTable
     report: MarvelReport
+    # autotuned tile configs baked alongside the extension table (empty
+    # table = kernel defaults); constant for the program's life, so the
+    # recompiles_after_warmup=0 contract is untouched
+    tuned: tuning_mod.TuneTable = field(default_factory=tuning_mod.TuneTable)
     chips: int = 1
     donate: tuple[int, ...] = ()
     quantized: bool = False
@@ -115,6 +120,12 @@ class MarvelProgram:
     def resolved_extensions(self) -> dict[str, str]:
         """The baked pattern -> impl mapping (empty means pure baseline)."""
         return dict(self.table)
+
+    @property
+    def tuned_configs(self) -> dict[str, dict[str, dict[str, int]]]:
+        """The baked tile configs ({kernel: {"HxW..": {knob: int}}};
+        empty means kernel defaults everywhere)."""
+        return self.tuned.summary_configs()
 
     def cost(self, level: str | None = None) -> dict[str, float]:
         """Modeled per-inference cost at ``level`` (default: the compiled
@@ -315,6 +326,8 @@ class MarvelProgram:
             f"quantized={self.quantized}, "
             f"impls={self.resolved_extensions or 'baseline'})"
         )
+        if self.tuned.n_configs:
+            head += f"\n  {self.tuned!r}"
         return head + "\n" + self.report.summary()
 
 
@@ -322,7 +335,8 @@ def compile(fn: Callable, *example_args, level: str = "v4",
             backend: str = "auto", quantize: bool = False, params=None,
             donate: tuple[int, ...] = (), chips: int = 1,
             do_rewrite: bool = True, precompile: bool = True,
-            platform: str | None = None) -> MarvelProgram:
+            platform: str | None = None,
+            tuned: Any = "auto") -> MarvelProgram:
     """Run the full MARVEL flow on ``fn`` and return the deployable artifact.
 
     Args:
@@ -344,6 +358,13 @@ def compile(fn: Callable, *example_args, level: str = "v4",
       precompile: eagerly build the AOT executable for the example-arg
         bucket (compile-at-deploy; disable for report-only flows).
       platform: override the platform ``backend="auto"`` resolves against.
+      tuned: tile-autotuning configs to bake.  ``"auto"`` (default) loads
+        ``benchmarks/tuned/<backend>.json`` for the current platform (empty
+        table — kernel defaults — when no file exists); ``None``/``"off"``
+        disables tuning; a :class:`repro.kernels.tuning.TuneTable` is used
+        as-is.  The table is closure-captured at trace time exactly like the
+        extension table, so the artifact keeps its tile sizes and
+        ``recompiles_after_warmup`` stays 0.
     """
     quant_stats: dict = {}
     if params is not None:
@@ -369,7 +390,20 @@ def compile(fn: Callable, *example_args, level: str = "v4",
     # CNN-only patterns and vice versa
     table = resolve_table(level, backend, extensions=exts, platform=platform,
                           model_class=model_class)
-    bound_fn = table.bind(model_fn)
+    # tile autotuning rides the same trace-time-baking mechanism: the tuned
+    # table wraps the extension-bound fn, so the kernel wrappers see it at
+    # trace time and the jaxpr carries the tile choice
+    if tuned == "auto":
+        tuned_table = tuning_mod.load_tuned(platform)
+    elif tuned is None or tuned == "off":
+        tuned_table = tuning_mod.TuneTable()
+    elif isinstance(tuned, tuning_mod.TuneTable):
+        tuned_table = tuned
+    else:
+        raise ValueError(
+            f"tuned must be 'auto', 'off'/None, or a TuneTable; got {tuned!r}"
+        )
+    bound_fn = tuned_table.bind(table.bind(model_fn))
 
     # 4) chess_rewrite of the bound program — the fusions land in the
     # deployed binary, and the report counts what was actually baked;
@@ -390,7 +424,8 @@ def compile(fn: Callable, *example_args, level: str = "v4",
             )
 
     report = build_report(prof, model_class, exts, rewrite_stats,
-                          rewrite_ok=rewrite_ok, chips=chips)
+                          rewrite_ok=rewrite_ok, chips=chips,
+                          tuned_configs=tuned_table.summary_configs())
 
     # 5) the artifact: rewritten (per shape bucket) + AOT-lowered
     program = MarvelProgram(
@@ -399,6 +434,7 @@ def compile(fn: Callable, *example_args, level: str = "v4",
         backend=backend,
         table=table,
         report=report,
+        tuned=tuned_table,
         chips=chips,
         donate=tuple(donate),
         quantized=bool(quantize),

@@ -183,3 +183,72 @@ def quant_sep_oracle(x, wd, wp, ds, dt, ps, pt, *, stride, dw_act, pw_act,
         stride=stride, padding=padding, dw_scale=ds, dw_shift=dt,
         dw_act=dw_act, pw_scale=ps, pw_shift=pt, pw_act=pw_act,
     )
+
+
+# ---------------------------------------------------------------------------
+# the deterministic conformance grid: (impl, runner kwargs) per case.
+# Shared by test_conformance.py (differential assertions) and
+# benchmarks/bench_ratio.py (measured pallas-vs-ref ratio rows) so the
+# perf gate covers exactly the shapes the correctness suite covers.
+# ---------------------------------------------------------------------------
+
+GRID = [
+    ("mac_matmul_int8", dict(m=130, k=257, n=140)),
+    ("mac_matmul_int8", dict(m=64, k=96, n=32)),
+    # odd spatial/channel sizes, both paddings/strides, every epilogue act,
+    # the residual epilogue, and multi-tile Cin/Cout (> the 128 block)
+    ("fused_conv", dict(stride=1, padding="SAME", act="none")),
+    ("fused_conv", dict(stride=2, padding="VALID", act="relu")),
+    ("fused_conv", dict(stride=2, padding="SAME", act="relu6")),
+    ("fused_conv", dict(stride=1, padding="VALID", act="relu",
+                        residual=True)),
+    ("fused_conv", dict(stride=2, padding="SAME", act="relu",
+                        residual=True)),
+    ("fused_conv", dict(h=8, w_sp=9, cin=130, cout=140, stride=2,
+                        act="relu")),
+    ("depthwise_conv", dict(stride=1, padding="SAME", act="none")),
+    ("depthwise_conv", dict(stride=2, padding="VALID", act="relu")),
+    ("depthwise_conv", dict(h=10, w_sp=9, c=130, stride=2, act="relu6")),
+    ("sep_block", dict(stride=1, dw_act="relu", pw_act="relu")),
+    ("sep_block", dict(stride=2, dw_act="relu6", pw_act="none")),
+    ("sep_block", dict(h=8, w_sp=9, c=130, cout=140, stride=2)),
+    ("matmul_epilogue", dict(act="silu")),
+    ("matmul_epilogue", dict(act="gelu", dtype=jnp.bfloat16)),
+    ("matmul_epilogue", dict(m=130, k=257, n=140, act="relu",
+                             residual=True)),
+    ("matmul_epilogue", dict(act="none", residual=True, affine=False)),
+    ("pool", dict(op="max", k=2)),
+    ("pool", dict(op="max", k=3)),
+    ("pool", dict(op="avg", k=2)),
+    ("pool", dict(op="avg", k=3)),
+    ("pool", dict(op="max", k=3, dtype=jnp.int8)),
+    ("pool", dict(op="avg", k=2, dtype=jnp.int8)),
+    ("pool", dict(op="global_avg")),
+    ("pool", dict(op="global_avg", dtype=jnp.int8)),
+    ("pool", dict(h=16, w_sp=16, c=130, op="max", k=2)),
+    # LM-kernel grid (the LM class ladders' mac / add2i / zol rungs):
+    # decode-step GEMM (m=1), multi-tile / odd shapes, multi-block q,
+    # grouped-query layouts, the int8-KV dequant path, and multi-chunk
+    # vs single-chunk WKV scans
+    ("mac_matmul_int8", dict(m=1, k=256, n=128)),
+    ("residual_rmsnorm", dict()),
+    ("residual_rmsnorm", dict(rows=130, d=257)),
+    ("flash_attention", dict()),
+    ("flash_attention", dict(sq=200, dh=32)),
+    ("flash_attention", dict(b=2, kheads=1, g=4, dh=8)),
+    ("flash_attention", dict(int8_kv=True)),
+    ("flash_attention", dict(sq=130, kheads=3, g=1, int8_kv=True)),
+    ("wkv_chunk", dict()),
+    ("wkv_chunk", dict(s=64, chunk=16, heads=3, n=16)),
+    ("wkv_chunk", dict(b=2, s=48, chunk=48)),
+]
+
+
+def case_id(impl: str, case: dict) -> str:
+    """Stable human-readable id for one grid case (pytest ids and the
+    bench_ratio row names use the same spelling)."""
+    if not case:
+        return impl
+    parts = "-".join(f"{k}{getattr(v, '__name__', v)}"
+                     for k, v in case.items())
+    return f"{impl}-{parts}"

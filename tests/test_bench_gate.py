@@ -1,5 +1,9 @@
-"""The CI bench-gate: derived-metric parsing, gating directions, tolerance."""
+"""The CI bench-gate: derived-metric parsing, gating directions, tolerance,
+and the calibrated ratio lane end-to-end (a synthetically slowed kernel must
+fail the gate)."""
+import itertools
 import json
+import math
 
 import pytest
 
@@ -10,7 +14,18 @@ def test_parse_metrics_mixed_derived():
     row = {"name": "x", "us_per_call": 12.5,
            "derived": "tpu_speedup_v4=2.08;paper_band=True;note=abc"}
     m = gate.parse_metrics(row)
-    assert m == {"us_per_call": 12.5, "tpu_speedup_v4": 2.08}
+    # booleans parse to 1.0/0.0 (float("True") would have dropped them)
+    assert m == {"us_per_call": 12.5, "tpu_speedup_v4": 2.08,
+                 "paper_band": 1.0}
+    assert gate.parse_metrics({"name": "x", "derived": "paper_band=False"}
+                              ) == {"paper_band": 0.0}
+
+
+def test_parse_metrics_keeps_zero_us_per_call():
+    # presence, not truthiness: a legitimate 0.0 wall-clock survives
+    assert gate.parse_metrics({"name": "x", "us_per_call": 0.0,
+                               "derived": ""}) == {"us_per_call": 0.0}
+    assert gate.parse_metrics({"name": "x", "derived": ""}) == {}
 
 
 def test_gate_directions():
@@ -20,6 +35,76 @@ def test_gate_directions():
     assert gate.gate_direction("compile/x", "us_per_call") == 0
     # cycles keys only gate on cycles rows
     assert gate.gate_direction("fig12_energy/lenet5", "rv32_v0") == 0
+    # ladder levels above v9 gate too (\d+ not \d)
+    assert gate.gate_direction("fig11_cycles/lenet5", "rv32_v10") == -1
+    assert gate.gate_direction("fig11_cycles/lenet5", "tpu_v12") == -1
+    # paper_band is a gated flag metric
+    assert gate.gate_direction("fig11_cycles/lenet5", "paper_band") == +1
+
+
+def test_gate_direction_ratio_needs_noise_floor():
+    with_floor = {"pallas_vs_ref_ratio": 1.2, "noise_floor": 0.35}
+    assert gate.gate_direction("ratio/k", "pallas_vs_ref_ratio",
+                               with_floor) == +1
+    # the noise floor itself is metadata, never gated
+    assert gate.gate_direction("ratio/k", "noise_floor", with_floor) == 0
+    # ratio-named wall-clock metrics without a floor stay informational
+    assert gate.gate_direction("serving/x", "async_sync_ratio",
+                               {"async_sync_ratio": 1.4}) == 0
+    assert gate.gate_direction("serving/x", "cache_ratio") == 0
+
+
+def test_compare_ratio_rows_gate_at_per_row_noise_floor():
+    base = {"ratio/k": {"pallas_vs_ref_ratio": 1.0, "noise_floor": 0.40},
+            "serving/x": {"async_sync_ratio": 2.0}}
+    # -30% is within this row's 0.40 floor (> --tol 0.15): no failure
+    cur = {"ratio/k": {"pallas_vs_ref_ratio": 0.70, "noise_floor": 0.38},
+           "serving/x": {"async_sync_ratio": 0.5}}
+    deltas, _, _ = gate.compare(base, cur, tol=0.15)
+    assert not any(d["regressed"] for d in deltas)
+    r = next(d for d in deltas if d["metric"] == "pallas_vs_ref_ratio")
+    assert r["gated"] and r["tol"] == pytest.approx(0.40)
+    # the floorless serving ratio collapsed 4x and still only informs
+    s = next(d for d in deltas if d["metric"] == "async_sync_ratio")
+    assert not s["gated"]
+    # a 2x slowdown (-50%) exceeds any floor <= 0.5: fails
+    cur2 = {"ratio/k": {"pallas_vs_ref_ratio": 0.50, "noise_floor": 0.40},
+            "serving/x": {"async_sync_ratio": 2.0}}
+    deltas, _, _ = gate.compare(base, cur2, tol=0.15)
+    assert [d["metric"] for d in deltas if d["regressed"]] == [
+        "pallas_vs_ref_ratio"]
+
+
+def test_compare_paper_band_drop_regresses():
+    base = {"fig11_cycles/m": {"paper_band": 1.0}}
+    deltas, _, _ = gate.compare(
+        base, {"fig11_cycles/m": {"paper_band": 0.0}}, tol=0.15)
+    assert [d["metric"] for d in deltas if d["regressed"]] == ["paper_band"]
+    deltas, _, _ = gate.compare(
+        base, {"fig11_cycles/m": {"paper_band": 1.0}}, tol=0.15)
+    assert not any(d["regressed"] for d in deltas)
+
+
+def test_compare_zero_baseline_cannot_hide_growth():
+    """A gated lower-is-better metric growing from 0 regresses (delta +inf,
+    flagged leaving-zero); a higher-is-better one falling to 0 already
+    regressed at -100%; improvements from 0 never fail."""
+    base = {"fig11_cycles/m": {"rv32_v4": 0.0, "tpu_speedup_v4": 0.0}}
+    cur = {"fig11_cycles/m": {"rv32_v4": 50.0, "tpu_speedup_v4": 2.0}}
+    deltas, _, _ = gate.compare(base, cur, tol=0.15)
+    by = {d["metric"]: d for d in deltas}
+    assert by["rv32_v4"]["regressed"]
+    assert by["rv32_v4"]["delta"] == math.inf
+    assert by["rv32_v4"]["leaving_zero"]
+    # higher-is-better leaving zero upward is an improvement, not a failure
+    assert by["tpu_speedup_v4"]["leaving_zero"]
+    assert not by["tpu_speedup_v4"]["regressed"]
+    # 0 -> 0 is flat
+    deltas, _, _ = gate.compare(base, base, tol=0.15)
+    assert all(d["delta"] == 0.0 and not d["regressed"] for d in deltas)
+    # the markdown table renders the inf delta and names the zero exit
+    table = gate.markdown_table(list(by.values()), tol=0.15)
+    assert "+inf" in table and "leaving zero" in table
 
 
 def test_compare_flags_regressions_by_direction():
@@ -140,7 +225,7 @@ def test_missing_rows_fail_only_in_strict_mode(tmp_path):
     assert gate.main(args + ["--strict"]) == 1
 
 
-@pytest.mark.parametrize("module", ["serving", "cycles", "compile"])
+@pytest.mark.parametrize("module", ["serving", "cycles", "compile", "ratio"])
 def test_committed_baseline_covers_gated_modules(module):
     import pathlib
 
@@ -149,3 +234,100 @@ def test_committed_baseline_covers_gated_modules(module):
     assert path.exists(), "baseline snapshot missing; re-run benchmarks.run"
     rows = json.loads(path.read_text())
     assert rows, path
+
+
+def _baseline_rows(module):
+    import pathlib
+
+    repo_root = pathlib.Path(__file__).resolve().parents[1]
+    path = repo_root / "benchmarks" / "baseline" / f"BENCH_{module}.json"
+    return {r["name"]: gate.parse_metrics(r)
+            for r in json.loads(path.read_text())}
+
+
+def test_committed_baseline_gates_every_conformance_case():
+    """Every (impl, case) on the shared conformance grid has a gated
+    pallas_vs_ref_ratio row in the committed snapshot."""
+    import kernel_cases as kc
+
+    rows = _baseline_rows("ratio")
+    for impl, case in kc.GRID:
+        name = f"ratio/{kc.case_id(impl, case)}"
+        assert name in rows, f"no baseline ratio row for {name}"
+        m = rows[name]
+        assert gate.gate_direction(name, "pallas_vs_ref_ratio", m) == +1, (
+            f"{name} is not gated (missing noise_floor?): {m}")
+        assert 0 < m["noise_floor"] < 1
+
+
+def test_committed_baseline_paper_band_true_for_all_cnns():
+    """All six CNNs sit in the paper's speedup band, and the flag is a
+    *gated* metric (dropping out of band fails CI, it doesn't vanish)."""
+    rows = _baseline_rows("cycles")
+    banded = {name: m for name, m in rows.items() if "paper_band" in m}
+    assert len(banded) >= 6, f"paper_band rows missing: {sorted(rows)}"
+    for name, m in banded.items():
+        assert m["paper_band"] == 1.0, f"{name} out of the paper band"
+        assert gate.gate_direction(name, "paper_band", m) == +1
+
+
+# ---------------------------------------------------------------------------
+# the measured-ratio lane end-to-end: a synthetically slowed kernel fails
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _ratio_snapshot(directory, pallas_us, ref_us):
+    """Measure one grid case through bench_ratio's real row pipeline with a
+    scripted clock (each timed call advances fake time, the workload's own
+    runtime is irrelevant) and write it as a BENCH_ratio.json snapshot."""
+    from benchmarks import bench_ratio, calibrate, common
+
+    impl, case = "mac_matmul_int8", dict(m=64, k=96, n=32)
+    clock = _FakeClock()
+    durations = {"p": itertools.repeat(pallas_us), "r": itertools.repeat(ref_us)}
+    pallas_fn, ref_fn, args = bench_ratio.PAIRS[impl](0, **case)
+
+    def scripted(tag, fn):
+        def run(*a):
+            clock.t += next(durations[tag]) * 1e-6
+            return None
+        return run
+
+    rr = calibrate.ratio_vs_ref(
+        scripted("p", pallas_fn), scripted("r", ref_fn), *args,
+        clock=clock, jit=False, overhead_us=0.0, inner=1, reps=3,
+        cv_cutoff=1.0,
+    )
+    row = bench_ratio.row_for(impl, case, rr)
+    directory.mkdir(exist_ok=True)
+    common.write_bench_json("ratio", [row],
+                            path=str(directory / "BENCH_ratio.json"))
+    return row
+
+
+def test_synthetic_2x_kernel_slowdown_fails_ratio_gate(tmp_path, capsys):
+    """End to end: baseline measured at parity, current with the pallas
+    side 2x slower — the ratio lane must fail gate.main, and restoring
+    parity must pass."""
+    basedir, curdir = tmp_path / "base", tmp_path / "cur"
+    base_row = _ratio_snapshot(basedir, pallas_us=100.0, ref_us=100.0)
+    cur_row = _ratio_snapshot(curdir, pallas_us=200.0, ref_us=100.0)
+    assert "pallas_vs_ref_ratio=1;" in base_row[2]
+    assert "pallas_vs_ref_ratio=0.5;" in cur_row[2]
+
+    args = ["--baseline", str(basedir), "--current", str(curdir)]
+    assert gate.main(args) == 1
+    err = capsys.readouterr().err
+    assert "REGRESSION" in err and "pallas_vs_ref_ratio" in err
+
+    # parity (modulo less than the noise floor) passes
+    _ratio_snapshot(curdir, pallas_us=110.0, ref_us=100.0)
+    assert gate.main(args) == 0

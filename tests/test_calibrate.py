@@ -1,0 +1,154 @@
+"""Unit tests for the calibrated micro-benchmark runner's statistics.
+
+Every knob of ``benchmarks.calibrate.calibrated_time`` is injectable
+(``clock``, ``sync``, ``jit``, ``overhead_us``), so the measurement
+discipline — warmup-until-stable, min-of-K, overhead subtraction, CV
+cutoff with bounded re-runs — is tested deterministically under a fake
+clock: the measured callable advances the clock by a scripted duration
+per call, and the test asserts on the resulting Measurement.
+"""
+import itertools
+
+import pytest
+
+from benchmarks import calibrate
+
+
+class FakeClock:
+    """perf_counter stand-in: returns a settable time in seconds."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def scripted(clock: FakeClock, durations_us):
+    """A no-arg callable whose i-th invocation takes ``durations_us[i]``
+    microseconds of fake time."""
+    it = iter(durations_us)
+
+    def fn():
+        clock.t += next(it) * 1e-6
+
+    return fn
+
+
+def timed(durations_us, **kwargs):
+    clock = FakeClock()
+    fn = scripted(clock, durations_us)
+    return calibrate.calibrated_time(
+        fn, clock=clock, jit=False, overhead_us=kwargs.pop("overhead_us", 0.0),
+        **kwargs,
+    )
+
+
+def test_warmup_stops_when_consecutive_timings_agree():
+    # 100 (compile-ish), 40, 20 (not within 25% of 40), 20 (exactly 20
+    # again -> converged) -- then the rep block reads five 10us calls
+    m = timed([100, 40, 20, 20] + [10] * 5, inner=1, reps=5)
+    assert m.warmup_iters == 4
+    assert m.us_per_call == pytest.approx(10.0, rel=1e-6)
+    assert m.stable and m.reruns == 0
+
+
+def test_warmup_bounded_by_warmup_max():
+    # alternating timings never satisfy the rtol criterion: warmup burns
+    # exactly warmup_max calls, then measurement proceeds anyway
+    m = timed(itertools.cycle([10, 100]), inner=1, reps=3, warmup_max=8,
+              cv_cutoff=2.0)
+    assert m.warmup_iters == 8
+
+
+def test_min_of_k_reps_is_the_estimate():
+    m = timed([50, 50, 50] + [30, 10, 20, 25, 30], inner=1, reps=5,
+              cv_cutoff=1.0)
+    assert m.us_per_call == pytest.approx(10.0, rel=1e-6)
+    assert m.reps_us == pytest.approx((30, 10, 20, 25, 30), rel=1e-6)
+
+
+def test_inner_loop_averages_back_to_back_calls():
+    # each rep times `inner` consecutive calls and reports the mean
+    m = timed([10, 10, 10] + [12, 12, 12] + [9, 9, 9], inner=3, reps=2,
+              cv_cutoff=1.0)
+    assert m.inner == 3
+    assert m.us_per_call == pytest.approx(9.0, rel=1e-6)
+
+
+def test_inner_auto_sizes_toward_target_rep_time():
+    # steady-state estimate is 100us; a 1000us rep target -> inner=10
+    m = timed(itertools.repeat(100), reps=2, target_rep_us=1000.0,
+              cv_cutoff=1.0)
+    assert m.inner == 10
+    # a slow fn (estimate >= target) gets inner=1, never 0
+    m = timed(itertools.repeat(5000), reps=2, target_rep_us=1000.0,
+              cv_cutoff=1.0)
+    assert m.inner == 1
+
+
+def test_noisy_block_reruns_then_settles():
+    noisy = [10, 100, 10]          # cv ~ 1.06 > cutoff
+    quiet = [10, 10, 10]           # cv = 0
+    m = timed([50, 50, 50] + noisy + quiet, inner=1, reps=3, cv_cutoff=0.10,
+              max_reruns=2)
+    assert m.reruns == 1 and m.stable
+    assert m.cv == pytest.approx(0.0, abs=1e-9)
+
+
+def test_rerun_budget_is_bounded_and_instability_reported():
+    m = timed([50, 50, 50] + [10, 100, 10] * 3, inner=1, reps=3,
+              cv_cutoff=0.10, max_reruns=2)
+    assert m.reruns == 2 and not m.stable
+    assert m.cv > 0.10
+
+
+def test_overhead_subtracted_and_floored():
+    m = timed([50, 50, 50] + [10, 10, 10], inner=1, reps=3, cv_cutoff=1.0,
+              overhead_us=4.0)
+    assert m.us_per_call == pytest.approx(6.0, rel=1e-6)
+    # overhead larger than the measurement floors at MIN_US, never 0 or
+    # negative (a 0.0 baseline would be ungateable)
+    m = timed([50, 50, 50] + [10, 10, 10], inner=1, reps=3, cv_cutoff=1.0,
+              overhead_us=25.0)
+    assert m.us_per_call == calibrate.MIN_US > 0
+
+
+def test_ratio_vs_ref_fake_clock_and_noise_floor():
+    clock = FakeClock()
+    slow = scripted(clock, itertools.repeat(200))
+    fast = scripted(clock, itertools.repeat(100))
+    rr = calibrate.ratio_vs_ref(
+        slow, fast, clock=clock, jit=False, overhead_us=0.0, inner=1,
+        reps=3, cv_cutoff=1.0,
+    )
+    assert rr.ratio == pytest.approx(0.5, rel=1e-5)
+    # zero CV on both sides -> the floor applies
+    assert rr.noise_floor == calibrate.RATIO_NOISE_FLOOR
+    assert rr.pallas.us_per_call == pytest.approx(200.0, rel=1e-6)
+    assert rr.ref.us_per_call == pytest.approx(100.0, rel=1e-6)
+
+
+def test_ratio_noise_floor_capped():
+    # pathologically noisy measurements widen the floor but never past the
+    # ceiling, so a 2x structural regression always gates
+    clock = FakeClock()
+    noisy = scripted(clock, itertools.cycle([10, 500, 10]))
+    steady = scripted(clock, itertools.repeat(100))
+    rr = calibrate.ratio_vs_ref(
+        noisy, steady, clock=clock, jit=False, overhead_us=0.0, inner=1,
+        reps=3, cv_cutoff=0.05, max_reruns=0,
+    )
+    assert rr.noise_floor <= calibrate.RATIO_NOISE_CEIL < 1.0
+
+
+def test_real_jit_path_measures_something():
+    # one non-fake measurement: the default jit path produces a positive,
+    # finite, overhead-subtracted number with full provenance
+    import jax.numpy as jnp
+
+    x = jnp.ones((64, 64))
+    m = calibrate.calibrated_time(lambda a: a @ a, x, reps=2, warmup_max=3,
+                                  max_inner=4, cv_cutoff=5.0, max_reruns=0)
+    assert 0 < m.us_per_call < 1e7
+    assert m.overhead_us >= 0 and m.inner >= 1 and len(m.reps_us) == 2

@@ -313,10 +313,12 @@ def test_lm_sigkill_mid_wave_replays_full_prompts():
             assert len(results) == 8
             assert all(r.error is None for r in results)
             assert all(len(r.generated) == 6 for r in results)
+            # converge BEFORE reading restart counters: the wave can finish
+            # (via failover) before the health loop records the recovery
+            assert await _converged(sup, 2)
             agg = sup.metrics()["aggregate"]
             assert agg["failovers"] >= 1
             assert agg["worker_process_restarts"] >= 1
-            assert await _converged(sup, 2)
     asyncio.run(main())
 
 

@@ -1,0 +1,181 @@
+"""Tile-autotuning tests: buckets, TuneTable semantics, persistence, the
+kernels' knob plumbing, and the marvel.compile bake.
+
+The contract under test (repro/kernels/tuning.py): a TuneTable is an
+immutable, hashable (kernel, shape-bucket) -> tile-config mapping; the
+kernel wrappers in kernels/ops.py consult the *ambient* table at trace
+time via tuning.lookup, so ``TuneTable.bind`` (used by marvel.compile)
+bakes the configs into the jaxpr; tuned tiles change scheduling, never
+numerics; and a missing/foreign config degrades to the kernel DEFAULTS.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import kernel_cases as kc
+from repro.core import dispatch
+from repro.kernels import ops, tuning
+
+
+def test_shape_bucket_pow2_floor8():
+    assert tuning.shape_bucket(1, 7, 8, 9) == (8, 8, 8, 16)
+    assert tuning.shape_bucket(130, 257) == (256, 512)
+    assert tuning.shape_bucket(128) == (128,)
+    # degenerate dims never match a tuned bucket
+    assert tuning.shape_bucket(0, -3) == (0, 0)
+
+
+def test_tunetable_filters_parses_and_hashes():
+    t = tuning.TuneTable({
+        "fused_conv": {"16x16x256x256": {"bm": 64, "bogus_knob": 7}},
+        "not_a_kernel": {"8x8": {"bm": 64}},
+        "depthwise_conv": {(16, 16, 256): {"bm": 64, "bc": 256}},
+    }, backend="cpu")
+    # unknown kernels dropped, unknown knobs filtered, str/tuple buckets OK
+    assert set(t) == {"fused_conv", "depthwise_conv"}
+    assert t.get_cfg("fused_conv", (13, 11, 130, 140)) == {"bm": 64}
+    assert t.get_cfg("depthwise_conv", (10, 9, 130)) == {"bm": 64, "bc": 256}
+    # miss -> {} (unseen bucket, unseen kernel)
+    assert t.get_cfg("fused_conv", (5, 5, 5, 5)) == {}
+    assert t.get_cfg("flash_attention", (64, 64, 16)) == {}
+    assert t.n_configs == 2
+    # hashable (keys compile caches) and value-equal across spellings
+    t2 = tuning.TuneTable(t.as_json()["configs"], backend="cpu")
+    assert t == t2 and hash(t) == hash(t2) and len({t, t2}) == 1
+
+
+def test_lookup_overlays_ambient_table_on_defaults():
+    dims = (13, 11, 130, 140)
+    assert tuning.lookup("fused_conv", dims) == tuning.DEFAULTS["fused_conv"]
+    t = tuning.TuneTable(
+        {"fused_conv": {tuning.shape_bucket(*dims): {"bm": 64}}})
+    with dispatch.use_tuning(t):
+        cfg = tuning.lookup("fused_conv", dims)
+        assert cfg == {"bm": 64, "bn": 128, "bk": 128}
+        # other kernels / other buckets keep their defaults
+        assert (tuning.lookup("fused_conv", (5, 5, 5, 5))
+                == tuning.DEFAULTS["fused_conv"])
+    # context manager restores the previous ambient state
+    assert dispatch.current_tuning() is None
+
+
+def test_save_load_roundtrip_env_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("MARVEL_TUNED_DIR", str(tmp_path))
+    t = tuning.TuneTable(
+        {"matmul_epilogue": {"256x512x256": {"bm": 64, "bk": 256}}},
+        backend="cpu")
+    path = tuning.save_tuned(t)
+    assert json.load(open(path))["backend"] == "cpu"
+    assert tuning.load_tuned("cpu") == t
+    # no file for this backend -> empty table, defaults apply
+    assert tuning.load_tuned("tpu").n_configs == 0
+
+
+@pytest.mark.parametrize("kernel", sorted(tuning.DEFAULTS))
+def test_tuned_tiles_change_scheduling_not_numerics(kernel):
+    """Every tunable kernel, driven through its ops.py wrapper with a
+    non-default config ambient, matches its default-config output."""
+    if kernel == "fused_conv":
+        x, w, b, s, t = kc.conv_case(0, 13, 11, 5, 9, 3)
+        dims = tuning.conv_dims(x.shape, w.shape)
+        cfg = {"bm": 64, "bn": 256, "bk": 64}
+        run = lambda: ops._pallas_fused_conv(  # noqa: E731
+            x, w, b, stride=1, padding="SAME", groups=1, act="relu",
+            scale=s, shift=t)
+    elif kernel == "depthwise_conv":
+        x, w, b, s, t = kc.dw_case(1, 13, 11, 5)
+        dims = tuning.dw_dims(x.shape)
+        cfg = {"bm": 64, "bc": 256}
+        run = lambda: ops._pallas_depthwise_conv(  # noqa: E731
+            x, w, b, stride=1, padding="SAME", act="relu", scale=s, shift=t)
+    elif kernel == "sep_block":
+        x, wd, wp, ds, dt, ps, pt = kc.sep_case(2, 13, 11, 5, 9)
+        dims = tuning.sep_dims(x.shape, 9)
+        cfg = {"bm": 64, "bn": 256, "bc": 64}
+        run = lambda: ops._pallas_sep_block(  # noqa: E731
+            x, wd, wp, stride=1, dw_scale=ds, dw_shift=dt, dw_act="relu",
+            pw_scale=ps, pw_shift=pt, pw_act="none")
+    elif kernel == "matmul_epilogue":
+        x, w, b, _ = kc.matmul_case(3, 37, 64, 48)
+        dims = tuning.gemm_dims(x.shape, w.shape)
+        cfg = {"bm": 64, "bn": 64, "bk": 32}
+        run = lambda: ops._pallas_matmul_epilogue(  # noqa: E731
+            x, w, b, act="relu")
+    else:  # flash_attention
+        q, k, v, _, _ = kc.attn_case(4, 1, 64, 2, 2, 16)
+        dims = tuning.attn_dims(q.shape, k.shape)
+        cfg = {"bq": 32, "bk": 32}
+        run = lambda: ops._pallas_flash_attention(  # noqa: E731
+            q, k, v, causal=True)
+    want = run()
+    table = tuning.TuneTable({kernel: {tuning.shape_bucket(*dims): cfg}})
+    with dispatch.use_tuning(table):
+        assert tuning.lookup(kernel, dims) == {
+            **tuning.DEFAULTS[kernel], **cfg}
+        got = run()
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_marvel_compile_bakes_tuned_table(monkeypatch):
+    """The tuned table is ambient at trace time (baked into the jaxpr) and
+    rides the MarvelProgram: visible in the report, zero recompiles after
+    the precompile bucket is built."""
+    from repro import marvel
+
+    seen = []
+    orig = tuning.lookup
+
+    def spy(kernel, dims):
+        seen.append(dispatch.current_tuning())
+        return orig(kernel, dims)
+
+    monkeypatch.setattr(tuning, "lookup", spy)
+
+    x, w, b, _ = kc.matmul_case(0, 64, 64, 64)
+    tt = tuning.TuneTable(
+        {"matmul_epilogue": {"64x64x64": {"bm": 64, "bn": 64, "bk": 32}}},
+        backend="cpu")
+    prog = marvel.compile(
+        lambda a: ops._pallas_matmul_epilogue(a, w, b, act="relu"),
+        x, backend="ref", tuned=tt, do_rewrite=False,
+    )
+    assert prog.tuned is tt
+    assert prog.tuned_configs == {
+        "matmul_epilogue": {"64x64x64": {"bm": 64, "bn": 64, "bk": 32}}}
+    assert prog.report.tuned_configs == prog.tuned_configs
+    assert "tuned tiles: 1 config(s)" in prog.report.summary()
+    assert "TuneTable(1 configs" in prog.summary()
+    # the table was ambient while the executable traced
+    assert any(t is tt for t in seen)
+    # steady state: same-shape calls reuse the AOT executable
+    prog(x)
+    prog(x)
+    assert prog.cache_misses == 1 and prog.cache_hits == 2
+    np.testing.assert_allclose(
+        np.asarray(prog(x)),
+        np.asarray(ops._pallas_matmul_epilogue(x, w, b, act="relu")),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_marvel_compile_tuned_auto_and_off(tmp_path, monkeypatch):
+    from repro import marvel
+
+    monkeypatch.setenv("MARVEL_TUNED_DIR", str(tmp_path))
+    t = tuning.TuneTable(
+        {"matmul_epilogue": {"64x64x64": {"bm": 64}}},
+        backend=jax.default_backend())
+    tuning.save_tuned(t)
+    x = jnp.ones((8, 8))
+    fn = lambda a: jnp.tanh(a @ a.T)  # noqa: E731
+    prog = marvel.compile(fn, x, do_rewrite=False, precompile=False)
+    assert prog.tuned == t  # tuned="auto" picked up the committed file
+    off = marvel.compile(fn, x, tuned="off", do_rewrite=False,
+                         precompile=False)
+    assert off.tuned.n_configs == 0 and off.tuned_configs == {}
+    with pytest.raises(ValueError, match="tuned"):
+        marvel.compile(fn, x, tuned=42, do_rewrite=False, precompile=False)
